@@ -1,0 +1,48 @@
+"""Shared benchmark utilities. Every benchmark prints
+``name,us_per_call,derived`` CSV rows (scaffold contract)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.scheduler import analyze_run
+from repro.core.walk_engine import run_walks, EngineConfig
+
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    """Median wall time of fn(*args) with block_until_ready."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def bench_walk(g, starts, spec, cfg: EngineConfig, seed=0, repeats=3):
+    """Returns (median_time_s, RunAnalysis)."""
+    import jax
+    from repro.core.walk_engine import make_engine
+    run = make_engine(spec, cfg)
+    sv = np.asarray(starts, np.int32)
+    out = run(g, sv, seed, num_queries=sv.shape[0])
+    jax.block_until_ready(out.stats.steps)   # compile + warm
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = run(g, sv, seed, num_queries=sv.shape[0])
+        jax.block_until_ready(out.stats.steps)
+        ts.append(time.perf_counter() - t0)
+    dt = float(np.median(ts))
+    return dt, analyze_run(out.stats, dt)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,60 @@
+"""Fig. 11 analogue: breakdown of the two optimizations.
+
+Paper configuration axes -> TPU engine axes:
+  baseline       = static scheduling + staged (unfused) step
+  +scheduler     = zero-bubble refill, staged step
+  +async         = static scheduling, fused Pallas walk-step kernel
+  full           = zero-bubble + fused kernel
+
+On CPU the fused-kernel axis measures fusion, not DMA overlap (interpret
+mode runs the kernel body in Python), so the wall-clock column for the
+kernel axis is not meaningful here — the *scheduling* axis and the
+occupancy/superstep columns are the CPU-measurable reproduction; the
+kernel's TPU value shows up in the §Roofline bytes analysis instead."""
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import bench_walk, emit
+from repro.core.samplers import SamplerSpec
+from repro.core.walk_engine import EngineConfig
+from repro.graph import make_dataset
+
+CFG = EngineConfig(num_slots=1024, max_hops=80, record_paths=False)
+
+MODES = {
+    "baseline": dict(mode="static", step_impl="jnp"),
+    "+scheduler": dict(mode="zero_bubble", step_impl="jnp"),
+    "+async": dict(mode="static", step_impl="pallas"),
+    "full": dict(mode="zero_bubble", step_impl="pallas"),
+}
+
+
+def run(quick: bool = False):
+    datasets = ["WG"] if quick else ["WG", "CP", "AS", "LJ"]
+    queries = 2000 if quick else 8000
+    slots = 256 if quick else 1024
+    results = {}
+    for ds in datasets:
+        g = make_dataset(ds)
+        starts = np.random.default_rng(3).integers(0, g.num_vertices, queries)
+        spec = SamplerSpec(kind="uniform")
+        base_ss = None
+        for label, kw in MODES.items():
+            if quick and kw["step_impl"] == "pallas":
+                continue
+            cfg = dataclasses.replace(CFG, num_slots=slots, **kw)
+            dt, a = bench_walk(g, starts, spec, cfg, repeats=2)
+            if label == "baseline":
+                base_ss = a.supersteps
+            sched_speedup = base_ss / a.supersteps if base_ss else 1.0
+            emit(f"fig11_{ds}_{label.replace('+','plus_')}", dt * 1e6,
+                 f"msteps={a.msteps_per_s:.3f};supersteps={a.supersteps};"
+                 f"occ={a.occupancy:.3f};superstep_speedup="
+                 f"{sched_speedup:.2f}x")
+            results[(ds, label)] = a
+    return results
+
+
+if __name__ == "__main__":
+    run()

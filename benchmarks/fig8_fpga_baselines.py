@@ -1,0 +1,50 @@
+"""Fig. 8 analogue: RidgeWalker vs the statically-scheduled baseline
+(FastRW/LightRW-style bulk-synchronous execution) per GRW algorithm.
+
+The paper compares against FPGA accelerators we cannot run; the
+*algorithmic* baseline they embody — static lane binding + bulk batches —
+is implemented in our engine (mode="static"), so the speedup column is
+the scheduling contribution measured under identical compute.
+"""
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import bench_walk, emit
+from repro.core.samplers import SamplerSpec
+from repro.core.walk_engine import EngineConfig
+from repro.graph import make_dataset
+
+DATASETS = ["WG", "CP", "AS", "LJ"]
+CFG = EngineConfig(num_slots=1024, max_hops=80, record_paths=False)
+
+
+def run(quick: bool = False):
+    datasets = DATASETS[:2] if quick else DATASETS
+    queries = 2000 if quick else 8000
+    cfg = dataclasses.replace(CFG, num_slots=256 if quick else 1024)
+    rows = []
+    for name in datasets:
+        for algo, spec, kwargs in [
+            ("deepwalk", SamplerSpec(kind="alias"),
+             dict(weighted=True, with_alias=True)),
+            ("ppr", SamplerSpec(kind="uniform", stop_prob=0.15), {}),
+            ("urw", SamplerSpec(kind="uniform"), {}),
+        ]:
+            g = make_dataset(name, **kwargs)
+            starts = np.random.default_rng(0).integers(
+                0, g.num_vertices, queries)
+            dt_s, a_s = bench_walk(g, starts, spec,
+                                   dataclasses.replace(cfg, mode="static"))
+            dt_z, a_z = bench_walk(g, starts, spec, cfg)
+            speedup = dt_s / dt_z
+            emit(f"fig8_{algo}_{name}", dt_z * 1e6,
+                 f"msteps={a_z.msteps_per_s:.3f};static_msteps="
+                 f"{a_s.msteps_per_s:.3f};sched_speedup={speedup:.2f}x;"
+                 f"occ={a_z.occupancy:.2f};occ_static={a_s.occupancy:.2f}")
+            rows.append((name, algo, speedup))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

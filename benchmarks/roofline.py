@@ -1,0 +1,65 @@
+"""§Roofline: read the dry-run artifacts and print the per-cell
+compute/memory/collective terms + dominant bottleneck (deliverable g).
+
+Also derives MODEL_FLOPS = 6·N·D (dense LM) / 6·N_active·D (MoE) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPS."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+
+
+def model_flops_per_step(arch: str, shape: str) -> float:
+    mod = get_arch(arch)
+    if mod.FAMILY != "lm":
+        return 0.0
+    cfg = mod.FULL
+    dims = mod.SHAPES[shape].dims
+    kind = mod.SHAPES[shape].kind
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = dims["seq_len"] * dims["global_batch"]
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = dims["seq_len"] * dims["global_batch"]
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * dims["global_batch"]  # decode: 1 token/seq
+
+
+def load_cells(out_dir="experiments/dryrun", mesh="single"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+        d = json.load(open(f))
+        if d.get("status") == "ok":
+            cells.append(d)
+    return cells
+
+
+def run(quick: bool = False, mesh: str = "single"):
+    cells = load_cells(mesh=mesh)
+    if not cells:
+        emit("roofline", 0.0, "NO_DRYRUN_ARTIFACTS(run repro.launch.dryrun)")
+        return []
+    rows = []
+    for d in cells:
+        r = d["roofline"]
+        mf = model_flops_per_step(d["arch"], d["shape"])
+        hlo_f = d["cost_analysis"]["flops"] * d.get("chips", 256)
+        useful = mf / hlo_f if (mf and hlo_f) else float("nan")
+        bound = r["bound_s"]
+        frac = {k: r[k] / bound if bound else 0.0
+                for k in ("compute_s", "memory_s", "collective_s")}
+        emit(f"roofline_{mesh}_{d['arch']}__{d['shape']}",
+             bound * 1e6,
+             f"dom={r['dominant']};compute={r['compute_s']:.3e};"
+             f"memory={r['memory_s']:.3e};coll={r['collective_s']:.3e};"
+             f"useful_ratio={useful:.3f}")
+        rows.append(dict(arch=d["arch"], shape=d["shape"], **r,
+                         useful_ratio=useful))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

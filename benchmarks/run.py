@@ -1,0 +1,53 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick suite
+  PYTHONPATH=src python -m benchmarks.run --full     # full sizes
+
+Fig. 8  — vs statically-scheduled FPGA-baseline analogue
+Fig. 9  — per-algorithm throughput across datasets
+Fig. 10 — RMAT balanced vs Graph500 skew robustness
+Fig. 11 — scheduler/async ablation breakdown
+Table III — channel (device) scaling of the distributed engine
+Table IV  — per-kernel on-chip budgets (TPU analogue of LUT/BRAM)
+Roofline  — dry-run derived compute/memory/collective terms (§Roofline)
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (fig8_fpga_baselines, fig9_throughput,
+                            fig10_rmat_skew, fig11_ablation, table3_scaling,
+                            table4_kernels, roofline)
+    suites = {
+        "fig8": fig8_fpga_baselines.run,
+        "fig9": fig9_throughput.run,
+        "fig10": fig10_rmat_skew.run,
+        "fig11": fig11_ablation.run,
+        "table3": table3_scaling.run,
+        "table4": table4_kernels.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn(quick=quick)
+        except Exception as e:  # a failing suite must not hide the others
+            print(f"{name}_SUITE_ERROR,0.0,{type(e).__name__}:{e}",
+                  flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Table III analogue: throughput scaling with memory channels.
+
+The paper scales across FPGAs with 4/32 memory channels (U250 ->
+U55C); the TPU analogue scales the distributed engine across host
+devices (each device = one channel's row-pointer + neighbor shard).
+Run per device count in a subprocess (device count locks at jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+SNIPPET = r"""
+import time, numpy as np, jax, json
+from repro.graph import make_dataset, partition_graph
+from repro.core.samplers import SamplerSpec
+from repro.core.distributed import DistConfig, run_distributed
+
+N = {N}
+g = make_dataset("WG", scale_override={scale})
+pg = partition_graph(g, N)
+starts = np.random.default_rng(0).integers(0, g.num_vertices, {queries}).astype(np.int32)
+spec = SamplerSpec(kind="uniform")
+cfg = DistConfig(slots_per_device=max(2048 // N, 64), max_hops=80,
+                 record_paths=False)
+logs, stats = run_distributed(pg, starts, spec, cfg)   # compile+warm
+jax.block_until_ready(stats.steps)
+t0 = time.time()
+logs, stats = run_distributed(pg, starts, spec, cfg)
+jax.block_until_ready(stats.steps)
+dt = time.time() - t0
+steps = int(np.asarray(stats.steps).sum())
+waits = int(np.asarray(stats.route_waits).sum())
+drops = int(np.asarray(stats.drops).sum())
+print(json.dumps(dict(N=N, dt=dt, steps=steps, msteps=steps/dt/1e6,
+                      waits=waits, drops=drops)))
+"""
+
+
+def run(quick: bool = False):
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    counts = [1, 2, 4] if quick else [1, 2, 4, 8]
+    results = {}
+    for n in counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={max(n,2)}"
+        env["PYTHONPATH"] = src
+        code = SNIPPET.format(N=n, scale=11 if quick else 12,
+                              queries=1500 if quick else 4000)
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=900)
+        if r.returncode != 0:
+            emit(f"table3_ch{n}", 0.0, f"ERROR:{r.stderr[-120:]}")
+            continue
+        d = json.loads(r.stdout.strip().splitlines()[-1])
+        results[n] = d
+        emit(f"table3_ch{n}", d["dt"] * 1e6,
+             f"msteps={d['msteps']:.3f};waits={d['waits']};"
+             f"drops={d['drops']}")
+    if 1 in results and max(results) > 1:
+        top = max(results)
+        eff = (results[top]["msteps"] / results[1]["msteps"]) / top
+        emit("table3_scaling_eff", 0.0,
+             f"devices={top};parallel_efficiency={eff:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Distributed walk service across 8 emulated devices (channels).
+
+Shows the full §IV dataflow: vertex-partitioned graph, per-hop butterfly
+routing (all_to_all), zero-bubble local refill, streaming path write-back
+— and verifies the result is bit-identical to the single-device engine.
+
+  PYTHONPATH=src python examples/distributed_walks.py
+  (sets XLA_FLAGS itself; run in a fresh process)
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core import EngineConfig
+from repro.core.distributed import (DistConfig, assemble_paths,
+                                    run_distributed)
+from repro.core.samplers import SamplerSpec
+from repro.core.walk_engine import run_walks
+from repro.graph import make_dataset, partition_graph
+
+N_DEV = 8
+g = make_dataset("CP", scale_override=12)
+pg = partition_graph(g, N_DEV)
+print(f"graph |V|={g.num_vertices} |E|={g.num_edges}, "
+      f"partitioned over {N_DEV} channels")
+
+starts = np.random.default_rng(0).integers(0, g.num_vertices, 2000)\
+    .astype(np.int32)
+spec = SamplerSpec(kind="uniform")
+MAXH = 40
+
+t0 = time.time()
+logs, stats = run_distributed(
+    pg, starts, spec,
+    DistConfig(slots_per_device=128, max_hops=MAXH, log_capacity=1 << 17))
+jax.block_until_ready(logs.cursor)
+dt = time.time() - t0
+steps = int(np.asarray(stats.steps).sum())
+print(f"distributed: {steps} steps in {dt:.1f}s; per-device steps = "
+      f"{np.asarray(stats.steps).ravel().tolist()}")
+print(f"route waits={int(np.asarray(stats.route_waits).sum())} "
+      f"drops={int(np.asarray(stats.drops).sum())} (must be 0)")
+
+dp, dl = assemble_paths(logs, starts, MAXH)
+ref = run_walks(g, starts, spec, EngineConfig(num_slots=512, max_hops=MAXH),
+                seed=0)
+rp, rl = ref.as_numpy()
+print("bit-identical to single-device engine:",
+      bool((dp == rp).all() and (dl == rl).all()))

@@ -1,0 +1,30 @@
+"""LM serving with zero-bubble continuous batching (beyond-paper reuse of
+the scheduler: decode lanes = walker lanes, requests = queries).
+
+  PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.launch.serve import continuous_batching_loop
+from repro.models import transformer as tfm
+
+cfg = dataclasses.replace(get_arch("deepseek_7b").SMOKE, dtype=jnp.float32)
+params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+
+# variable-priority request stream; all lanes stay busy until drain
+reqs = [jnp.asarray(rng.integers(0, cfg.vocab, 8), jnp.int32)
+        for _ in range(24)]
+t0 = time.time()
+results, stats = continuous_batching_loop(params, cfg, reqs, num_slots=6,
+                                          max_new=12, cache_cap=24)
+print(f"served {stats.completed} requests in {time.time()-t0:.1f}s, "
+      f"{stats.decode_steps} batched decode steps, "
+      f"bubble_ratio={stats.bubble_ratio:.3f}")
+print("sample generation:", results[0])

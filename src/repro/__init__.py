@@ -1,0 +1,3 @@
+"""repro: RidgeWalker (perfectly pipelined graph random walks) as a
+multi-pod JAX framework — walk engine, model zoo, kernels, launchers."""
+__version__ = "0.1.0"

@@ -1,0 +1,97 @@
+"""Sharded checkpointing with atomic commit, async write, and elastic
+restore (re-shard to a different device count / mesh on load).
+
+Format: one directory per step —
+  step_000123.tmp/ -> (atomic rename) -> step_000123/
+    manifest.json   — pytree structure, shapes, dtypes
+    arr_<k>.npy     — one file per leaf (host-gathered)
+
+Restore never requires the original mesh: leaves are loaded host-side and
+``jax.device_put`` re-shards to whatever sharding the caller provides —
+this is the elastic-scaling path (pod loss -> restart at fewer devices).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, blocking: bool = True):
+    """Write a checkpoint. Atomic: readers never see partial state."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    paths, leaves, _ = _flatten_with_paths(tree)
+
+    def _write():
+        manifest = {"step": step, "leaves": []}
+        for i, (p, leaf) in enumerate(zip(paths, leaves)):
+            arr = np.asarray(jax.device_get(leaf))
+            dtype = str(arr.dtype)
+            if arr.dtype.kind not in "biufc":
+                # ml_dtypes (bf16/fp8) aren't numpy-native: store as f32
+                # (exact for bf16/fp8) and cast back on restore.
+                arr = arr.astype(np.float32)
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
+            manifest["leaves"].append(
+                {"path": p, "file": f"arr_{i}.npy",
+                 "shape": list(arr.shape), "dtype": dtype})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None):
+    """Load into the structure of ``like``; re-shard with ``shardings``
+    (a matching pytree of Sharding or None for host arrays)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    _, leaves, treedef = _flatten_with_paths(like)
+    assert len(leaves) == len(manifest["leaves"]), "structure mismatch"
+    loaded = []
+    for m, ref in zip(manifest["leaves"], leaves):
+        arr = np.load(os.path.join(d, m["file"]))
+        if str(arr.dtype) != m["dtype"]:
+            arr = arr.astype(np.asarray(jax.device_get(ref)).dtype)
+        loaded.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, loaded)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x,
+            tree, shardings)
+    return tree

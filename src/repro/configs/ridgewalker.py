@@ -1,0 +1,17 @@
+"""The paper's own workload configs: GRW algorithms x graph datasets
+(Table II / §VIII-A4). Used by benchmarks and the bonus walk dry-run."""
+from repro.core.samplers import SamplerSpec
+from repro.core.walk_engine import EngineConfig
+
+FAMILY = "walk"
+ALGORITHMS = {
+    "urw": SamplerSpec(kind="uniform"),
+    "ppr": SamplerSpec(kind="uniform", stop_prob=0.15),
+    "deepwalk": SamplerSpec(kind="alias"),
+    "node2vec": SamplerSpec(kind="rejection_n2v", p=2.0, q=0.5),
+    "node2vec_w": SamplerSpec(kind="reservoir_n2v", p=2.0, q=0.5),
+}
+QUERY_LENGTH = 80          # paper §VIII-A4
+ENGINE = EngineConfig(num_slots=4096, max_hops=QUERY_LENGTH,
+                      record_paths=False)
+DATASETS = ("WG", "CP", "AS", "LJ", "AB", "UK")

@@ -1,0 +1,16 @@
+"""RidgeWalker core: stateless task decomposition, samplers, zero-bubble
+slot-pool engine, queuing-theoretic scheduler, distributed routing."""
+from repro.core.samplers import SamplerSpec, get_sampler, edge_exists
+from repro.core.tasks import (WalkerSlots, QueryQueue, WalkStats, WalkResult,
+                              empty_slots, make_queue)
+from repro.core.walk_engine import EngineConfig, make_engine, run_walks
+from repro.core import scheduler
+from repro.core import walks
+
+__all__ = [
+    "SamplerSpec", "get_sampler", "edge_exists",
+    "WalkerSlots", "QueryQueue", "WalkStats", "WalkResult",
+    "empty_slots", "make_queue",
+    "EngineConfig", "make_engine", "run_walks",
+    "scheduler", "walks",
+]

@@ -1,0 +1,310 @@
+"""Distributed walk engine: N asynchronous "pipelines" = N devices
+(paper §IV: 16 pipelines over 32 HBM channels → here, the device mesh).
+
+The full run loop lives inside a single ``shard_map`` over the ``ch``
+(channel) axis: per superstep each device (a) executes one hop for every
+live task whose current vertex it owns, (b) terminates finished walks and
+refills freed lanes from its local query shard (zero-bubble scheduling),
+(c) routes every live task to the owner of its new vertex with one
+``all_to_all`` (the butterfly, `router.py`).
+
+Because tasks are stateless and their randomness derives from
+(seed, query_id, hop), the distributed engine produces *bit-identical
+walks* to the single-device engine — the strongest possible correctness
+check of the paper's claim that out-of-order, cross-pipeline execution
+does not alter the sampled distribution (§V-A).  Tests assert this.
+
+Path write-back uses the paper's streaming-window scheme (§IV-B): each
+device appends (query_id, hop, vertex) records to a device-resident
+emission log, flushed to host memory after the run and scattered into
+per-query paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng as task_rng
+from repro.core import router
+from repro.core.samplers import SamplerSpec, get_sampler, SALT_STOP
+from repro.core.scheduler import routing_capacity
+from repro.core.tasks import WalkerSlots, WalkStats, zero_stats
+from repro.graph.partition import PartitionedGraph, owner_of
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    slots_per_device: int = 256    # W_loc — target live tasks per device
+    max_hops: int = 80
+    capacity_margin: float = 2.0   # Theorem VI.1 margin on bucket capacity
+    retention_factor: float = 2.0  # retention region = factor × W_loc
+    log_capacity: int = 1 << 16    # emission-log entries per device
+    record_paths: bool = True
+    max_supersteps: int = 1 << 16
+    axis_name: str = "ch"
+
+    def bucket_cap(self, num_devices: int) -> int:
+        return routing_capacity(self.slots_per_device, num_devices,
+                                self.capacity_margin)
+
+    def retention_cap(self) -> int:
+        return int(math.ceil(self.retention_factor * self.slots_per_device))
+
+    def pool_size(self, num_devices: int) -> int:
+        return num_devices * self.bucket_cap(num_devices) + self.retention_cap()
+
+
+class LocalView(NamedTuple):
+    """Per-device graph shard presented with the sampler interface."""
+    row_ptr: jnp.ndarray
+    col: jnp.ndarray
+    weights: Optional[jnp.ndarray]
+    alias_prob: Optional[jnp.ndarray]
+    alias_idx: Optional[jnp.ndarray]
+    max_degree: int
+    type_offsets: Optional[jnp.ndarray] = None
+
+
+class DistLogs(NamedTuple):
+    qid: jnp.ndarray     # (N, cap) int32
+    hop: jnp.ndarray     # (N, cap) int32
+    vertex: jnp.ndarray  # (N, cap) int32
+    cursor: jnp.ndarray  # (N,) int32
+
+
+def _local_row_access(view: LocalView, v: jnp.ndarray, rank, num_devices: int,
+                      v_per_dev: int):
+    lid = jnp.clip(jnp.where(v >= 0, v // num_devices, 0), 0, v_per_dev - 1)
+    addr = view.row_ptr[lid]
+    deg = view.row_ptr[lid + 1] - addr
+    return addr, deg
+
+
+def _superstep_dist(spec, cfg, N, v_per_dev, nq_total, base_key, view,
+                    starts_loc, qcount, rank, carry):
+    (slots, head, log_q, log_h, log_v, cursor, stats, done, t) = carry
+    W_loc = cfg.slots_per_device
+    K = cfg.bucket_cap(N)
+    R = cfg.retention_cap()
+    S = cfg.pool_size(N)
+
+    # ---- process: one hop for locally-owned live tasks ------------------
+    mine = slots.active & (owner_of(slots.v_curr, N) == rank)
+    if spec.stop_prob > 0.0:
+        u_stop = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
+                                        1, SALT_STOP)[:, 0]
+        stop = mine & (u_stop < spec.stop_prob)
+    else:
+        stop = jnp.zeros_like(mine)
+
+    addr, deg = _local_row_access(view, slots.v_curr, rank, N, v_per_dev)
+    sampler = get_sampler(spec)
+    idx, ok = sampler(view, addr, deg, slots, base_key)
+    e = jnp.clip(addr + idx, 0, view.col.shape[-1] - 1)
+    v_next = view.col[e]
+
+    adv = mine & ~stop & ok
+    dead = mine & ~stop & ~ok
+    new_hop = jnp.where(adv, slots.hop + 1, slots.hop)
+    reached_max = adv & (new_hop >= cfg.max_hops)
+    terminated = stop | dead | reached_max
+
+    # ---- emission log (streaming write-back, paper §IV-B) ---------------
+    # Must run before the slot update clears query_id of terminated lanes
+    # (the final hop of a walk is still a recorded visit).
+    log_drop = jnp.zeros((), jnp.int32)
+    if cfg.record_paths:
+        cap = cfg.log_capacity
+        pos = cursor + jnp.cumsum(adv.astype(jnp.int32)) - 1
+        keep = adv & (pos < cap)
+        p_safe = jnp.where(keep, pos, cap)
+        qid_rec = jnp.where(adv, slots.query_id, -1)
+        log_q = log_q.at[p_safe].set(qid_rec, mode="drop")
+        log_h = log_h.at[p_safe].set(new_hop, mode="drop")
+        log_v = log_v.at[p_safe].set(v_next, mode="drop")
+        n_adv = jnp.sum(adv.astype(jnp.int32))
+        log_drop = jnp.sum((adv & ~keep).astype(jnp.int32))
+        cursor = jnp.minimum(cursor + n_adv, cap)
+
+    slots = WalkerSlots(
+        v_curr=jnp.where(adv, v_next, slots.v_curr),
+        v_prev=jnp.where(adv, slots.v_curr, slots.v_prev),
+        query_id=jnp.where(terminated, -1, slots.query_id),
+        hop=new_hop,
+        active=slots.active & ~terminated,
+    )
+
+    # ---- zero-bubble refill from the local query shard ------------------
+    n_active = jnp.sum(slots.active.astype(jnp.int32))
+    free = ~slots.active
+    budget = jnp.maximum(W_loc - n_active, 0)
+    avail = jnp.minimum(jnp.maximum(qcount - head, 0), budget)
+    rank_free = jnp.cumsum(free.astype(jnp.int32)) - 1
+    take = free & (rank_free < avail)
+    k_local = head + rank_free
+    k_safe = jnp.clip(k_local, 0, starts_loc.shape[0] - 1)
+    start_v = starts_loc[k_safe]
+    qid_new = k_local * N + rank  # global query id of local index k
+    slots = WalkerSlots(
+        v_curr=jnp.where(take, start_v, slots.v_curr),
+        v_prev=jnp.where(take, -1, slots.v_prev),
+        query_id=jnp.where(take, qid_new, slots.query_id),
+        hop=jnp.where(take, 0, slots.hop),
+        active=slots.active | take,
+    )
+    head = head + jnp.sum(take.astype(jnp.int32))
+
+    # ---- route: butterfly all_to_all to the owning device ---------------
+    dest = owner_of(slots.v_curr, N)
+    lane = jnp.arange(S, dtype=jnp.int32)
+    priority = jnp.where(lane >= N * K, 0, 1)  # retained tasks go first
+    rr = router.pack_buckets(slots, dest, priority, N, K, R)
+    incoming = router.exchange(rr.send, cfg.axis_name)
+    slots = WalkerSlots(*(jnp.concatenate([a, b])
+                          for a, b in zip(incoming, rr.retention)))
+
+    # ---- stats + global termination --------------------------------------
+    busy = jnp.sum(mine.astype(jnp.int32))
+    upstream = (head < qcount).astype(jnp.int32)
+    stats = stats._replace(
+        steps=stats.steps + jnp.sum(adv.astype(jnp.int32)),
+        slot_steps=stats.slot_steps + W_loc,
+        bubbles=stats.bubbles + jnp.maximum(W_loc - busy, 0),
+        starved=stats.starved + jnp.maximum(W_loc - busy, 0) * upstream,
+        terminations=stats.terminations + jnp.sum(terminated.astype(jnp.int32)),
+        supersteps=stats.supersteps + 1,
+        route_waits=stats.route_waits + rr.waits,
+        drops=stats.drops + rr.drops + log_drop,
+    )
+    n_live = jnp.sum(slots.active.astype(jnp.int32))
+    remaining = jnp.maximum(qcount - head, 0)
+    done = jax.lax.psum(n_live + remaining, cfg.axis_name) == 0
+    return (slots, head, log_q, log_h, log_v, cursor, stats, done, t + 1)
+
+
+def _empty_pool(S: int) -> WalkerSlots:
+    return WalkerSlots(
+        v_curr=jnp.full((S,), -1, jnp.int32),
+        v_prev=jnp.full((S,), -1, jnp.int32),
+        query_id=jnp.full((S,), -1, jnp.int32),
+        hop=jnp.zeros((S,), jnp.int32),
+        active=jnp.zeros((S,), bool),
+    )
+
+
+def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
+                            cfg: DistConfig, mesh: jax.sharding.Mesh):
+    """Build a jitted distributed runner over the given 1-D mesh."""
+    N = pg.num_devices
+    assert mesh.devices.size == N, (mesh.devices.size, N)
+    v_per_dev = pg.vertices_per_device
+    P = jax.sharding.PartitionSpec
+
+    has_w = pg.weights is not None
+    has_alias = pg.alias_prob is not None
+
+    def body(rowp, colp, wp, app, aip, starts_loc, qcount, base_key):
+        rank = jax.lax.axis_index(cfg.axis_name)
+        view = LocalView(
+            row_ptr=rowp[0], col=colp[0],
+            weights=wp[0] if has_w else None,
+            alias_prob=app[0] if has_alias else None,
+            alias_idx=aip[0] if has_alias else None,
+            max_degree=pg.max_degree,
+        )
+        starts_l = starts_loc[0]
+        qcount_l = qcount[0, 0]
+        S = cfg.pool_size(N)
+        cap = cfg.log_capacity if cfg.record_paths else 1
+        carry = (
+            _empty_pool(S),
+            jnp.zeros((), jnp.int32),
+            jnp.full((cap,), -1, jnp.int32),
+            jnp.full((cap,), -1, jnp.int32),
+            jnp.full((cap,), -1, jnp.int32),
+            jnp.zeros((), jnp.int32),
+            zero_stats(),
+            jnp.asarray(False),
+            jnp.zeros((), jnp.int32),
+        )
+        nq_total = starts_l.shape[0] * N
+
+        def cond(c):
+            return (~c[7]) & (c[8] < cfg.max_supersteps)
+
+        step = partial(_superstep_dist, spec, cfg, N, v_per_dev, nq_total,
+                       base_key, view, starts_l, qcount_l, rank)
+        carry = jax.lax.while_loop(cond, step, carry)
+        _, head, log_q, log_h, log_v, cursor, stats, _, _ = carry
+        return (log_q[None], log_h[None], log_v[None], cursor[None],
+                jax.tree.map(lambda x: x[None], stats))
+
+    smapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),
+                  P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),
+                  P(cfg.axis_name), P()),
+        out_specs=(P(cfg.axis_name),) * 4 + (P(cfg.axis_name),),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def run(graph: PartitionedGraph, starts_sharded, qcount, base_key):
+        dummy = jnp.zeros((N, 1), jnp.float32)
+        dummy_i = jnp.zeros((N, 1), jnp.int32)
+        return smapped(graph.row_ptr, graph.col,
+                       graph.weights if has_w else dummy,
+                       graph.alias_prob if has_alias else dummy,
+                       graph.alias_idx if has_alias else dummy_i,
+                       starts_sharded, qcount, base_key)
+
+    return run
+
+
+def run_distributed(pg: PartitionedGraph, starts, spec: SamplerSpec,
+                    cfg: Optional[DistConfig] = None,
+                    mesh: Optional[jax.sharding.Mesh] = None, seed: int = 0):
+    """One-shot distributed run. Returns (DistLogs, WalkStats-per-device)."""
+    cfg = cfg or DistConfig()
+    N = pg.num_devices
+    if mesh is None:
+        devs = np.array(jax.devices()[:N])
+        mesh = jax.sharding.Mesh(devs, (cfg.axis_name,))
+    starts = np.asarray(starts, dtype=np.int32)
+    Q = starts.shape[0]
+    q_loc = (Q + N - 1) // N
+    starts_sh = np.full((N, q_loc), 0, dtype=np.int32)
+    qcount = np.zeros((N, 1), dtype=np.int32)
+    for r in range(N):
+        part = starts[r::N]
+        starts_sh[r, : part.size] = part
+        qcount[r, 0] = part.size
+    run = make_distributed_engine(pg, spec, cfg, mesh)
+    base_key = jax.random.PRNGKey(seed)
+    log_q, log_h, log_v, cursor, stats = run(
+        pg, jnp.asarray(starts_sh), jnp.asarray(qcount), base_key)
+    logs = DistLogs(qid=log_q, hop=log_h, vertex=log_v, cursor=cursor)
+    return logs, stats
+
+
+def assemble_paths(logs: DistLogs, starts, max_hops: int):
+    """Host-side scatter of the emission logs into per-query paths."""
+    starts = np.asarray(starts)
+    Q = starts.shape[0]
+    paths = np.full((Q, max_hops + 1), -1, dtype=np.int32)
+    lengths = np.ones((Q,), dtype=np.int32)
+    paths[:, 0] = starts
+    q = np.asarray(logs.qid).reshape(-1)
+    h = np.asarray(logs.hop).reshape(-1)
+    v = np.asarray(logs.vertex).reshape(-1)
+    valid = q >= 0
+    q, h, v = q[valid], h[valid], v[valid]
+    paths[q, h] = v
+    np.maximum.at(lengths, q, h + 1)
+    return paths, lengths

@@ -1,0 +1,50 @@
+"""Stateless per-task random number generation (ThundeRiNG analogue, §VII).
+
+The paper pairs each sampling module with ThundeRiNG, an on-chip RNG that
+produces decorrelated streams with zero HBM traffic (unlike FastRW, which
+pre-generates randoms on the host and burns HBM bandwidth loading them).
+
+On TPU the exact analogue is JAX's counter-based Threefry: the random draw
+for a task is a *pure function of the task tuple* ``(seed, query_id, hop)``
+— which makes the draw itself stateless, so a task can be executed on any
+device, at any time, in any order, and still produce the identical sample.
+This is the RNG-side half of the paper's Markov-based stateless
+decomposition (§V-A): reordering and re-routing tasks provably cannot
+change the sampled walk distribution because the randomness travels with
+the task identity, not with the execution site.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def task_fold(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
+              salt=0) -> jax.Array:
+    """Derive one PRNG key per task from (seed, query_id, hop, salt).
+
+    ``salt`` decorrelates independent uses within the same hop (sampler
+    column draw vs. accept test vs. PPR stop draw vs. reservoir chunk).
+    """
+    salt = jnp.asarray(salt, jnp.uint32)
+    def one(qid, h, s):
+        k = jax.random.fold_in(base_key, qid)
+        k = jax.random.fold_in(k, h)
+        return jax.random.fold_in(k, s)
+    salt_b = jnp.broadcast_to(salt, query_id.shape).astype(jnp.uint32)
+    return jax.vmap(one)(query_id.astype(jnp.uint32), hop.astype(jnp.uint32), salt_b)
+
+
+def task_uniforms(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
+                  num: int, salt=0) -> jnp.ndarray:
+    """(W, num) iid U[0,1) draws, one row per task, derived statelessly."""
+    keys = task_fold(base_key, query_id, hop, salt)
+    return jax.vmap(lambda k: jax.random.uniform(k, (num,)))(keys)
+
+
+def task_bits(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
+              num: int, salt=0) -> jnp.ndarray:
+    """(W, num) uint32 random bits per task (for kernels that do their own
+    fixed-point arithmetic, mirroring the paper's 64-bit pipeline words)."""
+    keys = task_fold(base_key, query_id, hop, salt)
+    return jax.vmap(lambda k: jax.random.bits(k, (num,), jnp.uint32))(keys)

@@ -1,0 +1,107 @@
+"""Data-aware task routing (paper §V-C: Task Router, butterfly interconnect).
+
+On TPU the butterfly *is* the ICI network and its native bulk operation is
+``all_to_all``.  Each superstep, every live task must reach the device that
+owns its current vertex's adjacency list.  We realize the paper's routing +
+backpressure with fixed-shape, provably-lossless machinery:
+
+  * the per-device slot pool is ``[receive region (N·K) | retention (R)]``;
+  * tasks are packed into per-destination buckets of capacity ``K``
+    (receive region of the destination) via one lexsort — the O(1)-per-task
+    pairwise Dispatcher/Merger cascade of §VI-C collapses into a single
+    vectorized rank computation on a SIMD machine;
+  * bucket overflow (short-lived load skew, §IV-A) goes to the *retention*
+    region and re-routes next superstep with **priority over fresh tasks**
+    — exactly the paper's Task Merger policy of prioritizing in-flight
+    queries (§VI-C module 2);
+  * retention overflow is dropped only if R is exhausted, and counted
+    (``drops`` must be 0 — asserted in tests; capacity is provisioned by
+    `scheduler.routing_capacity`, the Theorem VI.1 margin).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tasks import WalkerSlots
+
+
+class RouteResult(NamedTuple):
+    send: object            # (N*K,) bucketed tasks, qid=-1 where empty
+    retention: object       # (R,) overflow tasks retained locally
+    waits: jnp.ndarray      # scalar — tasks that must wait a superstep
+    drops: jnp.ndarray      # scalar — tasks lost (must be 0)
+
+
+def _empty_like(slots, n: int):
+    """Generic empty task tuple: int fields -1 (qid=-1 ≙ free lane), bools
+    False, floats 0 — works for WalkerSlots and extended task words
+    (e.g. the two-phase Node2Vec tuple with its candidate matrix)."""
+    def empty_field(f):
+        shape = (n,) + f.shape[1:]
+        if f.dtype == bool:
+            return jnp.zeros(shape, bool)
+        if jnp.issubdtype(f.dtype, jnp.integer):
+            return jnp.full(shape, -1, f.dtype)
+        return jnp.zeros(shape, f.dtype)
+    return type(slots)(*(empty_field(f) for f in slots))
+
+
+def _scatter_slots(dst, idx: jnp.ndarray, src, keep: jnp.ndarray):
+    """Scatter src lanes into dst at idx where keep (OOB index = drop)."""
+    oob = dst[0].shape[0]
+    idx = jnp.where(keep, idx, oob)
+    return type(dst)(*(d.at[idx].set(s, mode="drop")
+                       for d, s in zip(dst, src)))
+
+
+def _gather_slots(slots, order: jnp.ndarray):
+    return type(slots)(*(f[order] for f in slots))
+
+
+def pack_buckets(slots: WalkerSlots, dest: jnp.ndarray, priority: jnp.ndarray,
+                 num_devices: int, bucket_cap: int,
+                 retention_cap: int) -> RouteResult:
+    """Pack live tasks into per-destination buckets + retention overflow.
+
+    dest:     (S,) int32 destination device of each lane (ignored if idle).
+    priority: (S,) int32 — lower routes first (retained tasks use 0).
+    """
+    N, K, R = num_devices, bucket_cap, retention_cap
+    valid = slots.active
+    dest_s = jnp.where(valid, dest, N)  # sentinel so idle lanes sort last
+    order = jnp.lexsort((priority, dest_s))
+    d_sorted = dest_s[order]
+    v_sorted = valid[order]
+    sorted_slots = _gather_slots(slots, order)
+
+    # Rank within each destination group (first occurrence via searchsorted).
+    S = dest.shape[0]
+    first = jnp.searchsorted(d_sorted, d_sorted, side="left")
+    pos = jnp.arange(S, dtype=jnp.int32) - first.astype(jnp.int32)
+
+    in_bucket = v_sorted & (pos < K) & (d_sorted < N)
+    bucket_slot = d_sorted.astype(jnp.int32) * K + pos
+    send = _scatter_slots(_empty_like(slots, N * K), bucket_slot,
+                          sorted_slots, in_bucket)
+
+    overflow = v_sorted & ~in_bucket & (d_sorted < N)
+    ret_rank = jnp.cumsum(overflow.astype(jnp.int32)) - 1
+    ret_ok = overflow & (ret_rank < R)
+    retention = _scatter_slots(_empty_like(slots, R), ret_rank,
+                               sorted_slots, ret_ok)
+
+    waits = jnp.sum(overflow.astype(jnp.int32))
+    drops = jnp.sum((overflow & ~ret_ok).astype(jnp.int32))
+    return RouteResult(send=send, retention=retention, waits=waits, drops=drops)
+
+
+def exchange(send, axis_name: str):
+    """The butterfly hop: all_to_all the (N·K,) send buffer so bucket d
+    lands on device d. Fixed shapes; one collective per superstep."""
+    def a2a(x):
+        return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                                  tiled=True)
+    return type(send)(*(a2a(f) for f in send))

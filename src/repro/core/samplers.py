@@ -1,0 +1,209 @@
+"""Application-specific sampling modules (paper §VII, Table I).
+
+Each sampler is a pure function of the stateless task tuple and the graph —
+the TPU analogue of the paper's pluggable AXI-Stream sampling module.  All
+samplers return ``(index, ok)`` where ``index`` is the chosen offset into
+the current vertex's neighbor list and ``ok`` marks lanes whose vertex has a
+valid continuation (``ok=False`` → early termination, e.g. MetaPath with no
+type-matching neighbor).
+
+| GRW            | weighted | sampler            |
+|----------------|----------|--------------------|
+| URW, PPR       | no       | uniform            |
+| DeepWalk       | yes      | alias (Walker)     |
+| Node2Vec       | no       | rejection          |
+| Node2Vec       | yes      | reservoir (E-S)    |
+| MetaPath       | either   | typed uniform      |
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as task_rng
+
+# Salt channels for decorrelated draws within one hop.
+SALT_COLUMN = 0      # which neighbor column
+SALT_ACCEPT = 1      # alias / rejection accept test
+SALT_STOP = 2        # PPR termination draw (used by the engine)
+SALT_CHUNK0 = 8      # reservoir chunk draws start here
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Static configuration of the sampling module (host-programmable
+    AXI4-Lite registers in the paper: p, q, α, mode bits)."""
+
+    kind: str = "uniform"   # uniform|alias|rejection_n2v|reservoir_n2v|metapath
+    p: float = 1.0          # Node2Vec return parameter
+    q: float = 1.0          # Node2Vec in-out parameter
+    stop_prob: float = 0.0  # PPR teleport/termination probability α
+    rejection_rounds: int = 12
+    reservoir_chunk: int = 64
+    metapath: Tuple[int, ...] = ()
+
+    @property
+    def second_order(self) -> bool:
+        return self.kind in ("rejection_n2v", "reservoir_n2v")
+
+
+def _col_at(g, e):
+    return g.col[jnp.clip(e, 0, g.col.shape[-1] - 1)]
+
+
+def _uniform_index(deg: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """index = min(floor(u * deg), deg-1); safe for deg == 0."""
+    idx = jnp.floor(u * deg.astype(u.dtype)).astype(jnp.int32)
+    return jnp.clip(idx, 0, jnp.maximum(deg - 1, 0))
+
+
+def edge_exists(g, src: jnp.ndarray, dst: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized adjacency test: is dst in src's (sorted) neighbor list?
+
+    Lower-bound bisection with a static iteration count (log2 of max
+    segment length).  ``src`` broadcasts against ``dst``'s leading dims.
+    """
+    nv = g.row_ptr.shape[-1] - 1
+    while src.ndim < dst.ndim:
+        src = src[..., None]
+    src_safe = jnp.clip(src, 0, nv - 1)
+    lo = jnp.broadcast_to(g.row_ptr[src_safe], dst.shape).astype(jnp.int32)
+    hi0 = jnp.broadcast_to(g.row_ptr[src_safe + 1], dst.shape).astype(jnp.int32)
+    hi = hi0
+    iters = max(1, int(math.ceil(math.log2(max(int(g.max_degree), 2) + 1))))
+    for _ in range(iters):
+        active = lo < hi
+        mid = (lo + hi) // 2
+        v = _col_at(g, mid)
+        go_right = v < dst
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+    found = (lo < hi0) & (_col_at(g, lo) == dst)
+    valid_src = jnp.broadcast_to(src >= 0, dst.shape)
+    return found & valid_src
+
+
+def sample_uniform(spec, g, addr, deg, slots, base_key):
+    u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 1,
+                               SALT_COLUMN)[:, 0]
+    return _uniform_index(deg, u), deg > 0
+
+
+def sample_alias(spec, g, addr, deg, slots, base_key):
+    """Walker alias sampling: O(1) per draw, two uniforms, two gathers."""
+    u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 2,
+                               SALT_COLUMN)
+    k = _uniform_index(deg, u[:, 0])
+    e = jnp.clip(addr + k, 0, g.col.shape[-1] - 1)
+    accept = u[:, 1] < g.alias_prob[e]
+    idx = jnp.where(accept, k, g.alias_idx[e])
+    return jnp.clip(idx, 0, jnp.maximum(deg - 1, 0)), deg > 0
+
+
+def _n2v_bias(spec, g, v_prev, y):
+    """Node2Vec bias: 1/p if returning, 1 if y ∈ N(v_prev), 1/q otherwise.
+    Hop 0 (v_prev < 0) → unbiased (weight 1)."""
+    inv_p = 1.0 / spec.p
+    inv_q = 1.0 / spec.q
+    vp = v_prev if y.ndim == v_prev.ndim else v_prev[..., None]
+    is_ret = y == vp
+    common = edge_exists(g, v_prev, y)
+    w = jnp.where(is_ret, inv_p, jnp.where(common, 1.0, inv_q))
+    no_hist = jnp.broadcast_to(vp < 0, y.shape)
+    return jnp.where(no_hist, 1.0, w)
+
+
+def sample_rejection_n2v(spec, g, addr, deg, slots, base_key):
+    """Bounded-round rejection sampling for unweighted Node2Vec (gSampler /
+    KnightKing style).  K proposal rounds; first accept wins; if all rounds
+    reject, the last proposal is taken (geometric tail bias < (1-a_min)^K,
+    measured in tests).  Each round = 2 uniforms + 1 column gather + one
+    O(log d) adjacency bisection."""
+    K = spec.rejection_rounds
+    w_max = max(1.0 / spec.p, 1.0, 1.0 / spec.q)
+    u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 2 * K,
+                               SALT_COLUMN)
+    u_col = u[:, :K]
+    u_acc = u[:, K:]
+    props = _uniform_index(deg[:, None], u_col)              # (W, K)
+    y = _col_at(g, addr[:, None] + props)                    # (W, K)
+    w = _n2v_bias(spec, g, slots.v_prev, y)                  # (W, K)
+    accept = u_acc * w_max <= w                              # (W, K)
+    accept = accept.at[:, K - 1].set(True)                   # bounded fallback
+    first = jnp.argmax(accept, axis=1)
+    idx = jnp.take_along_axis(props, first[:, None], axis=1)[:, 0]
+    return idx, deg > 0
+
+
+def sample_reservoir_n2v(spec, g, addr, deg, slots, base_key):
+    """Weighted Node2Vec via Efraimidis–Spirakis weighted reservoir
+    (LightRW's method): scan the full neighbor list in chunks, key =
+    u^(1/w'), keep the max.  O(deg) work per hop — inherent to exact
+    weighted 2nd-order sampling; chunked so the working set stays in VMEM."""
+    CH = spec.reservoir_chunk
+    n_chunks = max(1, -(-int(g.max_degree) // CH))
+    W = addr.shape[0]
+    weights = g.weights if g.weights is not None else None
+
+    def chunk_body(c, carry):
+        best_key, best_idx = carry
+        u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, CH,
+                                   SALT_CHUNK0 + c)
+        pos = c * CH + jnp.arange(CH, dtype=jnp.int32)[None, :]  # (1, CH)
+        valid = pos < deg[:, None]
+        e = jnp.clip(addr[:, None] + pos, 0, g.col.shape[-1] - 1)
+        y = g.col[e]
+        w = weights[e] if weights is not None else jnp.ones_like(u)
+        w = w * _n2v_bias(spec, g, slots.v_prev, y)
+        # E-S key: u^(1/w) — monotone in log(u)/w; use that (stabler).
+        key = jnp.where(valid & (w > 0), jnp.log(u + 1e-20) / w, -jnp.inf)
+        c_best = jnp.argmax(key, axis=1)
+        c_key = jnp.take_along_axis(key, c_best[:, None], 1)[:, 0]
+        take = c_key > best_key
+        best_idx = jnp.where(take, c * CH + c_best.astype(jnp.int32), best_idx)
+        best_key = jnp.maximum(best_key, c_key)
+        return best_key, best_idx
+
+    init = (jnp.full((W,), -jnp.inf), jnp.zeros((W,), jnp.int32))
+    _, best_idx = jax.lax.fori_loop(0, n_chunks, chunk_body, init)
+    return jnp.clip(best_idx, 0, jnp.maximum(deg - 1, 0)), deg > 0
+
+
+def sample_metapath(spec, g, addr, deg, slots, base_key):
+    """Typed uniform sampling: hop t draws uniformly from the sub-segment of
+    neighbors with edge type schedule[t mod |schedule|]; no such neighbor →
+    early termination (paper §VIII-B, MetaPath's higher early-termination
+    rate is what stresses the zero-bubble scheduler)."""
+    assert g.type_offsets is not None, "MetaPath needs a typed graph"
+    sched = jnp.asarray(spec.metapath, jnp.int32)
+    t = sched[slots.hop % len(spec.metapath)]
+    nv = g.type_offsets.shape[0]
+    v_safe = jnp.clip(slots.v_curr, 0, nv - 1)
+    base = g.type_offsets[v_safe, t]
+    cnt = g.type_offsets[v_safe, t + 1] - base
+    u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 1,
+                               SALT_COLUMN)[:, 0]
+    idx = base + _uniform_index(cnt, u)
+    return idx, (cnt > 0) & (deg > 0)
+
+
+_SAMPLERS = {
+    "uniform": sample_uniform,
+    "alias": sample_alias,
+    "rejection_n2v": sample_rejection_n2v,
+    "reservoir_n2v": sample_reservoir_n2v,
+    "metapath": sample_metapath,
+}
+
+
+def get_sampler(spec: SamplerSpec):
+    try:
+        fn = _SAMPLERS[spec.kind]
+    except KeyError:
+        raise ValueError(f"unknown sampler kind: {spec.kind!r}") from None
+    return partial(fn, spec)

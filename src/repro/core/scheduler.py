@@ -1,0 +1,106 @@
+"""Zero-bubble scheduling theory + feedback controller (paper §VI).
+
+Theorem VI.1 (Lu et al., bulk-service M/M/1[N] with delayed feedback):
+with N servers of service rate μ tasks/cycle and availability feedback
+delayed by at most C cycles, a dispatch queue of depth
+
+    D = N + ceil(μ · C · N)
+
+suffices to keep every server busy whenever the system is backlogged.
+
+On TPU the "servers" are the W lanes of a slot pool (service rate μ = 1
+hop/superstep) and C is the host→device query-injection latency in
+supersteps; `min_queue_depth` sizes the stage-ahead watermark used by the
+engine's feedback controller.  For the *distributed* engine, the same bound
+sizes the per-destination routing capacity: the butterfly's 2·log N
+dispatcher/merger latency becomes the all_to_all round trip (1 superstep),
+and the per-pipeline FIFO depth 1 + 4·log N becomes the capacity margin of
+the receive buckets (`router.py`).
+
+`analyze_run` turns WalkStats into the paper's utilization metrics
+(bubble ratio, §III-B; effective bandwidth utilization, Eq. (1)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.tasks import WalkStats
+
+
+def min_queue_depth(num_servers: int, mu: float = 1.0, delay: int = 0) -> int:
+    """Theorem VI.1: D = N + O(μ·C·N). We use the explicit constant 1."""
+    return int(num_servers + math.ceil(mu * delay * num_servers))
+
+
+def butterfly_feedback_delay(num_pipelines: int) -> int:
+    """Paper §VI-D: tasks traverse log N Dispatchers + log N Mergers, each
+    ≤ 2 cycles, plus the scheduler↔pipeline round trip: C ≤ 4·log2 N."""
+    n = max(2, num_pipelines)
+    return int(4 * math.ceil(math.log2(n)))
+
+
+def per_pipeline_fifo_depth(num_pipelines: int) -> int:
+    """Paper §VI-D: D = N + 4·N·log N total → 1 + 4·log N per pipeline."""
+    n = max(2, num_pipelines)
+    return int(1 + 4 * math.ceil(math.log2(n)))
+
+
+def routing_capacity(local_slots: int, num_devices: int,
+                     margin: float = 2.0) -> int:
+    """Per-destination all_to_all bucket capacity for the distributed
+    engine: expected load is ``local_slots / num_devices`` (uniform mixing,
+    paper §IV-A); ``margin`` absorbs the short-lived fluctuations the
+    paper's FIFOs absorb. Capacity overflow is retained, never dropped."""
+    expected = max(1, local_slots // max(num_devices, 1))
+    return int(math.ceil(margin * expected))
+
+
+@dataclasses.dataclass
+class RunAnalysis:
+    steps: int
+    supersteps: int
+    slot_steps: int
+    bubbles: int
+    starved: int
+    bubble_ratio: float
+    starved_ratio: float
+    occupancy: float
+    terminations: int
+    route_waits: int
+    drops: int
+    msteps_per_s: float = float("nan")
+
+    @property
+    def zero_bubble(self) -> bool:
+        """True iff no lane ever starved while work existed (Thm VI.1)."""
+        return self.starved == 0
+
+
+def analyze_run(stats: WalkStats, wall_time_s: float | None = None) -> RunAnalysis:
+    import numpy as np
+    s = {k: int(np.asarray(v)) for k, v in stats._asdict().items()}
+    ratio = s["bubbles"] / max(s["slot_steps"], 1)
+    sratio = s["starved"] / max(s["slot_steps"], 1)
+    msteps = float("nan")
+    if wall_time_s and wall_time_s > 0:
+        msteps = s["steps"] / wall_time_s / 1e6
+    return RunAnalysis(
+        steps=s["steps"], supersteps=s["supersteps"],
+        slot_steps=s["slot_steps"], bubbles=s["bubbles"], starved=s["starved"],
+        bubble_ratio=ratio, starved_ratio=sratio, occupancy=1.0 - ratio,
+        terminations=s["terminations"], route_waits=s["route_waits"],
+        drops=s["drops"], msteps_per_s=msteps,
+    )
+
+
+def peak_random_access_bandwidth(f_mem_hz: float, t_rrd_cycles: float,
+                                 num_channels: int, bits: int = 64) -> float:
+    """Paper Eq. (1): B_peak = f_mem / t_RRD × N_chn × bits/8  [bytes/s],
+    with t_RRD the row-to-row delay in memory-clock cycles (each GRW step
+    is assumed to be a DRAM row-buffer miss).
+
+    Kept for parity with the paper's FPGA analysis; the TPU roofline in
+    benchmarks/ uses HBM bandwidth with a measured random-access derate
+    instead (no public t_RRD for TPU HBM stacks)."""
+    return f_mem_hz / t_rrd_cycles * num_channels * (bits / 8)

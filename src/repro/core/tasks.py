@@ -1,0 +1,108 @@
+"""Stateless task / slot-pool structures (paper §V-A).
+
+The paper decomposes each GRW query into minimal stateless tasks
+``Q_s^y = <v_last, ID_y, x, ...>`` that fit in a single pipeline word.  The
+TPU-native layout is a structure-of-arrays *slot pool*: ``W`` lanes, each
+holding one task word.  A lane is either live (carrying a task) or free;
+the zero-bubble scheduler's job is to keep every lane live whenever work
+exists (paper §VI).
+
+``v_prev`` carries the one extra vertex of history needed by second-order
+walks (Node2Vec) — exactly the paper's "or two vertices for higher-order
+walks" extension of the task tuple.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class WalkerSlots(NamedTuple):
+    """Slot pool of stateless walk tasks (SoA; all arrays shape (W,))."""
+
+    v_curr: jnp.ndarray   # int32 — the task's v_last (current vertex)
+    v_prev: jnp.ndarray   # int32 — previous vertex (2nd-order walks); -1 if none
+    query_id: jnp.ndarray  # int32 — unique query id (result tracking); -1 = free
+    hop: jnp.ndarray      # int32 — hop count x
+    active: jnp.ndarray   # bool  — lane holds a live task
+
+    @property
+    def width(self) -> int:
+        return self.v_curr.shape[-1]
+
+
+def empty_slots(width: int) -> WalkerSlots:
+    return WalkerSlots(
+        v_curr=jnp.full((width,), -1, jnp.int32),
+        v_prev=jnp.full((width,), -1, jnp.int32),
+        query_id=jnp.full((width,), -1, jnp.int32),
+        hop=jnp.zeros((width,), jnp.int32),
+        active=jnp.zeros((width,), bool),
+    )
+
+
+class QueryQueue(NamedTuple):
+    """Device-resident pending-query buffer (the Theorem VI.1 queue).
+
+    ``head`` is the next query to issue; ``staged`` is the injection
+    watermark — queries with index >= staged have not yet "arrived" from the
+    host (models the C-cycle observation/injection delay of §VI-A).  The
+    feedback controller advances ``staged``; refill may only consume
+    ``head < staged``.
+    """
+
+    start_vertex: jnp.ndarray  # (Q,) int32
+    head: jnp.ndarray          # scalar int32
+    staged: jnp.ndarray        # scalar int32
+
+    @property
+    def capacity(self) -> int:
+        return self.start_vertex.shape[-1]
+
+
+def make_queue(start_vertices, staged: int | None = None) -> QueryQueue:
+    sv = jnp.asarray(start_vertices, jnp.int32)
+    q = sv.shape[-1]
+    return QueryQueue(
+        start_vertex=sv,
+        head=jnp.zeros((), jnp.int32),
+        staged=jnp.asarray(q if staged is None else min(staged, q), jnp.int32),
+    )
+
+
+class WalkStats(NamedTuple):
+    """Cycle-accurate-style utilization counters (paper Fig. 3 / Fig. 11)."""
+
+    steps: jnp.ndarray        # total hops executed (visited vertices)
+    slot_steps: jnp.ndarray   # total lane-supersteps elapsed
+    bubbles: jnp.ndarray      # lane-supersteps with no live task (idle lanes)
+    starved: jnp.ndarray      # idle lane-supersteps WHILE upstream work existed
+                              # (the quantity Theorem VI.1 drives to zero;
+                              # bubbles - starved = unavoidable tail drain)
+    terminations: jnp.ndarray  # completed queries
+    supersteps: jnp.ndarray   # wall supersteps executed
+    route_waits: jnp.ndarray  # tasks that waited a superstep for routing capacity
+    drops: jnp.ndarray        # tasks lost to capacity overflow (must be 0)
+
+    def bubble_ratio(self):
+        return self.bubbles / jnp.maximum(self.slot_steps, 1)
+
+    def occupancy(self):
+        return 1.0 - self.bubble_ratio()
+
+
+def zero_stats() -> WalkStats:
+    return WalkStats(*(jnp.zeros((), jnp.int32) for _ in range(8)))
+
+
+class WalkResult(NamedTuple):
+    """Collected walk paths: paths[q, t] = t-th vertex of query q, -1 padded."""
+
+    paths: jnp.ndarray    # (Q, max_len) int32
+    lengths: jnp.ndarray  # (Q,) int32 — number of vertices recorded
+    stats: WalkStats
+
+    def as_numpy(self):
+        return np.asarray(self.paths), np.asarray(self.lengths)

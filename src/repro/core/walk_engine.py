@@ -1,0 +1,246 @@
+"""Single-device walk engine: out-of-order slot-pool execution with
+zero-bubble refill (paper §V + §VI, adapted to a SIMD superstep machine).
+
+One *superstep* advances every live lane by one hop through the paper's
+three stages — Row Access → Sampling → Column Access — then terminates
+finished walks and immediately refills freed lanes from the pending-query
+queue (the zero-bubble scheduler).  Because each task is stateless
+(`tasks.py`) and its randomness derives from (seed, query_id, hop)
+(`rng.py`), lanes are interchangeable: a query may be served by different
+lanes on different hops without changing its sampled path — the Markov
+decomposition of §V-A.
+
+Two scheduling modes reproduce the paper's Fig. 11 ablation axis:
+  * ``zero_bubble`` — per-superstep compaction + refill (RidgeWalker).
+  * ``static``      — bulk-synchronous batches: a batch of W queries is
+    bound to lanes and the engine waits for the *slowest* walk before
+    loading the next batch (FastRW/LightRW-style static scheduling).
+    Early-terminating walks leave idle lanes that are counted as bubbles.
+
+The host→device injection latency is modeled by the queue's ``staged``
+watermark, advanced by a feedback controller with C-superstep-delayed
+observations of ``head`` (paper §VI-A "Back-pressure and Observation
+Delay"); `scheduler.py` provisions the stage-ahead depth per Theorem VI.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as task_rng
+from repro.core.samplers import SamplerSpec, get_sampler, SALT_STOP
+from repro.core.tasks import (WalkerSlots, QueryQueue, WalkStats, WalkResult,
+                              empty_slots, make_queue, zero_stats)
+from repro.core import scheduler as sched
+from repro.graph.csr import CSRGraph, row_access, column_access
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 1024          # W — lane count (outstanding tasks/core)
+    max_hops: int = 80             # paper §VIII-A4: query length 80
+    record_paths: bool = True
+    mode: str = "zero_bubble"      # zero_bubble | static
+    injection_delay: int = 0       # C supersteps of host->device latency
+    queue_depth_factor: float = 1.0  # × Theorem VI.1 depth D
+    max_supersteps: int = 1 << 20  # safety bound for the while loop
+    step_impl: str = "jnp"         # jnp | pallas (fused walk-step kernel)
+
+
+class EngineState(Tuple):
+    pass
+
+
+def _stage_depth(cfg: EngineConfig) -> int:
+    d = sched.min_queue_depth(cfg.num_slots, mu=1.0, delay=cfg.injection_delay)
+    return max(1, int(round(cfg.queue_depth_factor * d)))
+
+
+def _init_state(graph, queue: QueryQueue, cfg: EngineConfig, num_queries: int):
+    slots = empty_slots(cfg.num_slots)
+    if cfg.record_paths:
+        paths = jnp.full((num_queries, cfg.max_hops + 1), -1, jnp.int32)
+        lengths = jnp.zeros((num_queries,), jnp.int32)
+    else:
+        paths = jnp.full((1, 1), -1, jnp.int32)
+        lengths = jnp.zeros((1,), jnp.int32)
+    head_hist = jnp.zeros((cfg.injection_delay + 1,), jnp.int32)
+    return slots, queue, paths, lengths, zero_stats(), head_hist
+
+
+def _refill(slots: WalkerSlots, queue: QueryQueue, paths, lengths,
+            cfg: EngineConfig, terminated: jnp.ndarray):
+    """Zero-bubble compaction + refill: freed lanes pull the next staged
+    queries via a prefix-sum ranking (the butterfly balancer's O(1)-per-task
+    dispatch, §VI-C, realized as a vectorized scan)."""
+    free = (~slots.active) | terminated
+    if cfg.mode == "static":
+        # Bulk-synchronous: only reload when the whole batch drained.
+        all_free = jnp.all(free)
+        free = free & all_free
+    avail = jnp.maximum(queue.staged - queue.head, 0)
+    rank = jnp.cumsum(free.astype(jnp.int32)) - 1           # rank among free lanes
+    take = free & (rank < avail)
+    qid = queue.head + rank
+    nq = queue.capacity
+    qid_safe = jnp.clip(qid, 0, nq - 1)
+    start = queue.start_vertex[qid_safe]
+
+    new_slots = WalkerSlots(
+        v_curr=jnp.where(take, start, slots.v_curr),
+        v_prev=jnp.where(take, -1, slots.v_prev),
+        query_id=jnp.where(take, qid, jnp.where(terminated, -1, slots.query_id)),
+        hop=jnp.where(take, 0, slots.hop),
+        active=jnp.where(take, True, slots.active & ~terminated),
+    )
+    n_taken = jnp.sum(take.astype(jnp.int32))
+    new_queue = queue._replace(head=queue.head + n_taken)
+    if cfg.record_paths:
+        scatter_q = jnp.where(take, qid, nq)  # nq = OOB -> dropped
+        paths = paths.at[scatter_q, 0].set(start, mode="drop")
+        lengths = lengths.at[scatter_q].set(1, mode="drop")
+    return new_slots, new_queue, paths, lengths
+
+
+def _advance_controller(queue: QueryQueue, head_hist: jnp.ndarray,
+                        cfg: EngineConfig, depth: int):
+    """Feedback-driven staging: observe head with C-superstep delay, keep
+    the staged watermark >= delayed_head + D (Theorem VI.1).
+
+    ``head_hist`` holds the last C+1 head observations; pushing the current
+    head first and reading index 0 yields the head from exactly C
+    supersteps ago (the freshest observation available under the delay)."""
+    head_hist = jnp.concatenate([head_hist[1:], queue.head[None]])
+    delayed_head = head_hist[0]
+    target = jnp.minimum(delayed_head + depth, queue.capacity)
+    staged = jnp.maximum(queue.staged, target)
+    return queue._replace(staged=staged), head_hist
+
+
+def _process(graph: CSRGraph, slots: WalkerSlots, spec: SamplerSpec,
+             cfg: EngineConfig, base_key, paths, lengths):
+    """One hop for every live lane: Row Access → Sampling → Column Access →
+    terminate (paper Alg. II.1 lines 5-9, vectorized over lanes)."""
+    A = slots.active
+
+    # PPR teleport/termination draw (before the hop; geometric walk length).
+    if spec.stop_prob > 0.0:
+        u_stop = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
+                                        1, SALT_STOP)[:, 0]
+        stop = A & (u_stop < spec.stop_prob)
+    else:
+        stop = jnp.zeros_like(A)
+
+    if cfg.step_impl == "pallas" and spec.kind in ("uniform", "alias"):
+        # Fused Pallas walk-step kernel (async DMA pipeline, kernels/walk_step).
+        from repro.kernels.walk_step import ops as walk_ops
+        if spec.kind == "uniform":
+            u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
+                                       1, 0)
+            v_next, deg = walk_ops.walk_step_uniform(
+                slots.v_curr, u[:, 0], graph.row_ptr, graph.col)
+        else:
+            u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
+                                       2, 0)
+            v_next, deg = walk_ops.walk_step_alias(
+                slots.v_curr, u[:, 0], u[:, 1], graph.row_ptr, graph.col,
+                graph.alias_prob, graph.alias_idx)
+        ok = deg > 0
+    else:
+        addr, deg = row_access(graph, slots.v_curr)           # stage 1
+        sampler = get_sampler(spec)
+        idx, ok = sampler(graph, addr, deg, slots, base_key)  # stage 2
+        v_next = column_access(graph, addr, idx)              # stage 3
+
+    adv = A & ~stop & ok
+    dead = A & ~stop & ~ok
+    new_hop = jnp.where(adv, slots.hop + 1, slots.hop)
+    reached_max = adv & (new_hop >= cfg.max_hops)
+    terminated = stop | dead | reached_max
+
+    new_slots = WalkerSlots(
+        v_curr=jnp.where(adv, v_next, slots.v_curr),
+        v_prev=jnp.where(adv, slots.v_curr, slots.v_prev),
+        query_id=slots.query_id,
+        hop=new_hop,
+        active=slots.active,
+    )
+    if cfg.record_paths:
+        nq = paths.shape[0]
+        scatter_q = jnp.where(adv, slots.query_id, nq)
+        paths = paths.at[scatter_q, new_hop].set(v_next, mode="drop")
+        lengths = lengths.at[scatter_q].set(new_hop + 1, mode="drop")
+    return new_slots, terminated, adv, paths, lengths
+
+
+def _superstep(graph, spec, cfg, base_key, depth, state):
+    slots, queue, paths, lengths, stats, head_hist = state
+    W = cfg.num_slots
+
+    slots, terminated, adv, paths, lengths = _process(
+        graph, slots, spec, cfg, base_key, paths, lengths)
+
+    n_active = jnp.sum(slots.active.astype(jnp.int32))
+    idle = W - n_active
+    # Idle lanes while unserved queries exist upstream = scheduler
+    # starvation (what Theorem VI.1 eliminates); idle lanes after the last
+    # query was issued = unavoidable tail drain.
+    upstream = (queue.head < queue.capacity).astype(jnp.int32)
+    stats = stats._replace(
+        steps=stats.steps + jnp.sum(adv.astype(jnp.int32)),
+        slot_steps=stats.slot_steps + W,
+        bubbles=stats.bubbles + idle,
+        starved=stats.starved + idle * upstream,
+        terminations=stats.terminations
+        + jnp.sum((terminated & slots.active).astype(jnp.int32)),
+        supersteps=stats.supersteps + 1,
+    )
+
+    queue, head_hist = _advance_controller(queue, head_hist, cfg, depth)
+    slots, queue, paths, lengths = _refill(slots, queue, paths, lengths, cfg,
+                                           terminated)
+    return slots, queue, paths, lengths, stats, head_hist
+
+
+def make_engine(spec: SamplerSpec, cfg: EngineConfig):
+    """Build a jitted ``run(graph, start_vertices, seed) -> WalkResult``."""
+
+    @partial(jax.jit, static_argnames=("num_queries",))
+    def run(graph: CSRGraph, start_vertices: jnp.ndarray, seed,
+            num_queries: int) -> WalkResult:
+        base_key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
+        depth = _stage_depth(cfg)
+        queue = make_queue(start_vertices, staged=min(depth, num_queries))
+        state = _init_state(graph, queue, cfg, num_queries)
+        # Initial injection so lanes processed in superstep 1 are live.
+        slots, queue, paths, lengths, stats, head_hist = state
+        queue, head_hist = _advance_controller(queue, head_hist, cfg, depth)
+        slots, queue, paths, lengths = _refill(
+            slots, queue, paths, lengths, cfg,
+            jnp.zeros((cfg.num_slots,), bool))
+        state = (slots, queue, paths, lengths, stats, head_hist)
+
+        def cond(state):
+            slots, queue, _, _, stats, _ = state
+            work_left = (queue.head < num_queries) | jnp.any(slots.active)
+            return work_left & (stats.supersteps < cfg.max_supersteps)
+
+        step = partial(_superstep, graph, spec, cfg, base_key, depth)
+        state = jax.lax.while_loop(cond, step, state)
+        slots, queue, paths, lengths, stats, _ = state
+        return WalkResult(paths=paths, lengths=lengths, stats=stats)
+
+    return run
+
+
+def run_walks(graph: CSRGraph, start_vertices, spec: SamplerSpec,
+              cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
+    """Convenience one-shot API (examples / tests)."""
+    cfg = cfg or EngineConfig()
+    sv = jnp.asarray(start_vertices, jnp.int32)
+    run = make_engine(spec, cfg)
+    return run(graph, sv, seed, num_queries=int(sv.shape[0]))

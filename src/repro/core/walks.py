@@ -1,0 +1,84 @@
+"""GRW algorithm front-ends (paper Table I + §VIII-A4).
+
+Thin wrappers that pick the right SamplerSpec for each published GRW and
+run the engine.  Defaults follow the paper's evaluation setup: query
+length 80; Node2Vec p=2, q=0.5; ThunderRW-style edge weights.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.samplers import SamplerSpec
+from repro.core.walk_engine import EngineConfig, run_walks
+from repro.core.tasks import WalkResult
+from repro.graph.csr import CSRGraph
+
+
+def urw(graph: CSRGraph, starts, max_hops: int = 80,
+        cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
+    """Unbiased random walk [49]: uniform neighbor sampling."""
+    spec = SamplerSpec(kind="uniform")
+    cfg = (cfg or EngineConfig())
+    cfg = _with(cfg, max_hops=max_hops)
+    return run_walks(graph, starts, spec, cfg, seed)
+
+
+def ppr(graph: CSRGraph, starts, alpha: float = 0.15, max_hops: int = 80,
+        cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
+    """Personalized PageRank walks [50]: uniform sampling, geometric
+    termination with teleport probability α (walk endpoints estimate PPR
+    mass)."""
+    spec = SamplerSpec(kind="uniform", stop_prob=alpha)
+    cfg = _with(cfg or EngineConfig(), max_hops=max_hops)
+    return run_walks(graph, starts, spec, cfg, seed)
+
+
+def deepwalk(graph: CSRGraph, starts, max_hops: int = 80,
+             cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
+    """DeepWalk [5]: alias sampling over (weighted) neighbor lists.
+    Graph must carry alias tables (graph.alias.build_alias_tables)."""
+    assert graph.has_alias, "DeepWalk requires alias tables on the graph"
+    spec = SamplerSpec(kind="alias")
+    cfg = _with(cfg or EngineConfig(), max_hops=max_hops)
+    return run_walks(graph, starts, spec, cfg, seed)
+
+
+def node2vec(graph: CSRGraph, starts, p: float = 2.0, q: float = 0.5,
+             max_hops: int = 80, weighted: Optional[bool] = None,
+             cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
+    """Node2Vec [9]: rejection sampling (unweighted) or Efraimidis–Spirakis
+    reservoir sampling (weighted) — paper Table I."""
+    if weighted is None:
+        weighted = graph.weighted
+    kind = "reservoir_n2v" if weighted else "rejection_n2v"
+    spec = SamplerSpec(kind=kind, p=p, q=q)
+    cfg = _with(cfg or EngineConfig(), max_hops=max_hops)
+    return run_walks(graph, starts, spec, cfg, seed)
+
+
+def metapath(graph: CSRGraph, starts, schedule: Sequence[int],
+             max_hops: int = 80, cfg: Optional[EngineConfig] = None,
+             seed: int = 0) -> WalkResult:
+    """MetaPath walks [16]: each hop samples uniformly among neighbors of
+    the scheduled edge type; no match → early termination (the workload
+    that most stresses the zero-bubble scheduler, §VIII-B)."""
+    assert graph.typed, "MetaPath requires a typed graph"
+    spec = SamplerSpec(kind="metapath", metapath=tuple(int(t) for t in schedule))
+    cfg = _with(cfg or EngineConfig(), max_hops=max_hops)
+    return run_walks(graph, starts, spec, cfg, seed)
+
+
+def _with(cfg: EngineConfig, **kw) -> EngineConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+ALGORITHMS = {
+    "urw": urw,
+    "ppr": ppr,
+    "deepwalk": deepwalk,
+    "node2vec": node2vec,
+    "metapath": metapath,
+}

@@ -1,0 +1,13 @@
+"""Graph substrate: CSR representation, generators, alias tables, partitioning."""
+from repro.graph.csr import CSRGraph, build_csr, degrees, validate_csr
+from repro.graph.generators import rmat_edges, erdos_renyi_edges, GRAPH500, BALANCED
+from repro.graph.alias import build_alias_tables
+from repro.graph.datasets import make_dataset, DATASET_SPECS
+from repro.graph.partition import partition_graph, PartitionedGraph, owner_of
+
+__all__ = [
+    "CSRGraph", "build_csr", "degrees", "validate_csr",
+    "rmat_edges", "erdos_renyi_edges", "GRAPH500", "BALANCED",
+    "build_alias_tables", "make_dataset", "DATASET_SPECS",
+    "partition_graph", "PartitionedGraph", "owner_of",
+]

@@ -1,0 +1,73 @@
+"""Walker alias-table construction (paper §VII, Table I: DeepWalk on weighted
+graphs uses alias sampling; ``RP_entry`` is extended to point at the table).
+
+Built host-side (numpy) as a preprocessing step, exactly as the paper builds
+tables before loading the graph to HBM.  Sampling itself (O(1): one uniform
+draw for the column, one for the accept test) lives in ``core/samplers.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+import jax.numpy as jnp
+
+
+def _vose(prob_seg: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Vose's alias construction for one neighbor list. O(d)."""
+    d = prob_seg.size
+    scaled = prob_seg * d / prob_seg.sum()
+    prob = np.ones(d, dtype=np.float32)
+    alias = np.arange(d, dtype=np.int32)
+    small = [i for i in range(d) if scaled[i] < 1.0]
+    large = [i for i in range(d) if scaled[i] >= 1.0]
+    scaled = scaled.astype(np.float64)
+    while small and large:
+        s = small.pop()
+        l = large.pop()
+        prob[s] = scaled[s]
+        alias[s] = l
+        scaled[l] = scaled[l] + scaled[s] - 1.0
+        (small if scaled[l] < 1.0 else large).append(l)
+    for i in large:
+        prob[i] = 1.0
+    for i in small:  # numerical leftovers
+        prob[i] = 1.0
+    return prob, alias
+
+
+def build_alias_tables(g: CSRGraph) -> CSRGraph:
+    """Attach per-neighbor-list alias tables to a weighted CSR graph.
+
+    For unweighted graphs alias sampling degenerates to uniform; we still
+    build (prob=1, alias=i) tables so DeepWalk code paths are uniform.
+    """
+    rp = np.asarray(g.row_ptr)
+    E = g.num_edges
+    prob = np.ones(E, dtype=np.float32)
+    alias = np.zeros(E, dtype=np.int32)
+    if g.weights is not None:
+        w = np.asarray(g.weights, dtype=np.float64)
+        for v in range(g.num_vertices):
+            s, e = int(rp[v]), int(rp[v + 1])
+            if e - s <= 1:
+                if e - s == 1:
+                    prob[s], alias[s] = 1.0, 0
+                continue
+            p, a = _vose(w[s:e])
+            prob[s:e] = p
+            alias[s:e] = a
+    else:
+        # Uniform: identity alias table, vectorized.
+        deg = np.diff(rp)
+        alias = (np.arange(E, dtype=np.int64) - np.repeat(rp[:-1], deg)).astype(np.int32)
+    import dataclasses
+    return dataclasses.replace(g, alias_prob=jnp.asarray(prob),
+                               alias_idx=jnp.asarray(alias))
+
+
+def alias_sample_reference(prob: np.ndarray, alias: np.ndarray,
+                           u1: np.ndarray, u2: np.ndarray, deg: int) -> np.ndarray:
+    """Numpy oracle for alias sampling used in tests."""
+    k = np.minimum((u1 * deg).astype(np.int64), deg - 1)
+    return np.where(u2 < prob[k], k, alias[k])

@@ -1,0 +1,178 @@
+"""Compressed Sparse Row graph representation (paper §II-A).
+
+The CSR graph is the memory layout the paper's Row Access / Column Access
+stages read: ``row_ptr[v]`` gives the offset of v's neighbor list in ``col``
+and ``row_ptr[v+1]-row_ptr[v]`` its degree (an O(1) "RP_entry" lookup).
+
+All arrays are JAX arrays so the graph is a pytree and can be donated /
+sharded.  Optional per-edge payloads (weights, alias tables, edge types)
+extend the layout exactly the way the paper extends ``RP_entry``/``CL`` for
+weighted walks (§VII, Table I).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["row_ptr", "col", "weights", "alias_prob", "alias_idx",
+                      "edge_type", "type_offsets"],
+         meta_fields=["num_vertices", "num_edges", "max_degree",
+                      "num_edge_types"])
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Padded CSR graph.
+
+    Attributes:
+      row_ptr:  (V+1,) int32 — neighbor-list offsets into ``col``.
+      col:      (E,)   int32 — neighbor vertex ids (global).
+      weights:  (E,)   float32 or None — edge weights (weighted walks).
+      alias_prob: (E,) float32 or None — Walker alias-table accept prob.
+      alias_idx:  (E,) int32  or None — Walker alias-table alias index.
+      edge_type:  (E,) int32  or None — edge type id (MetaPath walks).
+      type_offsets: (V, T+1) int32 or None — per-vertex sub-segment offsets
+        into the (type-sorted) neighbor list; MetaPath samples uniformly
+        within ``[row_ptr[v]+type_offsets[v,t], row_ptr[v]+type_offsets[v,t+1])``.
+      num_vertices / num_edges / max_degree: static ints (aux data).
+    """
+
+    row_ptr: jnp.ndarray
+    col: jnp.ndarray
+    weights: Optional[jnp.ndarray] = None
+    alias_prob: Optional[jnp.ndarray] = None
+    alias_idx: Optional[jnp.ndarray] = None
+    edge_type: Optional[jnp.ndarray] = None
+    type_offsets: Optional[jnp.ndarray] = None
+    num_vertices: int = 0
+    num_edges: int = 0
+    max_degree: int = 0
+    num_edge_types: int = 0
+
+    @property
+    def weighted(self) -> bool:
+        return self.weights is not None
+
+    @property
+    def has_alias(self) -> bool:
+        return self.alias_prob is not None
+
+    @property
+    def typed(self) -> bool:
+        return self.edge_type is not None
+
+
+def build_csr(
+    edges: np.ndarray,
+    num_vertices: int,
+    weights: Optional[np.ndarray] = None,
+    edge_types: Optional[np.ndarray] = None,
+    num_edge_types: int = 0,
+    dedup: bool = True,
+    sort_neighbors: bool = True,
+) -> CSRGraph:
+    """Build a CSRGraph from an (E, 2) int edge array (src, dst).
+
+    Neighbor lists are sorted by (edge_type, dst) so that (a) MetaPath
+    sub-segments are contiguous and (b) rejection sampling for Node2Vec can
+    binary-search adjacency.
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    if edges.size == 0:
+        edges = edges.reshape(0, 2)
+    src, dst = edges[:, 0], edges[:, 1]
+    if weights is None:
+        w = None
+    else:
+        w = np.asarray(weights, dtype=np.float32)
+    et = None if edge_types is None else np.asarray(edge_types, dtype=np.int32)
+
+    if dedup and edges.shape[0] > 0:
+        key = src * num_vertices + dst
+        if et is not None:
+            key = key * max(num_edge_types, 1) + et
+        _, keep = np.unique(key, return_index=True)
+        src, dst = src[keep], dst[keep]
+        if w is not None:
+            w = w[keep]
+        if et is not None:
+            et = et[keep]
+
+    # Sort edges by (src, type, dst) for contiguous, ordered neighbor lists.
+    if sort_neighbors and src.size:
+        t = et if et is not None else np.zeros_like(src)
+        order = np.lexsort((dst, t, src))
+        src, dst = src[order], dst[order]
+        if w is not None:
+            w = w[order]
+        if et is not None:
+            et = et[order]
+
+    deg = np.bincount(src, minlength=num_vertices).astype(np.int64)
+    row_ptr = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.cumsum(deg, out=row_ptr[1:])
+
+    type_offsets = None
+    if et is not None and num_edge_types > 0:
+        # Per-vertex, per-type counts -> prefix offsets within each segment.
+        counts = np.zeros((num_vertices, num_edge_types), dtype=np.int64)
+        np.add.at(counts, (src, et), 1)
+        type_offsets = np.zeros((num_vertices, num_edge_types + 1), dtype=np.int32)
+        np.cumsum(counts, axis=1, out=type_offsets[:, 1:])
+
+    max_degree = int(deg.max()) if deg.size else 0
+    g = CSRGraph(  # noqa: call matches registered dataclass fields
+        alias_prob=None,
+        alias_idx=None,
+        row_ptr=jnp.asarray(row_ptr, dtype=jnp.int32),
+        col=jnp.asarray(dst, dtype=jnp.int32),
+        weights=None if w is None else jnp.asarray(w),
+        edge_type=None if et is None else jnp.asarray(et),
+        type_offsets=None if type_offsets is None else jnp.asarray(type_offsets),
+        num_vertices=int(num_vertices),
+        num_edges=int(src.size),
+        max_degree=max_degree,
+        num_edge_types=int(num_edge_types),
+    )
+    return g
+
+
+def degrees(g: CSRGraph) -> jnp.ndarray:
+    return g.row_ptr[1:] - g.row_ptr[:-1]
+
+
+def row_access(g: CSRGraph, v: jnp.ndarray):
+    """Paper Alg II.1 line 5: {addr, deg} = row_access(v).
+
+    Out-of-range v (inactive slot sentinel) maps to degree 0.
+    """
+    v_safe = jnp.clip(v, 0, g.num_vertices - 1)
+    addr = g.row_ptr[v_safe]
+    deg = g.row_ptr[v_safe + 1] - addr
+    deg = jnp.where((v >= 0) & (v < g.num_vertices), deg, 0)
+    return addr, deg
+
+
+def column_access(g: CSRGraph, addr: jnp.ndarray, index: jnp.ndarray) -> jnp.ndarray:
+    """Paper Alg II.1 line 7: v_next = col[addr + index] (clipped gather)."""
+    e = jnp.clip(addr + index, 0, max(g.num_edges - 1, 0))
+    return g.col[e]
+
+
+def validate_csr(g: CSRGraph) -> None:
+    rp = np.asarray(g.row_ptr)
+    col = np.asarray(g.col)
+    assert rp.shape == (g.num_vertices + 1,)
+    assert rp[0] == 0 and rp[-1] == g.num_edges
+    assert np.all(np.diff(rp) >= 0), "row_ptr must be monotone"
+    if g.num_edges:
+        assert col.min() >= 0 and col.max() < g.num_vertices
+    if g.typed and g.type_offsets is not None:
+        to = np.asarray(g.type_offsets)
+        deg = np.diff(rp)
+        assert np.all(to[:, -1] == deg), "type offsets must cover each segment"

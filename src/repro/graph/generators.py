@@ -1,0 +1,65 @@
+"""Synthetic graph generators (paper §VIII-C2 uses RMAT balanced + Graph500).
+
+All generators are deterministic given a seed and produce numpy edge arrays
+for ``build_csr``.  The RMAT generator is fully vectorized: each of the
+``scale`` address bits of (src, dst) is drawn for all edges at once.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# RMAT initiator matrices from the paper: balanced and Graph500 (§VIII-C2).
+BALANCED = (0.25, 0.25, 0.25, 0.25)
+GRAPH500 = (0.57, 0.19, 0.19, 0.05)
+
+
+def rmat_edges(
+    scale: int,
+    edge_factor: int,
+    initiator=GRAPH500,
+    seed: int = 0,
+    undirected: bool = False,
+) -> tuple[np.ndarray, int]:
+    """Generate RMAT edges. Returns (edges (E,2) int64, num_vertices)."""
+    a, b, c, d = initiator
+    assert abs(a + b + c + d - 1.0) < 1e-6
+    n = 1 << scale
+    m = n * edge_factor
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for bit in range(scale):
+        r = rng.random(m)
+        # Quadrant choice: P(src_bit=0,dst_bit=0)=a, (0,1)=b, (1,0)=c, (1,1)=d
+        src_bit = (r >= a + b).astype(np.int64)
+        dst_bit = ((r >= a) & (r < a + b) | (r >= a + b + c)).astype(np.int64)
+        src = (src << 1) | src_bit
+        dst = (dst << 1) | dst_bit
+    edges = np.stack([src, dst], axis=1)
+    if undirected:
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    return edges, n
+
+
+def erdos_renyi_edges(num_vertices: int, num_edges: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, num_vertices, size=num_edges)
+    dst = rng.integers(0, num_vertices, size=num_edges)
+    return np.stack([src, dst], axis=1).astype(np.int64)
+
+
+def power_law_edges(num_vertices: int, num_edges: int, alpha: float = 1.5,
+                    seed: int = 0) -> np.ndarray:
+    """Directed power-law out-degree graph (Zipf-distributed destinations)."""
+    rng = np.random.default_rng(seed)
+    # Zipf ranks for dst create hubs; src uniform.
+    ranks = rng.zipf(alpha, size=num_edges)
+    dst = (ranks - 1) % num_vertices
+    src = rng.integers(0, num_vertices, size=num_edges)
+    return np.stack([src, dst], axis=1).astype(np.int64)
+
+
+def dangling_fraction(edges: np.ndarray, num_vertices: int) -> float:
+    """Fraction of vertices with no outgoing edge (early-termination drivers)."""
+    deg = np.bincount(edges[:, 0], minlength=num_vertices)
+    return float((deg == 0).mean())

@@ -1,0 +1,72 @@
+"""Fanout neighbor sampler for GNN minibatch training (``minibatch_lg``).
+
+GraphSAGE-style k-hop sampling with replacement, built on the same
+stateless-sampling substrate as the walk engine: the sample for (node,
+hop, slot) is a pure function of (seed, node, hop, slot), so sampling is
+deterministic, restartable, and shardable — one-hop fanout sampling *is*
+a width-``fanout`` bundle of one-step random walks (DESIGN.md §4).
+
+Produces fixed-shape padded blocks: per layer an edge list
+(2, n_src·fanout) where sampled duplicates are real (with-replacement
+semantics, standard GraphSAGE) and zero-degree sources self-loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as task_rng
+from repro.graph.csr import CSRGraph, row_access
+
+
+class SampledBlock(NamedTuple):
+    """One message-passing layer's sampled bipartite block."""
+    edge_index: jnp.ndarray   # (2, E) [src_global, dst_global]
+    num_src: int
+    num_dst: int
+
+
+def sample_neighbors(graph: CSRGraph, nodes: jnp.ndarray, fanout: int,
+                     base_key, hop: int) -> jnp.ndarray:
+    """(n,) nodes -> (n, fanout) sampled neighbor ids (self-loop if deg=0)."""
+    addr, deg = row_access(graph, nodes)
+    u = task_rng.task_uniforms(base_key, nodes, jnp.full_like(nodes, hop),
+                               fanout, salt=3)
+    idx = jnp.minimum((u * deg[:, None]).astype(jnp.int32),
+                      jnp.maximum(deg - 1, 0)[:, None])
+    e = jnp.clip(addr[:, None] + idx, 0, max(graph.num_edges - 1, 0))
+    nbrs = graph.col[e]
+    return jnp.where(deg[:, None] > 0, nbrs, nodes[:, None])
+
+
+def sample_blocks(graph: CSRGraph, seeds: jnp.ndarray,
+                  fanouts: Sequence[int], seed: int = 0
+                  ) -> Tuple[list, jnp.ndarray]:
+    """k-hop fanout sampling. Returns (blocks outer-to-inner, all_nodes).
+
+    blocks[i].edge_index holds (neighbor -> frontier) edges for hop i;
+    message passing runs inner-to-outer (reverse order).
+    """
+    base_key = jax.random.PRNGKey(seed)
+    frontier = jnp.asarray(seeds, jnp.int32)
+    blocks = []
+    all_nodes = [frontier]
+    for h, f in enumerate(fanouts):
+        nbrs = sample_neighbors(graph, frontier, f, base_key, h)  # (n, f)
+        src = nbrs.reshape(-1)
+        dst = jnp.repeat(frontier, f)
+        blocks.append(SampledBlock(
+            edge_index=jnp.stack([src, dst]),
+            num_src=int(src.shape[0]),
+            num_dst=int(frontier.shape[0])))
+        frontier = src
+        all_nodes.append(frontier)
+    return blocks, jnp.concatenate(all_nodes)
+
+
+def block_union_graph(blocks) -> jnp.ndarray:
+    """Concatenate all block edges into one (2, ΣE) edge list (the padded
+    union graph the dry-run cells lower)."""
+    return jnp.concatenate([b.edge_index for b in blocks], axis=1)

@@ -1,0 +1,32 @@
+"""Jitted wrapper for the fused embedding-bag kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import embedding_bag as _k
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@partial(jax.jit, static_argnames=("tile_b", "interpret", "use_kernel"))
+def embedding_bag(indices, table, weights=None, tile_b: int = 128,
+                  interpret: bool = True, use_kernel: bool = True):
+    """EmbeddingBag: (B, H) int32 indices (pad -1), (R, D) table ->
+    (B, D) weighted bag sums."""
+    B, H = indices.shape
+    if weights is None:
+        weights = jnp.ones((B, H), table.dtype)
+    if not use_kernel:
+        return embedding_bag_ref(indices, weights, table)
+    tb = min(tile_b, B)
+    Bp = -(-B // tb) * tb
+    if Bp != B:
+        pad = Bp - B
+        indices = jnp.concatenate(
+            [indices, jnp.full((pad, H), -1, indices.dtype)])
+        weights = jnp.concatenate([weights, jnp.zeros((pad, H), weights.dtype)])
+    out = _k.embedding_bag(indices, weights, table, tile_b=tb,
+                           interpret=interpret)
+    return out[:B]

@@ -1,0 +1,9 @@
+"""Oracle: take + masked weighted sum (the jnp EmbeddingBag)."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(indices, weights, table):
+    safe = jnp.clip(indices, 0, table.shape[0] - 1)
+    rows = table[safe]                                  # (B, H, D)
+    w = jnp.where(indices >= 0, weights, 0.0)[..., None]
+    return jnp.sum(rows * w, axis=1)

@@ -1,0 +1,1 @@
+from repro.kernels.segment_sum.ops import segment_sum, SegmentSumOp

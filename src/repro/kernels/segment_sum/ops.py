@@ -1,0 +1,51 @@
+"""Public wrapper for the tiled segment-sum kernel.
+
+For static graphs the tiling plan (host-side numpy over the sorted segment
+ids) is computed once and reused every step; `SegmentSumOp` caches it.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_sum import segment_sum as _k
+from repro.kernels.segment_sum.ref import segment_sum_ref
+
+
+class SegmentSumOp:
+    """Pre-planned segment sum for a fixed (sorted) segment-id vector."""
+
+    def __init__(self, segment_ids: np.ndarray, num_segments: int,
+                 tile_e: int = 256, row_block: int = 128,
+                 interpret: bool = True, use_kernel: bool = True):
+        seg = np.asarray(segment_ids)
+        assert (np.diff(seg) >= 0).all(), "segment_ids must be sorted"
+        self.num_segments = int(num_segments)
+        self.tile_e = tile_e
+        self.row_block = row_block
+        self.interpret = interpret
+        self.use_kernel = use_kernel
+        self.seg = jnp.asarray(seg, jnp.int32)
+        self.plan = _k.plan_tiles(seg, self.num_segments, tile_e, row_block)
+
+    def __call__(self, data: jnp.ndarray) -> jnp.ndarray:
+        if not self.use_kernel:
+            return segment_sum_ref(data, self.seg, self.num_segments)
+        return _k.segment_sum_sorted(
+            data, self.seg, self.num_segments, self.plan,
+            tile_e=self.tile_e, row_block=self.row_block,
+            interpret=self.interpret)
+
+
+def segment_sum(data, segment_ids, num_segments: int, *, tile_e: int = 256,
+                row_block: int = 128, interpret: bool = True):
+    """One-shot convenience API (sorts edges if unsorted)."""
+    seg = np.asarray(segment_ids)
+    order = None
+    if not (np.diff(seg) >= 0).all():
+        order = np.argsort(seg, kind="stable")
+        seg = seg[order]
+        data = data[jnp.asarray(order)]
+    op = SegmentSumOp(seg, num_segments, tile_e, row_block, interpret)
+    return op(data)

@@ -1,0 +1,6 @@
+"""Oracle: jax.ops.segment_sum."""
+import jax
+
+
+def segment_sum_ref(data, segment_ids, num_segments: int):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)

@@ -1,0 +1,123 @@
+"""Tiled MXU-friendly segment-sum Pallas TPU kernel (GNN message scatter).
+
+The GNN message-passing hot path is ``out[s] += data[e]`` over an
+edge-index sorted by destination segment.  The TPU-native formulation
+turns the scatter into a sequence of small one-hot matmuls (MXU work)
+instead of per-row dynamic stores:
+
+  * edges are tiled (``TILE_E``); destination rows are tiled (``ROW_BLOCK``);
+  * per edge tile, only the row blocks its segment range touches are
+    visited (host precomputes lo/hi block per tile → scalar prefetch, so
+    the output BlockSpec ``index_map`` is data-dependent);
+  * partial = one_hot(seg - r·RB) @ data_tile — an (RB × TILE_E)·(TILE_E × D)
+    matmul per visited block;
+  * because segments are sorted, the visited output-block sequence is
+    monotone nondecreasing → revisits are always consecutive (the Pallas
+    TPU requirement for output revisiting); ``first_visit`` flags select
+    init-vs-accumulate.
+
+Empty row blocks (no incident edges) are never visited; the wrapper masks
+them to zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(row_block, tile_e,
+            lo_ref, hi_ref, first_ref,  # scalar-prefetch
+            seg_ref, dat_ref, out_ref):
+    t = pl.program_id(0)
+    l = pl.program_id(1)
+    r = jnp.minimum(lo_ref[t] + l, hi_ref[t])
+    live = (lo_ref[t] + l) <= hi_ref[t]
+    seg = seg_ref[...]
+    oh = (seg[None, :] - r * row_block ==
+          jax.lax.broadcasted_iota(jnp.int32, (row_block, tile_e), 0))
+    partial = oh.astype(dat_ref.dtype) @ dat_ref[...]
+
+    @pl.when(first_ref[t, l] == 1)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(live)
+    def _():
+        out_ref[...] += partial
+
+
+def plan_tiles(seg_sorted: np.ndarray, num_segments: int, tile_e: int,
+               row_block: int):
+    """Host-side tiling plan: per-edge-tile touched row-block range,
+    first-visit flags, and row coverage mask."""
+    E = seg_sorted.shape[0]
+    Ep = -(-E // tile_e) * tile_e
+    segp = np.concatenate([seg_sorted,
+                           np.full(Ep - E, num_segments, np.int64)])
+    # Padding edges point at a sentinel segment; give them the last real
+    # tile's block so they stay monotone and write nothing (mask below).
+    T = Ep // tile_e
+    tiles = segp.reshape(T, tile_e)
+    lo = np.minimum(tiles[:, 0], num_segments - 1) // row_block
+    hi = np.minimum(tiles[:, -1], num_segments - 1) // row_block
+    hi = np.maximum(hi, lo)
+    L = int((hi - lo).max()) + 1 if T else 1
+    first = np.zeros((T, L), np.int32)
+    seen = -1
+    for t in range(T):
+        for l in range(L):
+            r = lo[t] + l
+            if r <= hi[t] and r > seen:
+                seen = r
+                first[t, l] = 1
+    n_blocks = -(-num_segments // row_block)
+    covered = np.zeros(n_blocks, bool)
+    for t in range(T):
+        covered[lo[t]:hi[t] + 1] = True
+    return (lo.astype(np.int32), hi.astype(np.int32), first,
+            covered, T, L, Ep)
+
+
+def segment_sum_sorted(data, seg_sorted, num_segments: int, plan,
+                       *, tile_e: int = 256, row_block: int = 128,
+                       interpret: bool = True):
+    """Segment-sum of ``data`` (E, D) by sorted ``seg_sorted`` (E,).
+
+    ``plan`` comes from `plan_tiles` (host-side, reusable across steps for
+    a static graph)."""
+    lo, hi, first, covered, T, L, Ep = plan
+    E, D = data.shape
+    if Ep != E:
+        pad = Ep - E
+        data = jnp.concatenate([data, jnp.zeros((pad, D), data.dtype)])
+        seg_sorted = jnp.concatenate(
+            [seg_sorted, jnp.full((pad,), num_segments, seg_sorted.dtype)])
+    n_blocks = -(-num_segments // row_block)
+    Vp = n_blocks * row_block
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T, L),
+        in_specs=[
+            pl.BlockSpec((tile_e,), lambda t, l, lo, hi, fi: (t,)),
+            pl.BlockSpec((tile_e, D), lambda t, l, lo, hi, fi: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (row_block, D),
+            lambda t, l, lo, hi, fi: (jnp.minimum(lo[t] + l, hi[t]), 0)),
+    )
+    kernel = functools.partial(_kernel, row_block, tile_e)
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Vp, D), data.dtype),
+        interpret=interpret,
+    )(jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(first),
+      seg_sorted.astype(jnp.int32), data)
+    mask = jnp.repeat(jnp.asarray(covered), row_block)[:Vp, None]
+    out = jnp.where(mask, out, 0)
+    return out[:num_segments]

@@ -1,0 +1,53 @@
+"""Jitted public wrappers for the fused walk-step kernel.
+
+Pads the lane count to a tile multiple, dispatches to the Pallas kernel
+(TPU target; ``interpret=True`` executes the kernel body on CPU for
+validation), and exposes a jnp fallback for platforms without Pallas.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.walk_step import walk_step as _k
+from repro.kernels.walk_step import ref as _ref
+
+
+def _pad_to(x, n, fill):
+    w = x.shape[0]
+    if w == n:
+        return x
+    return jnp.concatenate([x, jnp.full((n - w,), fill, x.dtype)])
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret", "use_kernel"))
+def walk_step_uniform(v_curr, u_col, row_ptr, col, tile: int = 256,
+                      interpret: bool = True, use_kernel: bool = True):
+    if not use_kernel:
+        return _ref.walk_step_uniform_ref(v_curr, u_col, row_ptr, col)
+    W = v_curr.shape[0]
+    t = min(tile, W)
+    Wp = -(-W // t) * t
+    vn, dg = _k.walk_step_uniform(
+        _pad_to(v_curr, Wp, 0), _pad_to(u_col, Wp, 0.0), row_ptr, col,
+        tile=t, interpret=interpret)
+    return vn[:W], dg[:W]
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret", "use_kernel"))
+def walk_step_alias(v_curr, u_col, u_acc, row_ptr, col, alias_prob, alias_idx,
+                    tile: int = 256, interpret: bool = True,
+                    use_kernel: bool = True):
+    if not use_kernel:
+        return _ref.walk_step_alias_ref(v_curr, u_col, u_acc, row_ptr, col,
+                                        alias_prob, alias_idx)
+    W = v_curr.shape[0]
+    t = min(tile, W)
+    Wp = -(-W // t) * t
+    vn, dg = _k.walk_step_alias(
+        _pad_to(v_curr, Wp, 0), _pad_to(u_col, Wp, 0.0),
+        _pad_to(u_acc, Wp, 0.0), row_ptr, col, alias_prob, alias_idx,
+        tile=t, interpret=interpret)
+    return vn[:W], dg[:W]

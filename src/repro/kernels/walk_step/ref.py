@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused walk-step kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _uniform_index(deg, u):
+    idx = jnp.floor(u * deg.astype(jnp.float32)).astype(jnp.int32)
+    return jnp.clip(idx, 0, jnp.maximum(deg - 1, 0))
+
+
+def walk_step_uniform_ref(v_curr, u_col, row_ptr, col):
+    nv = row_ptr.shape[0] - 1
+    v = jnp.clip(v_curr, 0, nv - 1)
+    addr = row_ptr[v]
+    deg = row_ptr[v + 1] - addr
+    idx = _uniform_index(deg, u_col)
+    e = jnp.clip(addr + idx, 0, col.shape[0] - 1)
+    v_next = jnp.where(deg > 0, col[e], -1)
+    return v_next, deg
+
+
+def walk_step_alias_ref(v_curr, u_col, u_acc, row_ptr, col, alias_prob,
+                        alias_idx):
+    nv = row_ptr.shape[0] - 1
+    v = jnp.clip(v_curr, 0, nv - 1)
+    addr = row_ptr[v]
+    deg = row_ptr[v + 1] - addr
+    k = _uniform_index(deg, u_col)
+    ek = jnp.clip(addr + k, 0, col.shape[0] - 1)
+    accept = u_acc < alias_prob[ek]
+    idx = jnp.where(accept, k, alias_idx[ek])
+    e = jnp.clip(addr + idx, 0, col.shape[0] - 1)
+    v_next = jnp.where(deg > 0, col[e], -1)
+    return v_next, deg

@@ -1,0 +1,207 @@
+"""Fused walk-step Pallas TPU kernel — the paper's asynchronous pipeline
+(§V-B) as one kernel: Row Access → Sampling → Column Access.
+
+TPU adaptation of the asynchronous memory-access engine:
+  * ``row_ptr`` / ``col`` (and alias tables) live in HBM (`pl.ANY`); the
+    kernel issues **double-buffered async DMAs** per task — the copy for
+    task *i+1* is in flight while task *i* is processed, which is exactly
+    the paper's non-blocking outstanding-request scheme (scaled to the
+    DMA depth Pallas exposes; the FPGA engine keeps 128 in flight, a TPU
+    core hides latency with the same overlap via its DMA queues).
+  * Row access loads ``row_ptr[v]`` and ``row_ptr[v+1]`` in ONE 2-element
+    DMA (the paper's RP_entry packs address+degree in one word).
+  * Sampling arithmetic (uniform or alias) runs on scalars in SMEM between
+    the two gather stages, so intermediates never round-trip to HBM.
+  * Task words (v_curr, uniforms) are staged in SMEM — the analogue of the
+    single-pipeline-word task tuple of §V-A.
+
+Grid: one program per tile of ``TILE`` walker lanes; lanes are fully
+independent (stateless tasks), so tiles can execute in any order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _row_access_loop(n, v_ref, rp_ref, rpbuf, rpsem, num_vertices,
+                     on_result):
+    """Double-buffered 2-element DMA loop over lanes: rpbuf[slot] gets
+    (row_ptr[v], row_ptr[v+1]). Calls on_result(i, addr, deg)."""
+
+    def copy(i, slot):
+        vv = jnp.clip(v_ref[i], 0, num_vertices - 1)
+        return pltpu.make_async_copy(rp_ref.at[pl.ds(vv, 2)],
+                                     rpbuf.at[slot], rpsem.at[slot])
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < n)
+        def _():
+            copy(i + 1, jax.lax.rem(i + 1, 2)).start()
+
+        copy(i, slot).wait()
+        addr = rpbuf[slot, 0]
+        deg = rpbuf[slot, 1] - rpbuf[slot, 0]
+        on_result(i, addr, deg)
+        return 0
+
+    copy(0, 0).start()
+    jax.lax.fori_loop(0, n, body, 0, unroll=False)
+
+
+def _gather1_loop(n, e_ref, src_ref, buf, sem, num_entries, on_result):
+    """Double-buffered 1-element DMA gather: buf[slot] = src[e_ref[i]]."""
+
+    def copy(i, slot):
+        e = jnp.clip(e_ref[i], 0, num_entries - 1)
+        return pltpu.make_async_copy(src_ref.at[pl.ds(e, 1)],
+                                     buf.at[slot], sem.at[slot])
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < n)
+        def _():
+            copy(i + 1, jax.lax.rem(i + 1, 2)).start()
+
+        copy(i, slot).wait()
+        on_result(i, buf[slot, 0])
+        return 0
+
+    copy(0, 0).start()
+    jax.lax.fori_loop(0, n, body, 0, unroll=False)
+
+
+def _uniform_index(deg, u):
+    idx = jnp.floor(u * deg.astype(jnp.float32)).astype(jnp.int32)
+    return jnp.clip(idx, 0, jnp.maximum(deg - 1, 0))
+
+
+def walk_step_uniform_kernel(num_vertices, num_edges,
+                             v_ref, ucol_ref,          # SMEM tiles
+                             rp_ref, col_ref,          # ANY (HBM)
+                             vnext_ref, deg_ref,       # SMEM outputs
+                             addr_scr, idx_scr, rpbuf, colbuf,
+                             rpsem, colsem):
+    n = v_ref.shape[0]
+
+    def on_row(i, addr, deg):
+        addr_scr[i] = addr
+        deg_ref[i] = deg
+        idx_scr[i] = addr + _uniform_index(deg, ucol_ref[i])
+
+    _row_access_loop(n, v_ref, rp_ref, rpbuf, rpsem, num_vertices, on_row)
+
+    def on_col(i, v):
+        vnext_ref[i] = jnp.where(deg_ref[i] > 0, v, -1)
+
+    _gather1_loop(n, idx_scr, col_ref, colbuf, colsem, num_edges, on_col)
+
+
+def walk_step_alias_kernel(num_vertices, num_edges,
+                           v_ref, ucol_ref, uacc_ref,
+                           rp_ref, col_ref, prob_ref, alias_ref,
+                           vnext_ref, deg_ref,
+                           addr_scr, k_scr, idx_scr,
+                           rpbuf, probbuf, aliasbuf, colbuf,
+                           rpsem, probsem, aliassem, colsem):
+    """Alias-table variant (DeepWalk): column draw k, accept test against
+    prob[addr+k], fall back to alias[addr+k]. Two extra gathers."""
+    n = v_ref.shape[0]
+
+    def on_row(i, addr, deg):
+        addr_scr[i] = addr
+        deg_ref[i] = deg
+        k_scr[i] = addr + _uniform_index(deg, ucol_ref[i])
+
+    _row_access_loop(n, v_ref, rp_ref, rpbuf, rpsem, num_vertices, on_row)
+
+    def on_prob(i, p):
+        # accept -> keep k; reject -> need alias[addr+k] (resolved below)
+        idx_scr[i] = jnp.where(uacc_ref[i] < p, k_scr[i], -1)
+
+    _gather1_loop(n, k_scr, prob_ref, probbuf, probsem, num_edges, on_prob)
+
+    def on_alias(i, a):
+        addr = addr_scr[i]
+        take_alias = idx_scr[i] < 0
+        idx_scr[i] = jnp.where(take_alias, addr + a, idx_scr[i])
+
+    _gather1_loop(n, k_scr, alias_ref, aliasbuf, aliassem, num_edges, on_alias)
+
+    def on_col(i, v):
+        vnext_ref[i] = jnp.where(deg_ref[i] > 0, v, -1)
+
+    _gather1_loop(n, idx_scr, col_ref, colbuf, colsem, num_edges, on_col)
+
+
+def _smem_tile(tile):
+    return pl.BlockSpec((tile,), lambda t: (t,), memory_space=pltpu.SMEM)
+
+
+def walk_step_uniform(v_curr, u_col, row_ptr, col, *, tile: int = 256,
+                      interpret: bool = True):
+    """pallas_call wrapper: (v_next, deg) for a batch of walker lanes."""
+    W = v_curr.shape[0]
+    tile = min(tile, W)
+    assert W % tile == 0, (W, tile)
+    nv = row_ptr.shape[0] - 1
+    ne = col.shape[0]
+    kernel = functools.partial(walk_step_uniform_kernel, nv, ne)
+    return pl.pallas_call(
+        kernel,
+        grid=(W // tile,),
+        in_specs=[_smem_tile(tile), _smem_tile(tile),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=[_smem_tile(tile), _smem_tile(tile)],
+        out_shape=[jax.ShapeDtypeStruct((W,), jnp.int32),
+                   jax.ShapeDtypeStruct((W,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((tile,), jnp.int32),
+                        pltpu.SMEM((tile,), jnp.int32),
+                        pltpu.SMEM((2, 2), jnp.int32),
+                        pltpu.SMEM((2, 1), jnp.int32),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,))],
+        interpret=interpret,
+    )(v_curr, u_col, row_ptr, col)
+
+
+def walk_step_alias(v_curr, u_col, u_acc, row_ptr, col, alias_prob, alias_idx,
+                    *, tile: int = 256, interpret: bool = True):
+    W = v_curr.shape[0]
+    tile = min(tile, W)
+    assert W % tile == 0, (W, tile)
+    nv = row_ptr.shape[0] - 1
+    ne = col.shape[0]
+    kernel = functools.partial(walk_step_alias_kernel, nv, ne)
+    return pl.pallas_call(
+        kernel,
+        grid=(W // tile,),
+        in_specs=[_smem_tile(tile), _smem_tile(tile), _smem_tile(tile),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=[_smem_tile(tile), _smem_tile(tile)],
+        out_shape=[jax.ShapeDtypeStruct((W,), jnp.int32),
+                   jax.ShapeDtypeStruct((W,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((tile,), jnp.int32),
+                        pltpu.SMEM((tile,), jnp.int32),
+                        pltpu.SMEM((tile,), jnp.int32),
+                        pltpu.SMEM((2, 2), jnp.int32),
+                        pltpu.SMEM((2, 1), jnp.float32),
+                        pltpu.SMEM((2, 1), jnp.int32),
+                        pltpu.SMEM((2, 1), jnp.int32),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,))],
+        interpret=interpret,
+    )(v_curr, u_col, u_acc, row_ptr, col, alias_prob, alias_idx)

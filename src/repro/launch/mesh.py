@@ -1,0 +1,30 @@
+"""Production mesh construction (MULTI-POD DRY-RUN spec).
+
+Defined as functions so importing this module never touches jax device
+state.  The single-pod mesh is 16×16 = 256 chips (paper analogue: the
+32-HBM-channel U55C scaled to a pod); multi-pod adds a leading ``pod``
+axis (2 pods = 512 chips)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def flat_axes(multi_pod: bool):
+    """All mesh axes — used to shard graph/recsys bulk dims over every chip."""
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+# TPU v5e-class hardware constants for the roofline (§ROOFLINE ANALYSIS).
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link

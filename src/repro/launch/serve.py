@@ -1,0 +1,130 @@
+"""LM serving driver with zero-bubble continuous batching.
+
+The paper's scheduler, applied beyond-paper (DESIGN.md §4): decode slots
+are lanes; a finished sequence frees its lane, which is refilled from the
+pending-request queue by the same prefix-sum compaction the walk engine
+uses.  Bubble ratio (idle-lane-steps / lane-steps) is reported — the
+serving analogue of Fig. 11.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek_7b \
+      --requests 64 --slots 8 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class ServeStats:
+    lane_steps: int = 0
+    busy_steps: int = 0
+    completed: int = 0
+    decode_steps: int = 0
+
+    @property
+    def bubble_ratio(self):
+        return 1.0 - self.busy_steps / max(self.lane_steps, 1)
+
+
+def continuous_batching_loop(params, cfg, requests, num_slots: int,
+                             max_new: int, cache_cap: int, seed: int = 0):
+    """requests: list of (prompt array). Greedy decode, slot refill."""
+    stats = ServeStats()
+    key = jax.random.PRNGKey(seed)
+
+    decode = jax.jit(lambda p, t, c, l: tfm.decode_step(p, t, c, l, cfg))
+
+    # Lane state (host-managed; device state is the batched KV cache).
+    caches = tfm.make_kv_cache(cfg, num_slots, cache_cap, jnp.float32)
+    cur_tok = jnp.zeros((num_slots, 1), jnp.int32)
+    lens = np.zeros(num_slots, np.int32)          # per-lane position
+    remaining = np.zeros(num_slots, np.int32)     # tokens left to emit
+    active = np.zeros(num_slots, bool)
+    outputs = [[] for _ in range(num_slots)]
+    results = []
+    queue = list(enumerate(requests))
+    qhead = 0
+
+    def refill():
+        nonlocal qhead, cur_tok, caches
+        for lane in range(num_slots):
+            if not active[lane] and qhead < len(queue):
+                rid, prompt = queue[qhead]
+                qhead += 1
+                # prefill this lane (single-request prefill)
+                logits, kv = tfm.prefill(params, prompt[None, :], cfg)
+                S = prompt.shape[0]
+                # kv: (L, 2, 1, S, H, D) -> write into lane cache
+                caches = caches.at[:, :, lane:lane + 1, :S].set(
+                    kv.astype(caches.dtype))
+                nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+                cur_tok = cur_tok.at[lane, 0].set(nxt)
+                lens[lane] = S
+                remaining[lane] = max_new
+                active[lane] = True
+                outputs[lane] = [int(nxt)]
+
+    refill()
+    while active.any():
+        stats.lane_steps += num_slots
+        stats.busy_steps += int(active.sum())
+        stats.decode_steps += 1
+        # NOTE: single cache_len per call requires equal lane positions in
+        # this simplified host loop; we step lanes at their own position by
+        # taking the max and masking — for the demo all prompts share length.
+        pos = int(lens[active].max())
+        logits, caches = decode(params, cur_tok, caches, jnp.asarray(pos))
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        cur_tok = nxt[:, None]
+        for lane in range(num_slots):
+            if not active[lane]:
+                continue
+            outputs[lane].append(int(nxt[lane]))
+            lens[lane] += 1
+            remaining[lane] -= 1
+            if remaining[lane] <= 0 or lens[lane] >= cache_cap - 1:
+                results.append(outputs[lane])
+                stats.completed += 1
+                active[lane] = False
+        refill()
+    return results, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek_7b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    args = ap.parse_args()
+
+    mod = get_arch(args.arch)
+    assert mod.FAMILY == "lm", "serving is for LM archs"
+    cfg = dataclasses.replace(mod.SMOKE, dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(key, cfg)
+    rng = np.random.default_rng(0)
+    reqs = [jnp.asarray(rng.integers(0, cfg.vocab, args.prompt_len),
+                        jnp.int32) for _ in range(args.requests)]
+    t0 = time.time()
+    results, stats = continuous_batching_loop(
+        params, cfg, reqs, args.slots, args.max_new,
+        cache_cap=args.prompt_len + args.max_new + 2)
+    dt = time.time() - t0
+    print(f"completed={stats.completed} decode_steps={stats.decode_steps} "
+          f"bubble_ratio={stats.bubble_ratio:.3f} time={dt:.1f}s")
+    print("sample output:", results[0][:8])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,337 @@
+"""Per-(arch × shape × mesh) step functions + ShapeDtypeStruct inputs.
+
+``build_cell`` returns (fn, args_structs, donate_argnums) where every
+struct carries a NamedSharding — ``jax.jit(fn).lower(*args)`` then
+compiles the full production-sharded program without allocating anything
+(the shannon/kernels stand-in pattern).
+
+Bulk dims that must divide the mesh are padded up (recorded in the cell
+metadata) — the launcher does the same padding for real data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeCell
+from repro.launch.mesh import dp_axes, flat_axes
+from repro.optim import adamw
+from repro.models import transformer as tfm
+
+
+def _pad_up(n: int, div: int) -> int:
+    return -(-n // div) * div
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _with_shardings(struct_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda s, p: _sds(s.shape, s.dtype, mesh, p), struct_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def zero_spec(spec: P, shape, axis: str = "data", div: int = 16) -> P:
+    """ZeRO-style optimizer-state sharding: add the data axis on the first
+    unsharded, divisible dim (optimizer state must never be replicated
+    across data-parallel replicas at this scale)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, d) in enumerate(zip(entries, shape)):
+        if e is None and d % div == 0 and d >= div:
+            entries[i] = axis
+            break
+    return P(*entries)
+
+
+def _opt_specs(pspecs, pstruct):
+    mu = jax.tree.map(lambda sp, st: zero_spec(sp, st.shape), pspecs, pstruct)
+    return adamw.AdamWState(step=P(), mu=mu, nu=mu)
+
+
+# ------------------------------- LM ---------------------------------------
+
+def _lm_cell(mod, cell: ShapeCell, mesh, multi_pod: bool):
+    cfg: tfm.TransformerConfig = mod.FULL
+    dp = dp_axes(multi_pod)
+    dpP = dp if len(dp) > 1 else dp[0]
+    seq, gb = cell.dims["seq_len"], cell.dims["global_batch"]
+    pspecs = tfm.param_specs(cfg)
+    pstruct = jax.eval_shape(partial(tfm.init_params, cfg=cfg),
+                             jax.random.PRNGKey(0))
+    params = _with_shardings(pstruct, pspecs, mesh)
+    meta = {"params": int(sum(np.prod(l.shape) for l in
+                              jax.tree.leaves(pstruct)))}
+
+    if cell.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        ostruct = jax.eval_shape(adamw.init_state, pstruct)
+        ospecs = _opt_specs(pspecs, pstruct)
+        opt = _with_shardings(ostruct, ospecs, mesh)
+        tok_spec = P(dpP, None)
+        toks = _sds((gb, seq), jnp.int32, mesh, tok_spec)
+
+        def step(params, opt_state, tokens, labels):
+            loss, grads = jax.value_and_grad(tfm.train_loss)(
+                params, tokens, labels, cfg)
+            params, opt_state, _ = adamw.apply_updates(
+                params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        return step, (params, opt, toks, toks), (0, 1), meta
+
+    if cell.kind == "prefill":
+        toks = _sds((gb, seq), jnp.int32, mesh, P(dpP, None))
+
+        def step(params, tokens):
+            return tfm.prefill(params, tokens, cfg)
+
+        return step, (params, toks), (), meta
+
+    # decode: one new token against a seq_len KV cache
+    bsz = gb
+    cache_shape = (cfg.n_layers, 2, bsz, seq, cfg.n_kv_heads, cfg.d_head)
+    dhead_mode = getattr(cfg, "decode_cache_shard", "seq") == "dhead"
+    if bsz == 1:
+        # long-context: sequence-shard the cache over every mesh axis
+        cache_spec = P(None, None, None, flat_axes(multi_pod), None, None)
+        tok_spec = P(None, None)
+    elif dhead_mode:
+        cache_spec = P(None, None, dpP, None, None, "model")
+        tok_spec = P(dpP, None)
+    else:
+        cache_spec = P(None, None, dpP, "model", None, None)
+        tok_spec = P(dpP, None)
+    caches = _sds(cache_shape, cfg.dtype, mesh, cache_spec)
+    token = _sds((bsz, 1), jnp.int32, mesh, tok_spec)
+    clen = _sds((), jnp.int32, mesh, P())
+
+    def step(params, token, caches, cache_len):
+        return tfm.decode_step(params, token, caches, cache_len, cfg)
+
+    return step, (params, token, caches, clen), (2,), meta
+
+
+# ------------------------------- GNN --------------------------------------
+
+def _gnn_batch_structs(arch: str, cell: ShapeCell, mesh, multi_pod: bool):
+    fa = flat_axes(multi_pod)
+    nchips = int(np.prod([mesh.shape[a] for a in fa]))
+    d = dict(cell.dims)
+    if cell.name == "minibatch_lg":
+        seeds = d["batch_nodes"]
+        f1, f2 = d["fanout"]
+        n_nodes = seeds + seeds * f1 + seeds * f1 * f2
+        n_edges = seeds * f1 + seeds * f1 * f2
+        d_feat = 602  # Reddit-like
+    elif cell.name == "molecule":
+        n_nodes = d["n_nodes"] * d["batch"]
+        n_edges = d["n_edges"] * d["batch"]
+        d_feat = 16
+    else:
+        n_nodes, n_edges = d["n_nodes"], d["n_edges"]
+        d_feat = d.get("d_feat", 16)
+    N = _pad_up(n_nodes, nchips)
+    E = _pad_up(n_edges, nchips)
+    nmol = _pad_up(d.get("batch", 1), nchips) if cell.name == "molecule" else 1
+    geo = arch in ("schnet", "mace")
+    b = {}
+    if geo:
+        b["species"] = _sds((N,), jnp.int32, mesh, P(fa))
+        b["positions"] = _sds((N, 3), jnp.float32, mesh, P(fa, None))
+        b["energies"] = _sds((nmol,), jnp.float32, mesh,
+                             P(fa) if nmol >= nchips else P(None))
+        b["mol_id"] = _sds((N,), jnp.int32, mesh, P(fa))
+    else:
+        b["node_feats"] = _sds((N, d_feat), jnp.float32, mesh, P(fa, None))
+        if arch == "meshgraphnet":
+            b["edge_feats"] = _sds((E, 4), jnp.float32, mesh, P(fa, None))
+            b["targets"] = _sds((N, 3), jnp.float32, mesh, P(fa, None))
+        else:
+            b["labels"] = _sds((N,), jnp.int32, mesh, P(fa))
+    b["edge_index"] = _sds((2, E), jnp.int32, mesh, P(None, fa))
+    meta = {"padded_nodes": N, "padded_edges": E, "d_feat": d_feat}
+    return b, d_feat, meta
+
+
+def _gnn_cell(arch, mod, cell: ShapeCell, mesh, multi_pod: bool):
+    batch, d_feat, meta = _gnn_batch_structs(arch, cell, mesh, multi_pod)
+    cfg = mod.FULL
+    if arch == "meshgraphnet":
+        cfg = dataclasses.replace(cfg, node_in=d_feat, edge_in=4)
+        from repro.models.gnn import meshgraphnet as m
+    elif arch == "pna":
+        cfg = dataclasses.replace(cfg, node_in=d_feat, out_dim=47)
+        from repro.models.gnn import pna as m
+    elif arch == "schnet":
+        from repro.models.gnn import schnet as m
+    else:
+        from repro.models.gnn import mace as m
+
+    init = partial(m.init_params, cfg=cfg)
+    pstruct = jax.eval_shape(init, jax.random.PRNGKey(0))
+    # GNN params are small: replicate (graph data dominates).
+    params = jax.tree.map(
+        lambda s: _sds(s.shape, s.dtype, mesh, P()), pstruct,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    meta["params"] = int(sum(np.prod(l.shape)
+                             for l in jax.tree.leaves(pstruct)))
+    opt_cfg = adamw.AdamWConfig()
+    ostruct = jax.eval_shape(adamw.init_state, pstruct)
+    opt = jax.tree.map(
+        lambda s: _sds(s.shape, s.dtype, mesh, P()), ostruct,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    loss_fn = m.train_loss
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+        params, opt_state, _ = adamw.apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        return params, opt_state, loss
+
+    return step, (params, opt, batch), (0, 1), meta
+
+
+# ------------------------------ recsys ------------------------------------
+
+def _recsys_cell(mod, cell: ShapeCell, mesh, multi_pod: bool):
+    from repro.models.recsys import dcn
+    cfg = mod.FULL
+    fa = flat_axes(multi_pod)
+    nchips = int(np.prod([mesh.shape[a] for a in fa]))
+    dp = dp_axes(multi_pod)
+    dpP = dp if len(dp) > 1 else dp[0]
+
+    pstruct = jax.eval_shape(partial(dcn.init_params, cfg=cfg),
+                             jax.random.PRNGKey(0))
+    pspecs = jax.tree.map(lambda s: P(), pstruct,
+                          is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    # embedding tables row-sharded over `model`
+    pspecs["tables"] = {k: P("model", None) for k in pstruct["tables"]}
+    params = _with_shardings(pstruct, pspecs, mesh)
+    meta = {"params": int(sum(np.prod(l.shape)
+                              for l in jax.tree.leaves(pstruct)))}
+
+    B = _pad_up(cell.dims["batch"], nchips)
+    bspec = fa if B >= nchips else None
+    batch = {
+        "dense": _sds((B, cfg.n_dense), jnp.float32, mesh, P(bspec, None)),
+        "sparse": _sds((B, cfg.n_sparse), jnp.int32, mesh, P(bspec, None)),
+        "labels": _sds((B,), jnp.int32, mesh, P(bspec)),
+    }
+
+    if cell.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        ostruct = jax.eval_shape(adamw.init_state, pstruct)
+        ospecs = _opt_specs(pspecs, pstruct)
+        opt = _with_shardings(ostruct, ospecs, mesh)
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(dcn.train_loss)(
+                params, batch, cfg)
+            params, opt_state, _ = adamw.apply_updates(
+                params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        return step, (params, opt, batch), (0, 1), meta
+
+    if cell.kind == "serve":
+        def step(params, batch):
+            return dcn.predict(params, batch["dense"], batch["sparse"], cfg)
+
+        return step, (params, batch), (), meta
+
+    # retrieval: 1 query vs n_candidates item embeddings
+    nc = _pad_up(cell.dims["n_candidates"], nchips)
+    cands = _sds((nc, cfg.retrieval_dim), jnp.float32, mesh, P(fa, None))
+    q = {
+        "dense": _sds((1, cfg.n_dense), jnp.float32, mesh, P(None, None)),
+        "sparse": _sds((1, cfg.n_sparse), jnp.int32, mesh, P(None, None)),
+    }
+    meta["padded_candidates"] = nc
+
+    def step(params, q, cands):
+        return dcn.retrieval_scores(params, q["dense"], q["sparse"], cands,
+                                    cfg)
+
+    return step, (params, q, cands), (), meta
+
+
+# ------------------------------ walk (bonus) -------------------------------
+
+class _ModProxy:
+    """Arch module stand-in with an overridden FULL config (used for the
+    L=1/L=2 cost-extrapolation lowers)."""
+
+    def __init__(self, mod, full):
+        self.FAMILY = mod.FAMILY
+        self.SHAPES = mod.SHAPES
+        self.SMOKE = mod.SMOKE
+        self.FULL = full
+
+
+LAYER_FIELD = {"lm": "n_layers", "meshgraphnet": "n_layers", "pna": "n_layers",
+               "schnet": "n_interactions"}
+
+
+def scan_layer_count(arch: str):
+    """(field, L) if the arch's layers run under lax.scan (whose body the
+    XLA cost model counts ONCE — see dryrun cost extrapolation)."""
+    mod = get_arch(arch)
+    if mod.FAMILY == "lm":
+        return "n_layers", mod.FULL.n_layers
+    if arch in ("meshgraphnet", "pna"):
+        return "n_layers", mod.FULL.n_layers
+    if arch == "schnet":
+        return "n_interactions", mod.FULL.n_interactions
+    return None, None  # mace/dcn: python loop, fully counted
+
+
+def apply_overrides(cfg, overrides: dict):
+    """dataclasses.replace with dotted-path keys ('moe.dispatch')."""
+    nested: dict = {}
+    flat = {}
+    for k, v in overrides.items():
+        if "." in k:
+            head, rest = k.split(".", 1)
+            nested.setdefault(head, {})[rest] = v
+        else:
+            flat[k] = v
+    for head, sub in nested.items():
+        flat[head] = apply_overrides(getattr(cfg, head), sub)
+    return dataclasses.replace(cfg, **flat)
+
+
+def build_cell(arch: str, shape: str, mesh, multi_pod: bool,
+               layers_override: int | None = None,
+               overrides: dict | None = None):
+    """Returns (fn, args, donate, meta) for one dry-run cell."""
+    mod = get_arch(arch)
+    if overrides:
+        mod = _ModProxy(mod, apply_overrides(mod.FULL, overrides))
+    if layers_override is not None:
+        field, _ = scan_layer_count(arch)
+        assert field is not None
+        # unrolled so the XLA cost model sees every layer (trip counts are
+        # invisible to cost_analysis — dryrun extrapolates from L=1/L=2)
+        mod = _ModProxy(mod, dataclasses.replace(
+            mod.FULL, scan_layers=False, **{field: layers_override}))
+    cell = mod.SHAPES[shape]
+    if mod.FAMILY == "lm":
+        return _lm_cell(mod, cell, mesh, multi_pod)
+    if mod.FAMILY == "gnn":
+        return _gnn_cell(arch.replace("-", "_"), mod, cell, mesh, multi_pod)
+    if mod.FAMILY == "recsys":
+        return _recsys_cell(mod, cell, mesh, multi_pod)
+    raise ValueError(mod.FAMILY)

@@ -1,0 +1,86 @@
+"""GRW service driver — the paper's workload as a runnable CLI.
+
+  PYTHONPATH=src python -m repro.launch.walk --algo deepwalk --dataset WG \
+      --queries 2000 --slots 1024
+  PYTHONPATH=src python -m repro.launch.walk --algo urw --distributed \
+      --devices 8 ...   (needs XLA_FLAGS=--xla_force_host_platform_device_count=8)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.ridgewalker import ALGORITHMS, ENGINE, QUERY_LENGTH
+from repro.core.scheduler import analyze_run
+from repro.core.walk_engine import run_walks
+from repro.graph import make_dataset, partition_graph
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="urw", choices=sorted(ALGORITHMS))
+    ap.add_argument("--dataset", default="WG")
+    ap.add_argument("--scale", type=int, default=None,
+                    help="RMAT scale override (CPU-sized default)")
+    ap.add_argument("--queries", type=int, default=2000)
+    ap.add_argument("--slots", type=int, default=1024)
+    ap.add_argument("--max-hops", type=int, default=QUERY_LENGTH)
+    ap.add_argument("--mode", default="zero_bubble",
+                    choices=["zero_bubble", "static"])
+    ap.add_argument("--step-impl", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--record-paths", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = ALGORITHMS[args.algo]
+    weighted = spec.kind in ("alias", "reservoir_n2v")
+    g = make_dataset(args.dataset, weighted=weighted,
+                     with_alias=spec.kind == "alias",
+                     scale_override=args.scale, seed=args.seed)
+    print(f"{args.dataset}: |V|={g.num_vertices} |E|={g.num_edges} "
+          f"max_deg={g.max_degree}")
+    rng = np.random.default_rng(args.seed)
+    starts = rng.integers(0, g.num_vertices, args.queries).astype(np.int32)
+
+    if args.distributed:
+        from repro.core.distributed import DistConfig, run_distributed
+        pg = partition_graph(g, args.devices)
+        cfg = DistConfig(slots_per_device=args.slots // args.devices,
+                         max_hops=args.max_hops,
+                         record_paths=args.record_paths)
+        t0 = time.time()
+        if spec.kind == "rejection_n2v":
+            from repro.core.distributed_n2v import run_distributed_n2v
+            logs, stats = run_distributed_n2v(pg, starts, spec, cfg,
+                                              seed=args.seed)
+        else:
+            logs, stats = run_distributed(pg, starts, spec, cfg,
+                                          seed=args.seed)
+        import jax
+        jax.block_until_ready(logs.cursor)
+        dt = time.time() - t0
+        import jax.numpy as jnp
+        tot = type(stats)(*(v.sum() for v in stats))
+        a = analyze_run(tot, dt)
+    else:
+        cfg = dataclasses.replace(
+            ENGINE, num_slots=args.slots, max_hops=args.max_hops,
+            mode=args.mode, record_paths=args.record_paths,
+            step_impl=args.step_impl)
+        t0 = time.time()
+        res = run_walks(g, starts, spec, cfg, seed=args.seed)
+        res.stats.steps.block_until_ready()
+        dt = time.time() - t0
+        a = analyze_run(res.stats, dt)
+    print(f"steps={a.steps} supersteps={a.supersteps} "
+          f"throughput={a.msteps_per_s:.3f} MStep/s "
+          f"occupancy={a.occupancy:.3f} starved={a.starved} drops={a.drops}")
+
+
+if __name__ == "__main__":
+    main()

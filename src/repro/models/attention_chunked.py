@@ -1,0 +1,107 @@
+"""Flash-style chunked attention in pure JAX (scan over KV blocks with a
+running (max, denom, acc) online softmax; optional outer scan over Q
+blocks).  Keeps the working set at (q_block × kv_block) instead of S×S —
+required for the 32k prefill / 4k train cells, and the object of several
+§Perf iterations (block-size sweeps).
+
+Equivalent to full softmax attention (LSE-combined); asserted in tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _block_attn(q, k, v, qpos, kpos, causal, m, l, acc, scale):
+    """One (q_block, kv_block) tile of the online softmax."""
+    s = jnp.einsum("bsgrd,btgd->bgrst", q, k) * scale     # (B,g,r,qb,kb)
+    if causal:
+        mask = qpos[:, None] >= kpos[None, :]             # (qb, kb)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))           # (B,g,r,qb)
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bgrst,btgd->bgrsd", p.astype(v.dtype), v)
+    acc_new = acc * corr[..., None] + pv.astype(acc.dtype)
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      q_block: int = 1024, kv_block: int = 1024,
+                      q_offset=0, unroll: bool = False):
+    """q: (B, S, Hq, D); k/v: (B, T, Hkv, D); GQA via Hq = g·r.
+
+    q_offset: position of q[0] within the kv sequence (prefill: 0; decode
+    with history: cache_len).  Returns (B, S, Hq, D).
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    r = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    assert S % qb == 0 and T % kb == 0, (S, qb, T, kb)
+    nq, nk = S // qb, T // kb
+
+    qr = q.reshape(B, nq, qb, Hkv, r, D).transpose(1, 0, 2, 3, 4, 5)
+    qr = qr.transpose(0, 1, 3, 4, 2, 5)        # (nq, B, g, r, qb, D)
+    kr = k.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_q):
+        qi, q_blk = qi_q                        # q_blk: (B,g,r,qb,D)
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, k_blk, v_blk = ki_kv
+            kpos = ki * kb + jnp.arange(kb)
+            # (B,qb,g,r,D) view for the einsum convention
+            qv = q_blk.transpose(0, 3, 1, 2, 4)
+            m, l, acc = _block_attn(qv, k_blk, v_blk, qpos, kpos, causal,
+                                    m, l, acc, scale)
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, Hkv, r, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, r, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, r, qb, D), jnp.float32)
+        if unroll:  # dry-run cost lowers: scan bodies are invisible to
+            carry = (m0, l0, a0)  # the XLA cost model, so unroll
+            for ki in range(nk):
+                carry, _ = kv_step(carry, (jnp.asarray(ki), kr[ki], vr[ki]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,g,r,qb,D)
+        return None, out.astype(q.dtype)
+
+    if unroll:
+        outs = jnp.stack([q_step(None, (jnp.asarray(qi), qr[qi]))[1]
+                          for qi in range(nq)])
+    else:
+        _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    # outs: (nq, B, g, r, qb, D) -> (B, S, Hq, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, Hq, D)
+    return out
+
+
+def full_attention_ref(q, k, v, *, causal=True, q_offset=0):
+    """Oracle: materialized-scores softmax attention (small shapes only)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    r = Hq // Hkv
+    qr = q.reshape(B, S, Hkv, r, D)
+    s = jnp.einsum("bsgrd,btgd->bgrst", qr, k) / (D ** 0.5)
+    if causal:
+        qpos = q_offset + jnp.arange(S)
+        kpos = jnp.arange(T)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bgrst,btgd->bsgrd", p.astype(v.dtype), v)
+    return o.reshape(B, S, Hq, D)

@@ -1,0 +1,66 @@
+"""Skip-gram with negative sampling (DeepWalk/Node2Vec embedding trainer).
+
+The end-to-end driver: RidgeWalker's walk engine generates the corpus, a
+sliding window produces (center, context) pairs, and this model learns the
+node embeddings — the full DeepWalk pipeline [5] on top of the paper's
+system.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SkipGramConfig:
+    num_vertices: int
+    dim: int = 128
+    num_negatives: int = 5
+    window: int = 5
+
+
+def init_params(key, cfg: SkipGramConfig):
+    k1, k2 = jax.random.split(key)
+    s = 1.0 / cfg.dim
+    return {
+        "in_embed": jax.random.uniform(k1, (cfg.num_vertices, cfg.dim),
+                                       minval=-s, maxval=s),
+        # small random (not zero) output init: breaks the in/out symmetry
+        # so the SGNS gradients reach in_embed from step one
+        "out_embed": jax.random.normal(k2, (cfg.num_vertices, cfg.dim)) * 0.1,
+    }
+
+
+def loss_fn(params, centers, contexts, negatives):
+    """centers (B,), contexts (B,), negatives (B, K) — SGNS objective."""
+    ci = params["in_embed"][centers]              # (B, D)
+    co = params["out_embed"][contexts]            # (B, D)
+    no = params["out_embed"][negatives]           # (B, K, D)
+    pos = jnp.sum(ci * co, axis=-1)
+    neg = jnp.einsum("bd,bkd->bk", ci, no)
+    pos_l = jax.nn.log_sigmoid(pos)
+    neg_l = jnp.sum(jax.nn.log_sigmoid(-neg), axis=-1)
+    return -jnp.mean(pos_l + neg_l)
+
+
+def pairs_from_walks(paths: np.ndarray, lengths: np.ndarray, window: int,
+                     rng: np.random.Generator, max_pairs: int | None = None):
+    """Sliding-window (center, context) pairs from walk paths (host-side)."""
+    centers, contexts = [], []
+    for q in range(paths.shape[0]):
+        L = int(lengths[q])
+        for i in range(L):
+            lo, hi = max(0, i - window), min(L, i + window + 1)
+            for j in range(lo, hi):
+                if j != i and paths[q, j] >= 0 and paths[q, i] >= 0:
+                    centers.append(paths[q, i])
+                    contexts.append(paths[q, j])
+    c = np.asarray(centers, np.int32)
+    x = np.asarray(contexts, np.int32)
+    if max_pairs is not None and c.size > max_pairs:
+        sel = rng.choice(c.size, max_pairs, replace=False)
+        c, x = c[sel], x[sel]
+    return c, x

@@ -1,0 +1,1 @@
+from repro.models.gnn import meshgraphnet, schnet, pna, mace

@@ -1,0 +1,49 @@
+"""GNN message-passing substrate.
+
+JAX sparse is BCOO-only, so message passing is implemented as
+gather (edge src) → message → ``segment_sum``/``segment_max`` scatter over
+the destination index — optionally through the tiled Pallas
+`kernels/segment_sum` for the perf-critical scatter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def scatter_sum(messages, dst, num_nodes: int):
+    return jax.ops.segment_sum(messages, dst, num_segments=num_nodes)
+
+
+def scatter_mean(messages, dst, num_nodes: int):
+    s = scatter_sum(messages, dst, num_nodes)
+    cnt = jax.ops.segment_sum(jnp.ones((messages.shape[0],), messages.dtype),
+                              dst, num_segments=num_nodes)
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def scatter_max(messages, dst, num_nodes: int):
+    return jax.ops.segment_max(messages, dst, num_segments=num_nodes,
+                               indices_are_sorted=False)
+
+
+def scatter_min(messages, dst, num_nodes: int):
+    return -scatter_max(-messages, dst, num_nodes)
+
+
+def degrees(dst, num_nodes: int, dtype=jnp.float32):
+    return jax.ops.segment_sum(jnp.ones_like(dst, dtype), dst,
+                               num_segments=num_nodes)
+
+
+def mlp_ln_init(key, dims, dtype=jnp.float32):
+    p = L.mlp_init(key, dims, dtype)
+    p["ln"] = L.layernorm_init(dims[-1], jnp.float32)
+    return p
+
+
+def mlp_ln(params, x, act=jax.nn.relu):
+    y = L.mlp(params, x, act=act)
+    return L.layernorm(params["ln"], y)

@@ -1,0 +1,82 @@
+"""MeshGraphNet [arXiv:2010.03409]: encode-process-decode with 15 message
+passing layers, d_hidden=128, sum aggregation, 2-layer MLPs + LayerNorm."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.gnn.common import mlp_ln_init, mlp_ln, scatter_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshGraphNetConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    node_in: int = 16
+    edge_in: int = 8
+    out_dim: int = 3
+    remat: bool = True
+    scan_layers: bool = True
+
+
+def _mlp_dims(cfg, d_in):
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers
+
+
+def init_params(key, cfg: MeshGraphNetConfig):
+    kn, ke, kl, kd = jax.random.split(key, 4)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+
+    def init_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "edge_mlp": mlp_ln_init(k1, _mlp_dims(cfg, 3 * cfg.d_hidden)),
+            "node_mlp": mlp_ln_init(k2, _mlp_dims(cfg, 2 * cfg.d_hidden)),
+        }
+
+    return {
+        "node_enc": mlp_ln_init(kn, _mlp_dims(cfg, cfg.node_in)),
+        "edge_enc": mlp_ln_init(ke, _mlp_dims(cfg, cfg.edge_in)),
+        "layers": jax.vmap(init_layer)(lkeys),
+        "decoder": L.mlp_init(kd, [cfg.d_hidden, cfg.d_hidden, cfg.out_dim]),
+    }
+
+
+def apply(params, node_feats, edge_feats, edge_index, cfg: MeshGraphNetConfig):
+    """edge_index: (2, E) [src, dst]. Returns per-node predictions (N, out)."""
+    N = node_feats.shape[0]
+    src, dst = edge_index[0], edge_index[1]
+    h = mlp_ln(params["node_enc"], node_feats)
+    e = mlp_ln(params["edge_enc"], edge_feats)
+
+    def body(carry, lp):
+        h, e = carry
+        msg_in = jnp.concatenate([e, h[src], h[dst]], axis=-1)
+        e = e + mlp_ln(lp["edge_mlp"], msg_in)
+        agg = scatter_sum(e, dst, N)
+        h = h + mlp_ln(lp["node_mlp"], jnp.concatenate([h, agg], axis=-1))
+        return (h, e), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    else:
+        carry = (h, e)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            carry, _ = body(carry, lp)
+        h, e = carry
+    return L.mlp(params["decoder"], h)
+
+
+def train_loss(params, batch, cfg: MeshGraphNetConfig):
+    pred = apply(params, batch["node_feats"], batch["edge_feats"],
+                 batch["edge_index"], cfg)
+    return jnp.mean(jnp.square(pred - batch["targets"]))

@@ -1,0 +1,174 @@
+"""Minimal functional NN substrate (no flax in this environment).
+
+Params are nested dicts of jnp arrays; every layer is an (init, apply)
+pair of pure functions.  Sharding is expressed as a parallel pytree of
+PartitionSpecs produced by the model's ``param_specs`` function.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+
+
+def dense(params, x):
+    return x @ params["w"]
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {"layers": [dense_init(k, a, b, dtype)
+                       for k, a, b in zip(ks, dims[:-1], dims[1:])]}
+
+
+def mlp(params, x, act=jax.nn.gelu, final_act=False):
+    n = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        x = dense(lp, x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps) * params["scale"] + params["bias"]
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6, cast_scale=False):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    scale = params["scale"].astype(x.dtype) if cast_scale else params["scale"]
+    return (out * scale).astype(x.dtype)
+
+
+# ----------------------------- RoPE ---------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                      # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ------------------------- GQA attention ----------------------------------
+
+def attention_init(key, d_model, n_heads, n_kv_heads, d_head,
+                   dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "wq": jax.random.normal(kq, (d_model, n_heads, d_head), dtype) * s,
+        "wk": jax.random.normal(kk, (d_model, n_kv_heads, d_head), dtype) * s,
+        "wv": jax.random.normal(kv, (d_model, n_kv_heads, d_head), dtype) * s,
+        "wo": jax.random.normal(ko, (n_heads, d_head, d_model), dtype) * s,
+    }
+
+
+def _gqa_scores(q, k, n_rep):
+    """q: (B,S,Hq,D), k: (B,T,Hkv,D) -> scores (B,Hkv,n_rep,S,T)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    q = q.reshape(B, S, Hkv, n_rep, D)
+    return jnp.einsum("bsgrd,btgd->bgrst", q, k)
+
+
+def attention(params, x, positions, *, n_rep, causal=True, theta=10000.0,
+              kv_cache=None, cache_len=None, return_kv=False,
+              chunked=False, q_block=1024, kv_block=1024,
+              unroll_attn=False):
+    """GQA attention. If kv_cache is given: decode mode — x is (B, 1, d),
+    cache holds (k, v) of shape (B, T, Hkv, D), cache_len is the current
+    valid length (the new token is written at index cache_len).
+
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        T = ck.shape[1]
+        # Write the new token(s) at cache_len (dynamic slice update).
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, cache_len, 0, 0))
+        k_all, v_all = ck, cv
+        t_idx = jnp.arange(T)
+        kv_mask = t_idx[None, :] <= (cache_len + S - 1)     # (1, T)
+        scores = _gqa_scores(q, k_all, n_rep) / math.sqrt(q.shape[-1])
+        scores = jnp.where(kv_mask[None, None, None, :, :]
+                           if kv_mask.ndim == 2 else kv_mask,
+                           scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        out = jnp.einsum("bgrst,btgd->bsgrd", probs.astype(x.dtype), v_all)
+        out = out.reshape(B, S, -1, q.shape[-1])
+        out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        return out, (ck, cv)
+
+    if chunked:
+        from repro.models.attention_chunked import chunked_attention
+        out = chunked_attention(q, k, v, causal=causal,
+                                q_block=q_block, kv_block=kv_block,
+                                unroll=unroll_attn)
+    else:
+        scores = _gqa_scores(q, k, n_rep) / math.sqrt(q.shape[-1])
+        if causal:
+            mask = jnp.tril(jnp.ones((S, S), bool))
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        out = jnp.einsum("bgrst,btgd->bsgrd", probs.astype(x.dtype), v)
+    out = out.reshape(B, S, -1, q.shape[-1])
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, ((k, v) if return_kv else None)
+
+
+# --------------------------- SwiGLU FFN -----------------------------------
+
+def ffn_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype)
+        / math.sqrt(d_ff),
+    }
+
+
+def ffn(params, x):
+    g = jax.nn.silu(x @ params["w_gate"])
+    u = x @ params["w_up"]
+    return (g * u) @ params["w_down"]

@@ -1,0 +1,96 @@
+"""DCN-v2 [arXiv:2008.13535]: cross network v2 + deep MLP (parallel
+structure), n_dense=13, n_sparse=26, embed_dim=16, 3 cross layers,
+MLP 1024-1024-512; plus a two-tower retrieval head for candidate scoring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.recsys.embedding import (EmbeddingConfig, init_tables,
+                                           lookup)
+
+
+@dataclasses.dataclass(frozen=True)
+class DCNConfig:
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp_dims: Tuple[int, ...] = (1024, 1024, 512)
+    vocab_sizes: Optional[tuple] = None   # default: Criteo-like 1e6 rows
+    retrieval_dim: int = 64
+
+    def vocabs(self):
+        if self.vocab_sizes is not None:
+            return self.vocab_sizes
+        return tuple([1_000_000] * self.n_sparse)
+
+    @property
+    def d0(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+
+def init_params(key, cfg: DCNConfig, dtype=jnp.float32):
+    ke, kc, km, kf, kr = jax.random.split(key, 5)
+    emb_cfg = EmbeddingConfig(cfg.vocabs(), cfg.embed_dim)
+    d0 = cfg.d0
+    ckeys = jax.random.split(kc, cfg.n_cross_layers)
+    cross = [{
+        "w": jax.random.normal(k, (d0, d0), dtype) / math.sqrt(d0),
+        "b": jnp.zeros((d0,), dtype),
+    } for k in ckeys]
+    mlp_p = L.mlp_init(km, [d0] + list(cfg.mlp_dims), dtype)
+    final_in = d0 + cfg.mlp_dims[-1]
+    return {
+        "tables": init_tables(ke, emb_cfg, dtype),
+        "cross": cross,
+        "mlp": mlp_p,
+        "final": L.dense_init(kf, final_in, 1, dtype),
+        "user_proj": L.dense_init(kr, final_in, cfg.retrieval_dim, dtype),
+    }
+
+
+def _backbone(params, dense_feats, sparse_ids, cfg: DCNConfig):
+    emb_cfg = EmbeddingConfig(cfg.vocabs(), cfg.embed_dim)
+    emb = lookup(params["tables"], sparse_ids, emb_cfg)     # (B, 26·16)
+    x0 = jnp.concatenate([dense_feats, emb], axis=-1)       # (B, d0)
+    # Cross network v2: x_{l+1} = x0 ⊙ (W x_l + b) + x_l
+    x = x0
+    for cp in params["cross"]:
+        x = x0 * (x @ cp["w"] + cp["b"]) + x
+    deep = L.mlp(params["mlp"], x0, act=jax.nn.relu, final_act=True)
+    return jnp.concatenate([x, deep], axis=-1)
+
+
+def predict(params, dense_feats, sparse_ids, cfg: DCNConfig):
+    """CTR logit: (B,)."""
+    z = _backbone(params, dense_feats, sparse_ids, cfg)
+    return L.dense(params["final"], z)[:, 0]
+
+
+def train_loss(params, batch, cfg: DCNConfig):
+    logits = predict(params, batch["dense"], batch["sparse"], cfg)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def user_embedding(params, dense_feats, sparse_ids, cfg: DCNConfig):
+    z = _backbone(params, dense_feats, sparse_ids, cfg)
+    u = L.dense(params["user_proj"], z)
+    return u / jnp.linalg.norm(u, axis=-1, keepdims=True).clip(1e-6)
+
+
+def retrieval_scores(params, dense_feats, sparse_ids, cand_embs,
+                     cfg: DCNConfig):
+    """Score one (or few) queries against n_candidates item embeddings:
+    batched dot product, (B, n_cand)."""
+    u = user_embedding(params, dense_feats, sparse_ids, cfg)
+    return u @ cand_embs.T

@@ -1,0 +1,55 @@
+"""Sparse embedding substrate for recsys (JAX has no native EmbeddingBag).
+
+Tables are row-sharded over the `model` axis; lookup is ``jnp.take`` (+
+``segment_sum`` for multi-hot bags), or the fused Pallas
+`kernels/embedding_bag` on the serving hot path.  The random-row gather is
+the same access regime the paper's asynchronous memory engine targets
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    vocab_sizes: tuple          # per-field vocabulary sizes
+    embed_dim: int = 16
+    combine: str = "concat"     # concat | sum
+
+
+def init_tables(key, cfg: EmbeddingConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, len(cfg.vocab_sizes))
+    return {
+        f"table_{i}": jax.random.normal(k, (v, cfg.embed_dim), dtype) * 0.01
+        for i, (k, v) in enumerate(zip(keys, cfg.vocab_sizes))
+    }
+
+
+def lookup(tables, sparse_ids, cfg: EmbeddingConfig):
+    """sparse_ids: (B, F) single-hot per field -> (B, F·D) or (B, D)."""
+    outs = []
+    for i in range(sparse_ids.shape[1]):
+        t = tables[f"table_{i}"]
+        ids = jnp.clip(sparse_ids[:, i], 0, t.shape[0] - 1)
+        outs.append(jnp.take(t, ids, axis=0))
+    if cfg.combine == "sum":
+        return sum(outs)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def lookup_bags(table, indices, weights=None, use_kernel: bool = False):
+    """Multi-hot EmbeddingBag over one table: indices (B, H), pad -1."""
+    if use_kernel:
+        from repro.kernels.embedding_bag import embedding_bag
+        return embedding_bag(indices, table, weights)
+    safe = jnp.clip(indices, 0, table.shape[0] - 1)
+    rows = table[safe]
+    if weights is None:
+        weights = jnp.ones(indices.shape, table.dtype)
+    w = jnp.where(indices >= 0, weights, 0.0)[..., None]
+    return jnp.sum(rows * w, axis=1)

@@ -1,0 +1,299 @@
+"""Decoder-only LM (dense + MoE) with GQA, RoPE, KV-cache serving paths.
+
+Covers the five assigned LM architectures (phi3.5-moe, granite-moe,
+deepseek-7b, minitron-8b, stablelm-12b).  Layers are stacked and executed
+with ``jax.lax.scan`` (+ remat) so the HLO stays compact at 30-40 layers —
+essential for the 512-device dry-run compiles on the CPU host.
+
+Entry points:
+  * ``train_loss(params, tokens, labels, cfg)``      — training objective
+  * ``prefill(params, tokens, cfg)``                 — logits + KV cache
+  * ``decode_step(params, token, cache, len, cfg)``  — one serving step
+
+Sharding: ``param_specs(cfg)`` returns a PartitionSpec pytree. Attention
+shards Q-heads over `model` when divisible, else the head dim; MoE shards
+experts (EP) or expert-FFN hidden (TP) per ``MoEConfig.expert_sharding``;
+vocab shards over `model` when divisible, else the embedding dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.moe import (MoEConfig, moe_init, moe_apply,
+                              moe_apply_batched, moe_param_specs)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 1024
+    vocab: int = 1024
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("data",)
+    # flash-style chunked attention kicks in at seq >= chunk_threshold
+    chunk_threshold: int = 2048
+    q_block: int = 1024
+    kv_block: int = 1024
+    # scan_layers=False unrolls the layer loop (used by the dry-run cost
+    # extrapolation: XLA's cost model counts a scan body once, so per-layer
+    # costs are measured on small unrolled models and extrapolated)
+    scan_layers: bool = True
+    # Megatron-style vocab-parallel cross-entropy: gold logit via a local
+    # one-hot masked sum (elementwise on the vocab-sharded logits) instead
+    # of take_along_axis, which GSPMD implements by all-gathering the full
+    # (B, S, V) logits (§Perf iteration: deepseek train_4k)
+    vocab_parallel_ce: bool = False
+    # KV projection sharding: "d_head" (baseline) contracts a sharded
+    # d_head in the score einsum -> psum of every score tile; "heads"
+    # (valid when n_kv_heads % 16 == 0, e.g. MHA) and "replicate"
+    # (GQA: KV projections are small) avoid it (§Perf iteration 2)
+    kv_sharding: str = "d_head"
+    # cast the f32 norm scales to the activation dtype at use: keeps the
+    # BACKWARD pass in bf16 — with f32 scales the cotangents of every
+    # residual tensor promote to f32 and all TP activation-grad psums move
+    # 2x the bytes (§Perf iteration 3; LLaMA runs bf16 norm scales)
+    cast_norm_scale: bool = False
+    # decode KV-cache sharding over `model`: "seq" (baseline) shards the
+    # time axis — the in-place token write at a dynamic position then
+    # crosses shards; "dhead" shards the head dim — writes stay local,
+    # attention contracts a sharded d_head into small psum'd score stats
+    # (the flash-decoding combine). §Perf decode iteration.
+    decode_cache_shard: str = "seq"
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_rep(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        if self.moe:
+            ff = self.moe.num_experts * 3 * d * self.moe.d_ff \
+                + d * self.moe.num_experts
+        else:
+            ff = 3 * d * f
+        per_layer = attn + ff + 2 * d
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k experts only)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        attn = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        ff = self.moe.top_k * 3 * d * self.moe.d_ff
+        per_layer = attn + ff + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+
+# ------------------------------ init --------------------------------------
+
+def _init_layer(cfg: TransformerConfig, key):
+    ka, kf = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, jnp.float32),
+        "attn": L.attention_init(ka, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.d_head, cfg.dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, jnp.float32),
+    }
+    if cfg.moe:
+        p["moe"] = moe_init(kf, cfg.d_model, cfg.moe, cfg.dtype)
+    else:
+        p["ffn"] = L.ffn_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig):
+    ke, kl, ko = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers_p = jax.vmap(partial(_init_layer, cfg))(layer_keys)
+    s = 1.0 / math.sqrt(cfg.d_model)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), cfg.dtype) * s,
+        "layers": layers_p,
+        "final_norm": L.rmsnorm_init(cfg.d_model, jnp.float32),
+        "lm_head": jax.random.normal(ko, (cfg.d_model, cfg.vocab), cfg.dtype) * s,
+    }
+
+
+def param_specs(cfg: TransformerConfig):
+    tp = cfg.tp_axis
+    heads_div = cfg.n_heads % 16 == 0  # conservative: divisible by max TP
+    hq = P(None, None, tp, None) if heads_div else P(None, None, None, tp)
+    if cfg.kv_sharding == "heads":
+        hkv = P(None, None, tp, None)
+    elif cfg.kv_sharding == "replicate":
+        hkv = P(None, None, None, None)
+    else:  # baseline: shard d_head
+        hkv = P(None, None, None, tp)
+    attn = {"wq": hq, "wk": hkv, "wv": hkv,
+            "wo": P(None, tp, None, None) if heads_div
+            else P(None, None, tp, None)}
+    norm = {"scale": P(None, None)}
+    layer = {"ln1": norm, "ln2": norm, "attn": attn}
+    if cfg.moe:
+        ms = moe_param_specs(cfg.moe, tp)
+        layer["moe"] = {k: P(*((None,) + tuple(s)))
+                        for k, s in ms.items()}
+    else:
+        layer["ffn"] = {"w_gate": P(None, None, tp),
+                        "w_up": P(None, None, tp),
+                        "w_down": P(None, tp, None)}
+    vocab_div = cfg.vocab % 16 == 0
+    embed = P(tp, None) if vocab_div else P(None, tp)
+    lm_head = P(None, tp) if vocab_div else P(tp, None)
+    return {
+        "embed": embed,
+        "layers": layer,
+        "final_norm": {"scale": P(None)},
+        "lm_head": lm_head,
+    }
+
+
+# ----------------------------- forward ------------------------------------
+
+def _block(cfg: TransformerConfig, x, positions, lp, kv_cache=None,
+           cache_len=None, return_kv=False, causal=True):
+    S = x.shape[1]
+    chunked = kv_cache is None and S >= cfg.chunk_threshold
+    cs = cfg.cast_norm_scale
+    h, kv = L.attention(lp["attn"], L.rmsnorm(lp["ln1"], x, cast_scale=cs),
+                        positions,
+                        n_rep=cfg.n_rep, causal=causal,
+                        theta=cfg.rope_theta, kv_cache=kv_cache,
+                        cache_len=cache_len, return_kv=return_kv,
+                        chunked=chunked, q_block=cfg.q_block,
+                        kv_block=cfg.kv_block,
+                        unroll_attn=not cfg.scan_layers)
+    x = x + h
+    hn = L.rmsnorm(lp["ln2"], x, cast_scale=cfg.cast_norm_scale)
+    if cfg.moe:
+        y, aux = moe_apply_batched(lp["moe"], hn, cfg.moe)
+    else:
+        y, aux = L.ffn(lp["ffn"], hn), jnp.zeros((), jnp.float32)
+    return (x + y.astype(x.dtype)).astype(x.dtype), kv, aux
+
+
+def forward(params, tokens, cfg: TransformerConfig):
+    """Training/prefill trunk: tokens (B, S) -> hidden (B, S, d), aux."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = _block(cfg, x, positions, lp)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, carry, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            carry, _ = body(carry, lp)
+        x, aux = carry
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, aux
+
+
+def train_loss(params, tokens, labels, cfg: TransformerConfig):
+    x, aux = forward(params, tokens, cfg)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    if cfg.vocab_parallel_ce:
+        # shard-local masked sum; the only cross-shard reduction is the
+        # small (B, S) sum GSPMD inserts for the sharded-V contraction
+        onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=logits.dtype)
+        gold = jnp.sum(logits * onehot, axis=-1)
+    else:
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    zloss = 1e-4 * jnp.mean(jnp.square(logz))
+    return nll + zloss + aux
+
+
+def prefill(params, tokens, cfg: TransformerConfig):
+    """Prefill: returns (logits_last, kv_caches stacked (L, 2, B, S, H, D))."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        x, kv, _ = _block(cfg, x, positions, lp, return_kv=True)
+        return x, jnp.stack(kv)  # (2, B, S, Hkv, Dh)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, params["layers"])
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, kv = body(x, lp)
+            outs.append(kv)
+        caches = jnp.stack(outs)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = (x[:, -1:] @ params["lm_head"]).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(params, token, caches, cache_len, cfg: TransformerConfig):
+    """One token for every sequence: token (B, 1), caches (L, 2, B, T, H, D),
+    cache_len scalar — the new KV is written at cache_len."""
+    B = token.shape[0]
+    x = params["embed"][token]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+
+    def body(x, inputs):
+        lp, cache = inputs
+        x, kv, _ = _block(cfg, x, positions, lp,
+                          kv_cache=(cache[0], cache[1]),
+                          cache_len=cache_len, causal=False)
+        return x, jnp.stack(kv)
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, kv = body(x, (lp, caches[i]))
+            outs.append(kv)
+        new_caches = jnp.stack(outs)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_caches
+
+
+def make_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
+                  dtype=None):
+    dtype = dtype or cfg.dtype
+    return jnp.zeros((cfg.n_layers, 2, batch, max_len, cfg.n_kv_heads,
+                      cfg.d_head), dtype)

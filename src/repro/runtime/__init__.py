@@ -1,0 +1,1 @@
+from repro.runtime import train_loop, elastic

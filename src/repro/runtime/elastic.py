@@ -1,0 +1,58 @@
+"""Elastic scaling: rebuild the mesh when the healthy-device set changes
+and re-shard training state from the latest checkpoint.
+
+A pod loss at 2×16×16 degrades to 1×16×16: ``plan_remesh`` picks the
+largest supported mesh ≤ the healthy device count, and `restart` reloads
+the checkpoint with the new shardings (checkpoints are mesh-agnostic —
+see `checkpoint/checkpointer.py`).  Straggler-driven demotion uses the
+watchdog counts from `runtime/train_loop.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+SUPPORTED_MESHES: Tuple[Tuple[int, ...], ...] = (
+    (2, 16, 16), (1, 16, 16), (16, 16), (8, 16), (4, 16), (2, 16), (16,),
+    (8,), (4,), (2,), (1,),
+)
+
+
+def plan_remesh(healthy_devices: int,
+                prefer_axes=("pod", "data", "model")) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest supported mesh that fits the healthy device count."""
+    for shape in SUPPORTED_MESHES:
+        n = 1
+        for s in shape:
+            n *= s
+        if n <= healthy_devices:
+            axes = prefer_axes[-len(shape):]
+            return shape, tuple(axes)
+    raise RuntimeError("no devices left")
+
+
+def build_mesh(shape: Sequence[int], axes: Sequence[str],
+               devices=None) -> jax.sharding.Mesh:
+    import numpy as np
+    devices = devices if devices is not None else jax.devices()
+    n = int(np.prod(shape))
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, tuple(axes))
+
+
+@dataclasses.dataclass
+class ElasticController:
+    """Decides restart actions from health signals."""
+    min_devices: int = 1
+    max_straggler_ratio: float = 0.05
+
+    def decide(self, healthy: int, total_steps: int,
+               straggler_steps: int) -> Optional[str]:
+        if healthy < self.min_devices:
+            return "abort"
+        if straggler_steps > self.max_straggler_ratio * max(total_steps, 1):
+            return "remesh"       # persistent straggler: demote and rebalance
+        return None

@@ -1,0 +1,110 @@
+"""Fault-tolerant training runtime.
+
+* checkpoint every N steps + on SIGTERM (preemption-safe), atomic commits;
+* resume from the latest manifest (data pipeline state is just the step
+  counter — bit-identical restart);
+* straggler watchdog: EWMA of step wall time; steps slower than
+  ``k × EWMA`` are logged and counted (on a real multi-host job this
+  triggers the elastic controller in `runtime/elastic.py`);
+* metrics ring written as JSON-lines for external scraping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint import checkpointer
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    async_checkpoint: bool = True
+    metrics_path: Optional[str] = None
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float = 3.0, alpha: float = 0.1):
+        self.factor = factor
+        self.alpha = alpha
+        self.ewma = None
+        self.straggler_steps = 0
+
+    def observe(self, dt: float) -> bool:
+        is_straggler = False
+        if self.ewma is not None and dt > self.factor * self.ewma:
+            self.straggler_steps += 1
+            is_straggler = True
+        self.ewma = dt if self.ewma is None else \
+            (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+def run(step_fn: Callable, state: Any, batch_fn: Callable,
+        cfg: TrainLoopConfig, start_step: int = 0):
+    """Generic loop: state = step_fn(state, batch). state must be a pytree
+    (params, opt_state, ...). batch_fn(step) -> device batch."""
+    os.makedirs(cfg.ckpt_dir, exist_ok=True)
+    stop = {"flag": False}
+
+    def _on_sigterm(signum, frame):
+        stop["flag"] = True
+
+    old = signal.signal(signal.SIGTERM, _on_sigterm)
+    watchdog = StragglerWatchdog(cfg.straggler_factor)
+    metrics_f = open(cfg.metrics_path, "a") if cfg.metrics_path else None
+    pending = None
+    step = start_step
+    history = []
+    try:
+        while step < cfg.total_steps and not stop["flag"]:
+            t0 = time.perf_counter()
+            batch = batch_fn(step)
+            state, aux = step_fn(state, batch)
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+            dt = time.perf_counter() - t0
+            straggler = watchdog.observe(dt)
+            step += 1
+            if step % cfg.log_every == 0 or straggler:
+                rec = {"step": step, "dt_s": dt,
+                       "straggler": straggler,
+                       **{k: float(v) for k, v in (aux or {}).items()}}
+                history.append(rec)
+                if metrics_f:
+                    metrics_f.write(json.dumps(rec) + "\n")
+                    metrics_f.flush()
+            if step % cfg.ckpt_every == 0:
+                if pending is not None:
+                    pending.join()
+                pending = checkpointer.save(
+                    cfg.ckpt_dir, step, state,
+                    blocking=not cfg.async_checkpoint)
+    finally:
+        if pending is not None:
+            pending.join()
+        # Preemption / completion checkpoint.
+        checkpointer.save(cfg.ckpt_dir, step, state, blocking=True)
+        if metrics_f:
+            metrics_f.close()
+        signal.signal(signal.SIGTERM, old)
+    return state, step, history, watchdog
+
+
+def resume_or_init(ckpt_dir: str, init_state: Any, shardings=None):
+    """Elastic restart: load the latest checkpoint (re-sharded to the
+    current mesh) or return the fresh state."""
+    last = checkpointer.latest_step(ckpt_dir)
+    if last is None:
+        return init_state, 0
+    state = checkpointer.restore(ckpt_dir, last, init_state, shardings)
+    return state, last

@@ -1,0 +1,40 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600):
+    """Run a python snippet with N forced host devices (device count is
+    locked at first jax init, so multi-device tests need a fresh process)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph import make_dataset
+    return make_dataset("WG", scale_override=9)
+
+
+@pytest.fixture(scope="session")
+def weighted_graph():
+    from repro.graph import make_dataset
+    return make_dataset("WG", scale_override=9, weighted=True,
+                        with_alias=True)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

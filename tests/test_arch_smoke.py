@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests (deliverable f): instantiate the REDUCED
+config of each assigned arch, run one forward/train step on CPU, assert
+output shapes and no NaNs.  The FULL configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.data import pipeline as datapipe
+
+KEY = jax.random.PRNGKey(0)
+
+
+LM_ARCHS = [a for a in ARCHS if get_arch(a).FAMILY == "lm"]
+GNN_ARCHS = [a for a in ARCHS if get_arch(a).FAMILY == "gnn"]
+REC_ARCHS = [a for a in ARCHS if get_arch(a).FAMILY == "recsys"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke(arch):
+    from repro.models import transformer as tfm
+    mod = get_arch(arch)
+    cfg = dataclasses.replace(mod.SMOKE, dtype=jnp.float32)
+    params = tfm.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab)
+    # train step
+    loss, grads = jax.value_and_grad(tfm.train_loss)(params, toks, toks, cfg)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+    # serve: prefill + one decode step
+    logits, kv = tfm.prefill(params, toks, cfg)
+    assert logits.shape == (2, 1, cfg.vocab)
+    cache = tfm.make_kv_cache(cfg, 2, 32, jnp.float32)
+    cache = cache.at[:, :, :, :24].set(kv)
+    lg, cache2 = tfm.decode_step(params, toks[:, :1], cache,
+                                 jnp.asarray(24), cfg)
+    assert lg.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.isfinite(lg).all())
+    assert cache2.shape == cache.shape
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke(arch):
+    import repro.models.gnn as gnnmod
+    mod = get_arch(arch)
+    cfg = mod.SMOKE
+    m = getattr(gnnmod, arch)
+    params = m.init_params(KEY, cfg)
+    if arch in ("schnet", "mace"):
+        b = jax.tree.map(jnp.asarray, datapipe.molecule_batch(12, 40, 4))
+        e = m.apply(params, b["species"], b["positions"], b["edge_index"],
+                    cfg, b["mol_id"], 4)
+        assert e.shape == (4,)
+        assert bool(jnp.isfinite(e).all())
+    else:
+        b = jax.tree.map(jnp.asarray, datapipe.gnn_batch(
+            100, 400, cfg.node_in, d_edge=4, n_classes=5))
+        if arch == "meshgraphnet":
+            out = m.apply(params, b["node_feats"], b["edge_feats"],
+                          b["edge_index"], cfg)
+            assert out.shape == (100, cfg.out_dim)
+        else:
+            out = m.apply(params, b["node_feats"], b["edge_index"], cfg)
+            assert out.shape == (100, cfg.out_dim)
+        assert bool(jnp.isfinite(out).all())
+    loss, grads = jax.value_and_grad(m.train_loss)(params, b, cfg)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", REC_ARCHS)
+def test_recsys_smoke(arch):
+    from repro.models.recsys import dcn
+    mod = get_arch(arch)
+    cfg = mod.SMOKE
+    params = dcn.init_params(KEY, cfg)
+    b = jax.tree.map(jnp.asarray, datapipe.recsys_batch(
+        16, cfg.n_dense, cfg.n_sparse, cfg.vocabs()))
+    logits = dcn.predict(params, b["dense"], b["sparse"], cfg)
+    assert logits.shape == (16,)
+    assert bool(jnp.isfinite(logits).all())
+    loss, grads = jax.value_and_grad(dcn.train_loss)(params, b, cfg)
+    assert np.isfinite(float(loss))
+    # retrieval head
+    cands = jax.random.normal(KEY, (100, cfg.retrieval_dim))
+    s = dcn.retrieval_scores(params, b["dense"][:1], b["sparse"][:1],
+                             cands, cfg)
+    assert s.shape == (1, 100)
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    fams = [get_arch(a).FAMILY for a in ARCHS]
+    assert fams.count("lm") == 5 and fams.count("gnn") == 4
+    assert fams.count("recsys") == 1
+    for a in ARCHS:
+        mod = get_arch(a)
+        assert len(mod.SHAPES) == 4
+
+
+def test_full_configs_match_assignment():
+    """Exact published dims (the assignment block)."""
+    p = get_arch("phi35_moe").FULL
+    assert (p.n_layers, p.d_model, p.n_heads, p.n_kv_heads, p.vocab) == \
+        (32, 4096, 32, 8, 32064)
+    assert p.moe.num_experts == 16 and p.moe.top_k == 2
+    g = get_arch("granite_moe").FULL
+    assert (g.d_model, g.n_heads, g.vocab) == (1536, 24, 49155)
+    assert g.moe.num_experts == 40 and g.moe.top_k == 8
+    d = get_arch("deepseek_7b").FULL
+    assert (d.n_layers, d.d_ff, d.n_kv_heads, d.vocab) == \
+        (30, 11008, 32, 102400)
+    m = get_arch("minitron_8b").FULL
+    assert (m.d_ff, m.vocab) == (16384, 256000)
+    s = get_arch("stablelm_12b").FULL
+    assert (s.n_layers, s.d_model, s.d_ff, s.vocab) == \
+        (40, 5120, 13824, 100352)
+    mg = get_arch("meshgraphnet").FULL
+    assert (mg.n_layers, mg.d_hidden) == (15, 128)
+    sc = get_arch("schnet").FULL
+    assert (sc.n_interactions, sc.d_hidden, sc.n_rbf) == (3, 64, 300)
+    pn = get_arch("pna").FULL
+    assert (pn.n_layers, pn.d_hidden) == (4, 75)
+    mc = get_arch("mace").FULL
+    assert (mc.n_layers, mc.d_hidden, mc.l_max, mc.correlation, mc.n_rbf) == \
+        (2, 128, 2, 3, 8)
+    dc = get_arch("dcn_v2").FULL
+    assert (dc.n_dense, dc.n_sparse, dc.embed_dim, dc.n_cross_layers) == \
+        (13, 26, 16, 3)
+    assert dc.mlp_dims == (1024, 1024, 512)

@@ -1,0 +1,139 @@
+"""Distributed engine tests (8 forced host devices via subprocess —
+device count locks at first jax init, so these run out-of-process)."""
+import pytest
+
+from conftest import run_in_subprocess
+
+
+DIST_EQUIV = r"""
+import numpy as np
+from repro.graph import make_dataset, partition_graph
+from repro.core import EngineConfig
+from repro.core.samplers import SamplerSpec
+from repro.core.distributed import DistConfig, run_distributed, assemble_paths
+from repro.core.walk_engine import run_walks
+
+for kind, kwargs in [("uniform", {}), ("alias", dict(weighted=True, with_alias=True))]:
+    g = make_dataset("WG", scale_override=9, **kwargs)
+    pg = partition_graph(g, {N})
+    starts = np.random.default_rng(0).integers(0, g.num_vertices, 240).astype(np.int32)
+    spec = SamplerSpec(kind=kind)
+    ref = run_walks(g, starts, spec, EngineConfig(num_slots=64, max_hops=10), seed=3)
+    rp, rl = ref.as_numpy()
+    logs, stats = run_distributed(pg, starts, spec,
+        DistConfig(slots_per_device=16, max_hops=10, log_capacity=1<<14), seed=3)
+    dp, dl = assemble_paths(logs, starts, 10)
+    assert (dp == rp).all() and (dl == rl).all(), kind
+    assert int(np.asarray(stats.drops).sum()) == 0, kind
+print("EQUIV_OK")
+"""
+
+
+@pytest.mark.parametrize("n_devices", [2, 8])
+def test_distributed_bit_identical(n_devices):
+    """The strongest §V-A check: re-routing tasks across N devices yields
+    bit-identical walks to the single-device engine."""
+    out = run_in_subprocess(DIST_EQUIV.replace("{N}", str(n_devices)),
+                            devices=max(n_devices, 2))
+    assert "EQUIV_OK" in out
+
+
+PPR_DIST = r"""
+import numpy as np
+from repro.graph import make_dataset, partition_graph
+from repro.core import EngineConfig
+from repro.core.samplers import SamplerSpec
+from repro.core.distributed import DistConfig, run_distributed, assemble_paths
+from repro.core.walk_engine import run_walks
+
+g = make_dataset("CP", scale_override=9)
+pg = partition_graph(g, 8)
+starts = np.random.default_rng(1).integers(0, g.num_vertices, 200).astype(np.int32)
+spec = SamplerSpec(kind="uniform", stop_prob=0.2)
+ref = run_walks(g, starts, spec, EngineConfig(num_slots=64, max_hops=20), seed=11)
+logs, stats = run_distributed(pg, starts, spec,
+    DistConfig(slots_per_device=16, max_hops=20, log_capacity=1<<14), seed=11)
+dp, dl = assemble_paths(logs, starts, 20)
+rp, rl = ref.as_numpy()
+assert (dp == rp).all() and (dl == rl).all()
+waits = int(np.asarray(stats.route_waits).sum())
+drops = int(np.asarray(stats.drops).sum())
+assert drops == 0
+print("PPR_OK waits=", waits)
+"""
+
+
+def test_distributed_ppr_and_no_drops():
+    out = run_in_subprocess(PPR_DIST, devices=8)
+    assert "PPR_OK" in out
+
+
+ROUTER_UNIT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import router
+from repro.core.tasks import WalkerSlots
+
+# pack_buckets: every live task either lands in its destination bucket or
+# retention; nothing is lost below capacity.
+S, N, K, R = 64, 4, 8, 32
+rng = np.random.default_rng(0)
+slots = WalkerSlots(
+    v_curr=jnp.asarray(rng.integers(0, 100, S), jnp.int32),
+    v_prev=jnp.full((S,), -1, jnp.int32),
+    query_id=jnp.asarray(np.arange(S), jnp.int32),
+    hop=jnp.zeros((S,), jnp.int32),
+    active=jnp.asarray(rng.random(S) < 0.8))
+dest = jnp.asarray(rng.integers(0, N, S), jnp.int32)
+prio = jnp.ones((S,), jnp.int32)
+rr = router.pack_buckets(slots, dest, prio, N, K, R)
+sent = np.asarray(rr.send.query_id)
+ret = np.asarray(rr.retention.query_id)
+live = set(np.asarray(slots.query_id)[np.asarray(slots.active)].tolist())
+placed = set(sent[sent >= 0].tolist()) | set(ret[ret >= 0].tolist())
+assert placed == live, (placed ^ live)
+assert int(rr.drops) == 0
+# destination correctness
+d = np.asarray(dest); q = np.asarray(slots.query_id)
+for b in range(N):
+    ids = sent[b*K:(b+1)*K]
+    for qid in ids[ids >= 0]:
+        assert d[list(q).index(qid)] == b
+print("ROUTER_OK")
+"""
+
+
+def test_router_pack_buckets_lossless():
+    out = run_in_subprocess(ROUTER_UNIT, devices=2)
+    assert "ROUTER_OK" in out
+
+
+N2V_DIST = r"""
+import numpy as np
+from repro.graph import make_dataset, partition_graph
+from repro.core import EngineConfig
+from repro.core.samplers import SamplerSpec
+from repro.core.distributed import DistConfig, assemble_paths
+from repro.core.distributed_n2v import run_distributed_n2v
+from repro.core.walk_engine import run_walks
+
+g = make_dataset("WG", scale_override=9)
+pg = partition_graph(g, 8)
+starts = np.random.default_rng(0).integers(0, g.num_vertices, 200).astype(np.int32)
+spec = SamplerSpec(kind="rejection_n2v", p=2.0, q=0.5, rejection_rounds=8)
+ref = run_walks(g, starts, spec, EngineConfig(num_slots=64, max_hops=10), seed=5)
+rp, rl = ref.as_numpy()
+logs, stats = run_distributed_n2v(pg, starts, spec,
+    DistConfig(slots_per_device=16, max_hops=10, log_capacity=1<<14), seed=5)
+dp, dl = assemble_paths(logs, starts, 10)
+assert (dp == rp).all() and (dl == rl).all()
+assert int(np.asarray(stats.drops).sum()) == 0
+print("N2V_DIST_OK")
+"""
+
+
+def test_distributed_node2vec_two_phase():
+    """Second-order walks distributed via two-phase routing (propose at
+    owner(v_curr), verify at owner(v_prev)) are bit-identical to the
+    single-device rejection sampler."""
+    out = run_in_subprocess(N2V_DIST, devices=8)
+    assert "N2V_DIST_OK" in out

@@ -1,0 +1,97 @@
+"""Graph substrate tests: CSR, generators, alias tables, partitioning."""
+import numpy as np
+import pytest
+
+from repro.graph import (build_csr, validate_csr, rmat_edges, GRAPH500,
+                         BALANCED, build_alias_tables, make_dataset,
+                         partition_graph)
+from repro.graph.csr import degrees, row_access, column_access
+from repro.graph.generators import dangling_fraction
+import jax.numpy as jnp
+
+
+def test_build_csr_basic():
+    edges = np.array([[0, 1], [0, 2], [1, 2], [2, 0], [3, 3]])
+    g = build_csr(edges, 5)
+    validate_csr(g)
+    assert g.num_vertices == 5 and g.num_edges == 5
+    assert list(np.asarray(degrees(g))) == [2, 1, 1, 1, 0]
+    addr, deg = row_access(g, jnp.asarray([0, 4]))
+    assert list(np.asarray(deg)) == [2, 0]
+    v = column_access(g, addr[:1], jnp.asarray([1]))
+    assert int(v[0]) == 2
+
+
+def test_csr_neighbor_lists_sorted():
+    g = make_dataset("WG", scale_override=9)
+    rp, col = np.asarray(g.row_ptr), np.asarray(g.col)
+    for v in range(0, g.num_vertices, 37):
+        seg = col[rp[v]:rp[v + 1]]
+        assert (np.diff(seg) > 0).all()  # sorted + dedup
+
+
+def test_rmat_deterministic():
+    e1, n1 = rmat_edges(10, 4, GRAPH500, seed=3)
+    e2, n2 = rmat_edges(10, 4, GRAPH500, seed=3)
+    assert n1 == n2 == 1024
+    assert np.array_equal(e1, e2)
+    e3, _ = rmat_edges(10, 4, GRAPH500, seed=4)
+    assert not np.array_equal(e1, e3)
+
+
+def test_rmat_graph500_skew():
+    """Graph500 initiator produces a much more skewed degree distribution
+    than balanced (the imbalance driver of paper §VIII-C2)."""
+    eb, n = rmat_edges(12, 8, BALANCED, seed=0)
+    es, _ = rmat_edges(12, 8, GRAPH500, seed=0)
+    db = np.bincount(eb[:, 0], minlength=n)
+    ds = np.bincount(es[:, 0], minlength=n)
+    assert ds.max() > 4 * db.max()
+    assert dangling_fraction(es, n) > dangling_fraction(eb, n)
+
+
+def test_alias_tables_preserve_distribution(rng):
+    """Alias sampling must reproduce the edge-weight distribution."""
+    w = rng.random(8).astype(np.float32) + 0.05
+    edges = np.array([[0, i + 1] for i in range(8)])
+    g = build_csr(edges, 9, weights=w)
+    g = build_alias_tables(g)
+    prob = np.asarray(g.alias_prob)[:8]
+    alias = np.asarray(g.alias_idx)[:8]
+    # exact check: total mass per column equals d*w_i/sum(w)
+    mass = prob.copy()
+    for k in range(8):
+        mass[alias[k]] += 1.0 - prob[k]
+    expect = 8 * w / w.sum()
+    np.testing.assert_allclose(mass, expect, rtol=1e-4)
+
+
+def test_partition_preserves_neighbor_segments():
+    g = make_dataset("WG", scale_override=9)
+    pg = partition_graph(g, 4)
+    rp, col = np.asarray(g.row_ptr), np.asarray(g.col)
+    lrp, lcol = np.asarray(pg.row_ptr), np.asarray(pg.col)
+    for v in range(0, g.num_vertices, 13):
+        r, k = v % 4, v // 4
+        seg_global = col[rp[v]:rp[v + 1]]
+        seg_local = lcol[r, lrp[r, k]:lrp[r, k + 1]]
+        assert np.array_equal(seg_global, seg_local)
+
+
+def test_typed_graph_offsets():
+    g = make_dataset("WG", scale_override=9, num_edge_types=3)
+    validate_csr(g)
+    rp = np.asarray(g.row_ptr)
+    et = np.asarray(g.edge_type)
+    to = np.asarray(g.type_offsets)
+    for v in range(0, g.num_vertices, 29):
+        seg = et[rp[v]:rp[v + 1]]
+        for t in range(3):
+            assert (seg[to[v, t]:to[v, t + 1]] == t).all()
+
+
+def test_dataset_registry():
+    from repro.graph.datasets import DATASET_SPECS
+    assert set(DATASET_SPECS) == {"WG", "CP", "AS", "LJ", "AB", "UK"}
+    for spec in DATASET_SPECS.values():
+        assert spec.num_edges > spec.num_vertices

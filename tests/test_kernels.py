@@ -1,0 +1,126 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis property tests
+against the pure-jnp oracles (interpret=True executes kernel bodies on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import make_dataset
+from repro.kernels.walk_step import ops as ws_ops
+from repro.kernels.walk_step import ref as ws_ref
+from repro.kernels.segment_sum import segment_sum, SegmentSumOp
+from repro.kernels.segment_sum.ref import segment_sum_ref
+from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_dataset("WG", scale_override=9, weighted=True,
+                        with_alias=True)
+
+
+@pytest.mark.parametrize("W,tile", [(5, 64), (64, 16), (200, 64), (256, 256)])
+def test_walk_step_uniform_sweep(graph, W, tile, rng):
+    v = jnp.asarray(rng.integers(0, graph.num_vertices, W), jnp.int32)
+    u = jnp.asarray(rng.random(W), jnp.float32)
+    vn, dg = ws_ops.walk_step_uniform(v, u, graph.row_ptr, graph.col,
+                                      tile=tile)
+    vr, dr = ws_ref.walk_step_uniform_ref(v, u, graph.row_ptr, graph.col)
+    np.testing.assert_array_equal(np.asarray(vn), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(dg), np.asarray(dr))
+
+
+@pytest.mark.parametrize("W,tile", [(7, 32), (128, 64)])
+def test_walk_step_alias_sweep(graph, W, tile, rng):
+    v = jnp.asarray(rng.integers(0, graph.num_vertices, W), jnp.int32)
+    u1 = jnp.asarray(rng.random(W), jnp.float32)
+    u2 = jnp.asarray(rng.random(W), jnp.float32)
+    args = (v, u1, u2, graph.row_ptr, graph.col, graph.alias_prob,
+            graph.alias_idx)
+    vn, dg = ws_ops.walk_step_alias(*args, tile=tile)
+    vr, dr = ws_ref.walk_step_alias_ref(*args)
+    np.testing.assert_array_equal(np.asarray(vn), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(dg), np.asarray(dr))
+
+
+def test_walk_step_dangling_vertices(graph):
+    """deg==0 lanes must report v_next = -1 (termination sentinel)."""
+    deg = np.diff(np.asarray(graph.row_ptr))
+    dang = np.where(deg == 0)[0]
+    assert dang.size > 0
+    v = jnp.asarray(dang[:32], jnp.int32)
+    u = jnp.zeros((v.shape[0],), jnp.float32)
+    vn, dg = ws_ops.walk_step_uniform(v, u, graph.row_ptr, graph.col, tile=32)
+    assert (np.asarray(vn) == -1).all()
+    assert (np.asarray(dg) == 0).all()
+
+
+@pytest.mark.parametrize("E,V,D,te,rb,dtype", [
+    (64, 16, 8, 16, 8, jnp.float32),
+    (1000, 177, 16, 128, 64, jnp.float32),
+    (333, 64, 4, 32, 16, jnp.float32),
+    (256, 32, 8, 64, 32, jnp.bfloat16),
+])
+def test_segment_sum_sweep(E, V, D, te, rb, dtype, rng):
+    seg = np.sort(rng.integers(0, V, E)).astype(np.int32)
+    dat = jnp.asarray(rng.random((E, D)), dtype)
+    out = segment_sum(dat, seg, V, tile_e=te, row_block=rb)
+    ref = segment_sum_ref(dat, jnp.asarray(seg), V)
+    atol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_segment_sum_empty_segments(rng):
+    """Rows with no incident edges must be exactly zero."""
+    seg = np.sort(rng.choice(np.arange(0, 50, 5), 40)).astype(np.int32)
+    dat = jnp.asarray(rng.random((40, 4)), jnp.float32)
+    out = np.asarray(segment_sum(dat, seg, 50, tile_e=16, row_block=8))
+    empty = np.setdiff1d(np.arange(50), seg)
+    assert (out[empty] == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(E=st.integers(1, 300), V=st.integers(1, 80), D=st.integers(1, 9),
+       seed=st.integers(0, 2**31 - 1))
+def test_segment_sum_property(E, V, D, seed):
+    r = np.random.default_rng(seed)
+    seg = np.sort(r.integers(0, V, E)).astype(np.int32)
+    dat = jnp.asarray(r.standard_normal((E, D)), jnp.float32)
+    out = segment_sum(dat, seg, V, tile_e=32, row_block=16)
+    ref = segment_sum_ref(dat, jnp.asarray(seg), V)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+@pytest.mark.parametrize("B,H,R,D,tb", [
+    (8, 3, 40, 8, 8), (100, 1, 500, 16, 32), (33, 6, 64, 4, 16),
+])
+def test_embedding_bag_sweep(B, H, R, D, tb, rng):
+    idx = jnp.asarray(rng.integers(-1, R, (B, H)), jnp.int32)
+    w = jnp.asarray(rng.random((B, H)), jnp.float32)
+    tbl = jnp.asarray(rng.random((R, D)), jnp.float32)
+    out = embedding_bag(idx, tbl, w, tile_b=tb)
+    ref = embedding_bag_ref(idx, w, tbl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(B=st.integers(1, 60), H=st.integers(1, 8), R=st.integers(2, 100),
+       D=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_embedding_bag_property(B, H, R, D, seed):
+    r = np.random.default_rng(seed)
+    idx = jnp.asarray(r.integers(-1, R, (B, H)), jnp.int32)
+    w = jnp.asarray(r.random((B, H)), jnp.float32)
+    tbl = jnp.asarray(r.standard_normal((R, D)), jnp.float32)
+    out = embedding_bag(idx, tbl, w, tile_b=16)
+    ref = embedding_bag_ref(idx, w, tbl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_embedding_bag_all_padding():
+    idx = jnp.full((4, 3), -1, jnp.int32)
+    tbl = jnp.ones((10, 8), jnp.float32)
+    out = embedding_bag(idx, tbl, tile_b=4)
+    assert (np.asarray(out) == 0).all()

@@ -1,0 +1,92 @@
+"""Cross-cutting property tests (hypothesis) on system invariants."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import walks, EngineConfig
+from repro.core.samplers import SamplerSpec
+from repro.core.walk_engine import run_walks
+from repro.graph import build_csr, build_alias_tables
+from repro.graph.generators import rmat_edges, GRAPH500
+from repro.models.attention_chunked import chunked_attention, full_attention_ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), ef=st.integers(2, 8),
+       max_hops=st.integers(1, 12))
+def test_walks_always_follow_edges(seed, ef, max_hops):
+    """∀ RMAT graph, seed, length: every recorded transition is a real
+    edge; every query terminates exactly once; lengths ≤ max_hops+1."""
+    edges, n = rmat_edges(8, ef, GRAPH500, seed=seed)
+    g = build_csr(edges, n)
+    starts = np.random.default_rng(seed).integers(0, n, 100)
+    res = run_walks(g, starts, SamplerSpec(kind="uniform"),
+                    EngineConfig(num_slots=32, max_hops=max_hops), seed=seed)
+    p, l = res.as_numpy()
+    assert int(res.stats.terminations) == 100
+    assert (l >= 1).all() and (l <= max_hops + 1).all()
+    rp, col = np.asarray(g.row_ptr), np.asarray(g.col)
+    for q in range(100):
+        for t in range(l[q] - 1):
+            u, v = p[q, t], p[q, t + 1]
+            assert v in col[rp[u]:rp[u + 1]]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_alias_tables_mass_conservation(seed):
+    """∀ weights: alias table column masses equal d·w_i/Σw (exact Vose
+    invariant)."""
+    r = np.random.default_rng(seed)
+    d = int(r.integers(2, 20))
+    w = r.random(d).astype(np.float32) + 1e-3
+    edges = np.array([[0, i + 1] for i in range(d)])
+    g = build_alias_tables(build_csr(edges, d + 1, weights=w))
+    prob = np.asarray(g.alias_prob)[:d]
+    alias = np.asarray(g.alias_idx)[:d]
+    mass = prob.copy()
+    for k in range(d):
+        mass[alias[k]] += 1.0 - prob[k]
+    np.testing.assert_allclose(mass, d * w / w.sum(), rtol=2e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       s_pow=st.integers(3, 5), qb_pow=st.integers(2, 4),
+       hq=st.sampled_from([2, 4, 8]), causal=st.booleans())
+def test_chunked_attention_equals_full(seed, s_pow, qb_pow, hq, causal):
+    """∀ shapes/blocks: online-softmax chunked attention ≡ materialized
+    softmax attention."""
+    S, qb = 1 << s_pow, 1 << qb_pow
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    hkv = hq // 2 if hq > 2 else hq
+    q = jax.random.normal(ks[0], (2, S, hq, 8))
+    k = jax.random.normal(ks[1], (2, S, hkv, 8))
+    v = jax.random.normal(ks[2], (2, S, hkv, 8))
+    o = chunked_attention(q, k, v, causal=causal, q_block=min(qb, S),
+                          kv_block=min(qb, S))
+    r = full_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), slots=st.sampled_from([16, 64, 256]))
+def test_paths_independent_of_engine_configuration(seed, slots):
+    """∀ lane count / scheduling mode / step impl: identical walks (the
+    Markov stateless-decomposition invariant, §V-A)."""
+    edges, n = rmat_edges(8, 4, GRAPH500, seed=seed)
+    g = build_csr(edges, n)
+    starts = np.random.default_rng(seed).integers(0, n, 80)
+    spec = SamplerSpec(kind="uniform")
+    base = EngineConfig(num_slots=slots, max_hops=8)
+    ref = run_walks(g, starts, spec, EngineConfig(num_slots=128, max_hops=8),
+                    seed=seed).as_numpy()
+    for cfg in (base, dataclasses.replace(base, mode="static"),
+                dataclasses.replace(base, step_impl="pallas")):
+        got = run_walks(g, starts, spec, cfg, seed=seed).as_numpy()
+        assert np.array_equal(got[0], ref[0])
+        assert np.array_equal(got[1], ref[1])

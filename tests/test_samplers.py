@@ -1,0 +1,135 @@
+"""Sampler correctness: distributions, adjacency tests, 2nd-order bias."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.samplers import (SamplerSpec, get_sampler, edge_exists,
+                                 sample_uniform)
+from repro.core.tasks import WalkerSlots
+from repro.graph import build_csr, build_alias_tables
+
+
+def _slots(v_curr, v_prev=None, n=None):
+    n = n or len(v_curr)
+    return WalkerSlots(
+        v_curr=jnp.asarray(v_curr, jnp.int32),
+        v_prev=jnp.asarray(v_prev if v_prev is not None else [-1] * n,
+                           jnp.int32),
+        query_id=jnp.arange(n, dtype=jnp.int32),
+        hop=jnp.zeros((n,), jnp.int32),
+        active=jnp.ones((n,), bool))
+
+
+def _star_graph(weights=None):
+    """Vertex 0 with 4 neighbors 1..4."""
+    edges = np.array([[0, 1], [0, 2], [0, 3], [0, 4]])
+    return build_csr(edges, 5, weights=weights)
+
+
+def _empirical(g, spec, n=20000, v_prev=None):
+    slots = _slots([0] * n, v_prev=[v_prev] * n if v_prev is not None
+                   else None)
+    # vary query ids -> independent streams
+    from repro.graph.csr import row_access
+    addr, deg = row_access(g, slots.v_curr)
+    sampler = get_sampler(spec)
+    idx, ok = sampler(g, addr, deg, slots, jax.random.PRNGKey(0))
+    e = np.asarray(jnp.clip(addr + idx, 0, g.num_edges - 1))
+    chosen = np.asarray(g.col)[e]
+    return np.bincount(chosen, minlength=5)[1:5] / n
+
+
+def test_uniform_distribution():
+    g = _star_graph()
+    freq = _empirical(g, SamplerSpec(kind="uniform"))
+    np.testing.assert_allclose(freq, 0.25, atol=0.02)
+
+
+def test_alias_weighted_distribution():
+    w = np.array([0.1, 0.2, 0.3, 0.4], np.float32)
+    g = build_alias_tables(_star_graph(weights=w))
+    freq = _empirical(g, SamplerSpec(kind="alias"))
+    np.testing.assert_allclose(freq, w / w.sum(), atol=0.02)
+
+
+def test_edge_exists():
+    edges = np.array([[0, 1], [0, 3], [1, 2], [2, 0], [2, 3]])
+    g = build_csr(edges, 4)
+    src = jnp.asarray([0, 0, 0, 1, 2, 2, 3])
+    dst = jnp.asarray([1, 2, 3, 2, 0, 1, 0])
+    got = np.asarray(edge_exists(g, src, dst))
+    assert list(got) == [True, False, True, True, True, False, False]
+    # batched candidate matrix
+    got2 = np.asarray(edge_exists(g, jnp.asarray([0, 2]),
+                                  jnp.asarray([[1, 2, 3], [0, 3, 1]])))
+    assert got2.tolist() == [[True, False, True], [True, True, False]]
+
+
+def _n2v_exact(g, v_prev, v_curr, p, q, weights=None):
+    """Exact Node2Vec transition distribution."""
+    rp, col = np.asarray(g.row_ptr), np.asarray(g.col)
+    nbrs = col[rp[v_curr]:rp[v_curr + 1]]
+    w = np.ones(len(nbrs)) if weights is None else \
+        np.asarray(weights)[rp[v_curr]:rp[v_curr + 1]]
+    prev_nbrs = set(col[rp[v_prev]:rp[v_prev + 1]])
+    bias = np.array([1 / p if y == v_prev else
+                     (1.0 if y in prev_nbrs else 1 / q) for y in nbrs])
+    probs = w * bias
+    return nbrs, probs / probs.sum()
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+def test_node2vec_distribution(weighted, rng):
+    # ring + chords graph, walk from 2 with prev=1
+    edges = [(i, (i + 1) % 8) for i in range(8)]
+    edges += [((i + 1) % 8, i) for i in range(8)]
+    edges += [(2, 5), (2, 6), (1, 3)]
+    edges = np.array(sorted(set(edges)))
+    w = (rng.random(len(edges)).astype(np.float32) + 0.1) if weighted else None
+    g = build_csr(edges, 8, weights=w)
+    p_, q_ = 2.0, 0.5
+    kind = "reservoir_n2v" if weighted else "rejection_n2v"
+    spec = SamplerSpec(kind=kind, p=p_, q=q_, rejection_rounds=16)
+    n = 30000
+    slots = _slots([2] * n, v_prev=[1] * n)
+    from repro.graph.csr import row_access
+    addr, deg = row_access(g, slots.v_curr)
+    idx, ok = get_sampler(spec)(g, addr, deg, slots, jax.random.PRNGKey(1))
+    e = np.asarray(jnp.clip(addr + idx, 0, g.num_edges - 1))
+    chosen = np.asarray(g.col)[e]
+    nbrs, probs = _n2v_exact(g, 1, 2, p_, q_,
+                             None if not weighted else g.weights)
+    emp = np.bincount(chosen, minlength=8)[nbrs] / n
+    np.testing.assert_allclose(emp, probs, atol=0.025)
+
+
+def test_metapath_respects_types(rng):
+    from repro.graph import make_dataset
+    g = make_dataset("WG", scale_override=9, num_edge_types=3)
+    spec = SamplerSpec(kind="metapath", metapath=(1,))
+    n = 500
+    starts = rng.integers(0, g.num_vertices, n)
+    slots = _slots(starts)
+    from repro.graph.csr import row_access
+    addr, deg = row_access(g, slots.v_curr)
+    idx, ok = get_sampler(spec)(g, addr, deg, slots, jax.random.PRNGKey(2))
+    e = np.asarray(jnp.clip(addr + idx, 0, g.num_edges - 1))
+    et = np.asarray(g.edge_type)
+    ok = np.asarray(ok)
+    assert ok.sum() > 0
+    assert (et[e[ok]] == 1).all()
+
+
+def test_stateless_rng_reproducible():
+    """The draw is a pure function of (seed, qid, hop) — the stateless-task
+    invariant that makes out-of-order execution sound (paper §V-A)."""
+    from repro.core import rng as task_rng
+    k = jax.random.PRNGKey(0)
+    qid = jnp.asarray([5, 5, 9], jnp.uint32)
+    hop = jnp.asarray([1, 1, 2], jnp.uint32)
+    u1 = task_rng.task_uniforms(k, qid, hop, 3)
+    u2 = task_rng.task_uniforms(k, qid[::-1], hop[::-1], 3)[::-1]
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+    assert np.array_equal(np.asarray(u1[0]), np.asarray(u1[1]))
+    assert not np.array_equal(np.asarray(u1[0]), np.asarray(u1[2]))
