@@ -2,13 +2,12 @@
 ``name,us_per_call,derived`` CSV rows (scaffold contract)."""
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import numpy as np
 
 from repro.core.scheduler import analyze_run
-from repro.core.walk_engine import run_walks, EngineConfig
+from repro.core.walk_engine import EngineConfig
 
 
 def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw):

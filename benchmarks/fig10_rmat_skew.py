@@ -14,7 +14,7 @@ from benchmarks.common import bench_walk, emit
 from repro.core.samplers import SamplerSpec
 from repro.core.walk_engine import EngineConfig
 from repro.graph import build_csr
-from repro.graph.generators import rmat_edges, BALANCED, GRAPH500
+from repro.graph.generators import BALANCED, GRAPH500, rmat_edges
 
 CFG = EngineConfig(num_slots=1024, max_hops=80, record_paths=False)
 

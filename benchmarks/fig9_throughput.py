@@ -10,7 +10,6 @@ import numpy as np
 from benchmarks.common import bench_walk, emit
 from repro.core.samplers import SamplerSpec
 from repro.core.walk_engine import EngineConfig
-
 from repro.graph import make_dataset
 
 ALGOS = {

@@ -25,8 +25,8 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (fig8_fpga_baselines, fig9_throughput,
-                            fig10_rmat_skew, fig11_ablation, table3_scaling,
-                            table4_kernels, roofline)
+                            fig10_rmat_skew, fig11_ablation, roofline,
+                            serve_walks, table3_scaling, table4_kernels)
     suites = {
         "fig8": fig8_fpga_baselines.run,
         "fig9": fig9_throughput.run,
@@ -35,6 +35,7 @@ def main() -> None:
         "table3": table3_scaling.run,
         "table4": table4_kernels.run,
         "roofline": roofline.run,
+        "serve": serve_walks.run,
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

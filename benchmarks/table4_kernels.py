@@ -2,8 +2,8 @@
 TPU equivalents are per-kernel on-chip (VMEM/SMEM) budgets and DMA
 depths, derived from the BlockSpec tiling — plus interpret-mode
 correctness timing for scale."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, timed
 

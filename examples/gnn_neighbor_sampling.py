@@ -6,12 +6,12 @@ training, the ``minibatch_lg`` regime at CPU scale.
 
   PYTHONPATH=src python examples/gnn_neighbor_sampling.py
 """
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.graph import make_dataset
-from repro.graph.sampling_service import sample_blocks, block_union_graph
+from repro.graph.sampling_service import block_union_graph, sample_blocks
 from repro.models.gnn import pna
 from repro.optim import adamw
 

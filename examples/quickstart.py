@@ -4,7 +4,7 @@
 """
 import numpy as np
 
-from repro.core import walks, EngineConfig
+from repro.core import EngineConfig, walks
 from repro.core.scheduler import analyze_run
 from repro.graph import make_dataset
 

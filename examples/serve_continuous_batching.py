@@ -6,9 +6,9 @@ the scheduler: decode lanes = walker lanes, requests = queries).
 import dataclasses
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch
 from repro.launch.serve import continuous_batching_loop

@@ -1,0 +1,47 @@
+"""Serve walk requests as an open system: submit, poll, harvest.
+
+Two tenants submit request waves at different times; the service keeps the
+lane pool busy across both, and each tenant harvests exactly its own walks
+(request id → query-id range bookkeeping).
+
+  PYTHONPATH=src python examples/serve_walk_requests.py
+"""
+import numpy as np
+
+from repro.core import EngineConfig
+from repro.core.samplers import SamplerSpec
+from repro.graph import make_dataset
+from repro.serve import WalkService
+
+g = make_dataset("WG", scale_override=11)
+print(f"graph: |V|={g.num_vertices} |E|={g.num_edges}")
+
+svc = WalkService(g, SamplerSpec(kind="uniform"),
+                  EngineConfig(num_slots=256, max_hops=20),
+                  capacity=4096, chunk=4, seed=0)
+rng = np.random.default_rng(0)
+
+# Tenant A submits three requests; the service starts working immediately.
+a_rids = [svc.submit(rng.integers(0, g.num_vertices, 32)) for _ in range(3)]
+svc.step()
+print(f"after 1 chunk: inflight={svc.num_inflight} clock={svc.clock}")
+
+# Tenant B arrives mid-stream — no recompilation, no drain barrier.
+b_rids = [svc.submit(rng.integers(0, g.num_vertices, 64)) for _ in range(2)]
+svc.drain()
+
+for tenant, rids in (("A", a_rids), ("B", b_rids)):
+    for rid in rids:
+        r = svc.poll(rid)
+        print(f"tenant {tenant} request {rid}: {r.num_walks} walks, "
+              f"qids=[{r.qid_lo},{r.qid_hi}), sojourn={r.sojourn} supersteps, "
+              f"mean_len={r.lengths.mean():.1f}")
+
+r = svc.poll(b_rids[0])
+print("\nfirst walk of tenant B's first request:",
+      r.paths[0][: r.lengths[0]])
+
+a = svc.analyze()
+print(f"\nservice: {a.walks} walks in {a.supersteps} supersteps, "
+      f"bubble_ratio={a.bubble_ratio:.2f}, "
+      f"p99_sojourn={a.p99_sojourn:.0f} supersteps")

@@ -12,11 +12,11 @@ is ~33M params; --scale 18 --dim 384 exceeds 100M):
 import argparse
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import walks, EngineConfig
+from repro.core import EngineConfig, walks
 from repro.graph import make_dataset
 from repro.models import embeddings as emb
 from repro.optim import adamw

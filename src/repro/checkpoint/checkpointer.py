@@ -18,8 +18,8 @@ import shutil
 import threading
 from typing import Any, Optional
 
-import numpy as np
 import jax
+import numpy as np
 
 
 def _flatten_with_paths(tree):

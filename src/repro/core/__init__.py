@@ -1,16 +1,19 @@
 """RidgeWalker core: stateless task decomposition, samplers, zero-bubble
 slot-pool engine, queuing-theoretic scheduler, distributed routing."""
-from repro.core.samplers import SamplerSpec, get_sampler, edge_exists
-from repro.core.tasks import (WalkerSlots, QueryQueue, WalkStats, WalkResult,
-                              empty_slots, make_queue)
-from repro.core.walk_engine import EngineConfig, make_engine, run_walks
-from repro.core import scheduler
-from repro.core import walks
+from repro.core import scheduler, walks
+from repro.core.samplers import SamplerSpec, edge_exists, get_sampler
+from repro.core.tasks import (QueryQueue, WalkerSlots, WalkResult, WalkStats,
+                              empty_queue, empty_slots, make_queue)
+from repro.core.walk_engine import (EngineConfig, StreamState,
+                                    init_stream_state, inject_queries,
+                                    make_engine, make_superstep_runner,
+                                    run_walks)
 
 __all__ = [
     "SamplerSpec", "get_sampler", "edge_exists",
     "WalkerSlots", "QueryQueue", "WalkStats", "WalkResult",
-    "empty_slots", "make_queue",
-    "EngineConfig", "make_engine", "run_walks",
+    "empty_slots", "empty_queue", "make_queue",
+    "EngineConfig", "StreamState", "init_stream_state", "inject_queries",
+    "make_engine", "make_superstep_runner", "run_walks",
     "scheduler", "walks",
 ]

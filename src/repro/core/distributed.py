@@ -30,11 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rng as task_rng
-from repro.core import router
-from repro.core.samplers import SamplerSpec, get_sampler, SALT_STOP
+from repro.core import rng as task_rng, router
+from repro.core.samplers import SALT_STOP, SamplerSpec, get_sampler
 from repro.core.scheduler import routing_capacity
-from repro.core.tasks import WalkerSlots, WalkStats, zero_stats
+from repro.core.tasks import WalkerSlots, zero_stats
+from repro.distributed.compat import shard_map
 from repro.graph.partition import PartitionedGraph, owner_of
 
 
@@ -245,7 +245,7 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
         return (log_q[None], log_h[None], log_v[None], cursor[None],
                 jax.tree.map(lambda x: x[None], stats))
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body, mesh=mesh,
         in_specs=(P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),
                   P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),

@@ -22,7 +22,6 @@ property is phase-agnostic.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
 from typing import NamedTuple, Optional
@@ -31,11 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rng as task_rng
-from repro.core import router
-from repro.core.samplers import SamplerSpec, SALT_COLUMN
-from repro.core.tasks import WalkStats, zero_stats
+from repro.core import rng as task_rng, router
 from repro.core.distributed import DistConfig, DistLogs, LocalView
+from repro.core.samplers import SALT_COLUMN, SamplerSpec
+from repro.core.tasks import zero_stats
+from repro.distributed.compat import shard_map
 from repro.graph.partition import PartitionedGraph, owner_of
 
 
@@ -256,7 +255,7 @@ def run_distributed_n2v(pg: PartitionedGraph, starts, spec: SamplerSpec,
         return (log_q[None], log_h[None], log_v[None], cursor[None],
                 jax.tree.map(lambda x: x[None], stats))
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body, mesh=mesh,
         in_specs=(P(cfg.axis_name),) * 4 + (P(),),
         out_specs=(P(cfg.axis_name),) * 4 + (P(cfg.axis_name),),

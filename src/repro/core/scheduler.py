@@ -94,6 +94,66 @@ def analyze_run(stats: WalkStats, wall_time_s: float | None = None) -> RunAnalys
     )
 
 
+@dataclasses.dataclass
+class ServiceAnalysis:
+    """Open-system (streaming service) metrics: the queuing-theoretic view
+    of Theorem VI.1 — requests arrive continuously at offered load λ and
+    each observes a *sojourn time* (submit → last walk completed).
+
+    ``offered_load`` is λ in walks/superstep; ``utilization`` is the
+    fraction of lane service capacity demanded, ρ = λ·E[L] / W (ρ ≥ 1 means
+    the system is overloaded and sojourn grows with the backlog)."""
+
+    offered_load: float
+    utilization: float
+    requests: int
+    walks: int
+    supersteps: int
+    throughput: float        # hops per superstep (lane-work actually done)
+    p50_sojourn: float       # supersteps, per-request
+    p99_sojourn: float
+    mean_sojourn: float
+    bubble_ratio: float
+    starved_ratio: float
+    msteps_per_s: float = float("nan")
+
+
+def sojourn_percentiles(sojourns, qs=(50.0, 99.0)):
+    """Percentiles of per-request sojourn times (supersteps)."""
+    import numpy as np
+    s = np.asarray(list(sojourns), float)
+    if s.size == 0:
+        return tuple(float("nan") for _ in qs)
+    return tuple(float(np.percentile(s, q)) for q in qs)
+
+
+def analyze_service(sojourns, stats: WalkStats, num_slots: int,
+                    offered_load: float = float("nan"),
+                    mean_walk_len: float = float("nan"),
+                    wall_time_s: float | None = None) -> ServiceAnalysis:
+    """Fold per-request sojourns + engine WalkStats into service metrics."""
+    import numpy as np
+    base = analyze_run(stats, wall_time_s)
+    s = np.asarray(list(sojourns), float)
+    p50, p99 = sojourn_percentiles(s)
+    mean = float(s.mean()) if s.size else float("nan")
+    util = offered_load * mean_walk_len / max(num_slots, 1)
+    return ServiceAnalysis(
+        offered_load=offered_load,
+        utilization=util,
+        requests=int(s.size),
+        walks=base.terminations,
+        supersteps=base.supersteps,
+        throughput=base.steps / max(base.supersteps, 1),
+        p50_sojourn=p50,
+        p99_sojourn=p99,
+        mean_sojourn=mean,
+        bubble_ratio=base.bubble_ratio,
+        starved_ratio=base.starved_ratio,
+        msteps_per_s=base.msteps_per_s,
+    )
+
+
 def peak_random_access_bandwidth(f_mem_hz: float, t_rrd_cycles: float,
                                  num_channels: int, bits: int = 64) -> float:
     """Paper Eq. (1): B_peak = f_mem / t_RRD × N_chn × bits/8  [bytes/s],

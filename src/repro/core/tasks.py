@@ -51,24 +51,43 @@ class QueryQueue(NamedTuple):
     host (models the C-cycle observation/injection delay of §VI-A).  The
     feedback controller advances ``staged``; refill may only consume
     ``head < staged``.
+
+    ``tail`` decouples the *buffer size* (``capacity``, a static shape) from
+    the *queries that actually exist* (a traced scalar): in the closed system
+    the two coincide, while the open-system streaming engine appends arrivals
+    at ``tail`` between superstep chunks.  Invariant:
+    ``head <= staged <= tail <= capacity``.
     """
 
     start_vertex: jnp.ndarray  # (Q,) int32
     head: jnp.ndarray          # scalar int32
     staged: jnp.ndarray        # scalar int32
+    tail: jnp.ndarray          # scalar int32 — arrivals so far
 
     @property
     def capacity(self) -> int:
         return self.start_vertex.shape[-1]
 
 
-def make_queue(start_vertices, staged: int | None = None) -> QueryQueue:
+def make_queue(start_vertices, staged: int | None = None,
+               tail: int | None = None) -> QueryQueue:
     sv = jnp.asarray(start_vertices, jnp.int32)
     q = sv.shape[-1]
     return QueryQueue(
         start_vertex=sv,
         head=jnp.zeros((), jnp.int32),
         staged=jnp.asarray(q if staged is None else min(staged, q), jnp.int32),
+        tail=jnp.asarray(q if tail is None else min(tail, q), jnp.int32),
+    )
+
+
+def empty_queue(capacity: int) -> QueryQueue:
+    """Open-system buffer: room for ``capacity`` queries, none arrived yet."""
+    return QueryQueue(
+        start_vertex=jnp.zeros((capacity,), jnp.int32),
+        head=jnp.zeros((), jnp.int32),
+        staged=jnp.zeros((), jnp.int32),
+        tail=jnp.zeros((), jnp.int32),
     )
 
 

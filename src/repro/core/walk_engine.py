@@ -21,22 +21,41 @@ The host→device injection latency is modeled by the queue's ``staged``
 watermark, advanced by a feedback controller with C-superstep-delayed
 observations of ``head`` (paper §VI-A "Back-pressure and Observation
 Delay"); `scheduler.py` provisions the stage-ahead depth per Theorem VI.1.
+
+Closed vs. open system
+----------------------
+The engine exposes two execution styles over one superstep function:
+
+  * ``make_engine`` — the closed system of the paper's evaluation: a fixed
+    query batch is drained to completion inside a single
+    ``jax.lax.while_loop``.
+  * ``make_superstep_runner`` — the open system of the queuing-theoretic
+    setting Theorem VI.1 actually models: a jitted
+    ``run_supersteps(graph, state, seed, k)`` advances *at most* ``k``
+    supersteps and returns the persistent :class:`StreamState`, so the host
+    can append newly arrived queries (``inject_queries``) between chunks
+    without recompiling.  ``k`` and the arrival count are traced scalars;
+    only the buffer shapes are static.  `repro.serve` builds a multi-tenant
+    walk service on top of this.
+
+Because path content depends only on ``(seed, query_id, hop)``, chunked
+execution is bit-identical to one-shot execution for the same seed — the
+property `tests/test_streaming.py` pins down.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import rng as task_rng
-from repro.core.samplers import SamplerSpec, get_sampler, SALT_STOP
-from repro.core.tasks import (WalkerSlots, QueryQueue, WalkStats, WalkResult,
-                              empty_slots, make_queue, zero_stats)
-from repro.core import scheduler as sched
-from repro.graph.csr import CSRGraph, row_access, column_access
+from repro.core import rng as task_rng, scheduler as sched
+from repro.core.samplers import SALT_STOP, SamplerSpec, get_sampler
+from repro.core.tasks import (QueryQueue, WalkerSlots, WalkResult, WalkStats,
+                              empty_queue, empty_slots, make_queue, zero_stats)
+from repro.graph.csr import CSRGraph, column_access, row_access
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,8 +70,23 @@ class EngineConfig:
     step_impl: str = "jnp"         # jnp | pallas (fused walk-step kernel)
 
 
-class EngineState(Tuple):
-    pass
+class StreamState(NamedTuple):
+    """Persistent engine state threaded through chunked superstep runs.
+
+    All leaves are device arrays with static shapes, so the same jitted
+    ``run_supersteps`` serves every chunk of a stream.  ``done[q]`` flips to
+    True when query ``q`` terminates — the harvesting signal for the service
+    layer (a lane-independent property: it does not matter which lane served
+    the final hop).
+    """
+
+    slots: WalkerSlots
+    queue: QueryQueue
+    paths: jnp.ndarray      # (Q, max_hops+1) int32; (1, 1) when not recording
+    lengths: jnp.ndarray    # (Q,) int32; (1,) when not recording
+    done: jnp.ndarray       # (Q,) bool — query fully terminated
+    stats: WalkStats
+    head_hist: jnp.ndarray  # (C+1,) int32 — delayed head observations
 
 
 def _stage_depth(cfg: EngineConfig) -> int:
@@ -60,16 +94,48 @@ def _stage_depth(cfg: EngineConfig) -> int:
     return max(1, int(round(cfg.queue_depth_factor * d)))
 
 
-def _init_state(graph, queue: QueryQueue, cfg: EngineConfig, num_queries: int):
-    slots = empty_slots(cfg.num_slots)
+def _fresh_buffers(cfg: EngineConfig, num_queries: int):
     if cfg.record_paths:
         paths = jnp.full((num_queries, cfg.max_hops + 1), -1, jnp.int32)
         lengths = jnp.zeros((num_queries,), jnp.int32)
     else:
         paths = jnp.full((1, 1), -1, jnp.int32)
         lengths = jnp.zeros((1,), jnp.int32)
-    head_hist = jnp.zeros((cfg.injection_delay + 1,), jnp.int32)
-    return slots, queue, paths, lengths, zero_stats(), head_hist
+    return paths, lengths
+
+
+def init_stream_state(cfg: EngineConfig, capacity: int) -> StreamState:
+    """Empty open-system state: a buffer with room for ``capacity`` queries,
+    none of which have arrived yet (``tail == 0``)."""
+    paths, lengths = _fresh_buffers(cfg, capacity)
+    return StreamState(
+        slots=empty_slots(cfg.num_slots),
+        queue=empty_queue(capacity),
+        paths=paths,
+        lengths=lengths,
+        done=jnp.zeros((capacity,), bool),
+        stats=zero_stats(),
+        head_hist=jnp.zeros((cfg.injection_delay + 1,), jnp.int32),
+    )
+
+
+@jax.jit
+def inject_queries(state: StreamState, new_starts: jnp.ndarray,
+                   n_valid) -> StreamState:
+    """Append arrivals at the queue tail (host→device injection).
+
+    ``new_starts`` may be padded to a fixed block size to bound the number
+    of compiled shapes; only the first ``n_valid`` entries become real
+    queries (``tail`` advances by ``n_valid``; padded entries sit beyond
+    ``tail`` and are overwritten by the next injection).  The caller must
+    ensure ``tail + len(new_starts) <= capacity`` — `serve.WalkService`
+    tracks a host mirror of ``tail`` for exactly this admission check.
+    """
+    q = state.queue
+    sv = jax.lax.dynamic_update_slice(
+        q.start_vertex, jnp.asarray(new_starts, jnp.int32), (q.tail,))
+    tail = q.tail + jnp.asarray(n_valid, jnp.int32)
+    return state._replace(queue=q._replace(start_vertex=sv, tail=tail))
 
 
 def _refill(slots: WalkerSlots, queue: QueryQueue, paths, lengths,
@@ -109,20 +175,22 @@ def _refill(slots: WalkerSlots, queue: QueryQueue, paths, lengths,
 def _advance_controller(queue: QueryQueue, head_hist: jnp.ndarray,
                         cfg: EngineConfig, depth: int):
     """Feedback-driven staging: observe head with C-superstep delay, keep
-    the staged watermark >= delayed_head + D (Theorem VI.1).
+    the staged watermark >= delayed_head + D (Theorem VI.1), clipped to the
+    queries that have actually *arrived* (``tail``) — in the open system the
+    controller reacts to live arrivals, not a fixed batch size.
 
     ``head_hist`` holds the last C+1 head observations; pushing the current
     head first and reading index 0 yields the head from exactly C
     supersteps ago (the freshest observation available under the delay)."""
     head_hist = jnp.concatenate([head_hist[1:], queue.head[None]])
     delayed_head = head_hist[0]
-    target = jnp.minimum(delayed_head + depth, queue.capacity)
+    target = jnp.minimum(delayed_head + depth, queue.tail)
     staged = jnp.maximum(queue.staged, target)
     return queue._replace(staged=staged), head_hist
 
 
-def _process(graph: CSRGraph, slots: WalkerSlots, spec: SamplerSpec,
-             cfg: EngineConfig, base_key, paths, lengths):
+def _process(graph: CSRGraph, spec: SamplerSpec, cfg: EngineConfig, base_key,
+             slots: WalkerSlots, paths, lengths, done):
     """One hop for every live lane: Row Access → Sampling → Column Access →
     terminate (paper Alg. II.1 lines 5-9, vectorized over lanes)."""
     A = slots.active
@@ -174,22 +242,26 @@ def _process(graph: CSRGraph, slots: WalkerSlots, spec: SamplerSpec,
         scatter_q = jnp.where(adv, slots.query_id, nq)
         paths = paths.at[scatter_q, new_hop].set(v_next, mode="drop")
         lengths = lengths.at[scatter_q].set(new_hop + 1, mode="drop")
-    return new_slots, terminated, adv, paths, lengths
+    nd = done.shape[0]
+    scatter_d = jnp.where(terminated & A, slots.query_id, nd)
+    done = done.at[scatter_d].set(True, mode="drop")
+    return new_slots, terminated, adv, paths, lengths, done
 
 
-def _superstep(graph, spec, cfg, base_key, depth, state):
-    slots, queue, paths, lengths, stats, head_hist = state
+def _superstep(graph, spec, cfg, base_key, depth,
+               state: StreamState) -> StreamState:
+    slots, queue, paths, lengths, done, stats, head_hist = state
     W = cfg.num_slots
 
-    slots, terminated, adv, paths, lengths = _process(
-        graph, slots, spec, cfg, base_key, paths, lengths)
+    slots, terminated, adv, paths, lengths, done = _process(
+        graph, spec, cfg, base_key, slots, paths, lengths, done)
 
     n_active = jnp.sum(slots.active.astype(jnp.int32))
     idle = W - n_active
     # Idle lanes while unserved queries exist upstream = scheduler
     # starvation (what Theorem VI.1 eliminates); idle lanes after the last
-    # query was issued = unavoidable tail drain.
-    upstream = (queue.head < queue.capacity).astype(jnp.int32)
+    # arrived query was issued = unavoidable tail drain.
+    upstream = (queue.head < queue.tail).astype(jnp.int32)
     stats = stats._replace(
         steps=stats.steps + jnp.sum(adv.astype(jnp.int32)),
         slot_steps=stats.slot_steps + W,
@@ -203,11 +275,47 @@ def _superstep(graph, spec, cfg, base_key, depth, state):
     queue, head_hist = _advance_controller(queue, head_hist, cfg, depth)
     slots, queue, paths, lengths = _refill(slots, queue, paths, lengths, cfg,
                                            terminated)
-    return slots, queue, paths, lengths, stats, head_hist
+    return StreamState(slots, queue, paths, lengths, done, stats, head_hist)
+
+
+def _work_left(state: StreamState):
+    return (state.queue.head < state.queue.tail) | jnp.any(state.slots.active)
+
+
+def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
+    """Build a jitted ``run_supersteps(graph, state, seed, k) -> StreamState``.
+
+    Advances the stream by at most ``k`` supersteps, stopping early when no
+    work remains (no staged queries and no live lanes).  ``k`` is a traced
+    scalar, so chunk sizes can vary call-to-call without recompilation; the
+    host injects arrivals between chunks with :func:`inject_queries`.
+    """
+    depth = _stage_depth(cfg)
+
+    @jax.jit
+    def run_supersteps(graph: CSRGraph, state: StreamState, seed,
+                       k) -> StreamState:
+        base_key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
+        step = partial(_superstep, graph, spec, cfg, base_key, depth)
+
+        def cond(carry):
+            i, st = carry
+            return (i < k) & _work_left(st)
+
+        def body(carry):
+            i, st = carry
+            return i + 1, step(st)
+
+        _, state = jax.lax.while_loop(
+            cond, body, (jnp.zeros((), jnp.int32), state))
+        return state
+
+    return run_supersteps
 
 
 def make_engine(spec: SamplerSpec, cfg: EngineConfig):
-    """Build a jitted ``run(graph, start_vertices, seed) -> WalkResult``."""
+    """Build a jitted ``run(graph, start_vertices, seed) -> WalkResult``
+    (the closed system: drain a fixed query batch to completion)."""
 
     @partial(jax.jit, static_argnames=("num_queries",))
     def run(graph: CSRGraph, start_vertices: jnp.ndarray, seed,
@@ -215,24 +323,32 @@ def make_engine(spec: SamplerSpec, cfg: EngineConfig):
         base_key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
         depth = _stage_depth(cfg)
         queue = make_queue(start_vertices, staged=min(depth, num_queries))
-        state = _init_state(graph, queue, cfg, num_queries)
+        paths, lengths = _fresh_buffers(cfg, num_queries)
+        state = StreamState(
+            slots=empty_slots(cfg.num_slots),
+            queue=queue,
+            paths=paths,
+            lengths=lengths,
+            done=jnp.zeros((num_queries,), bool),
+            stats=zero_stats(),
+            head_hist=jnp.zeros((cfg.injection_delay + 1,), jnp.int32),
+        )
         # Initial injection so lanes processed in superstep 1 are live.
-        slots, queue, paths, lengths, stats, head_hist = state
-        queue, head_hist = _advance_controller(queue, head_hist, cfg, depth)
+        queue, head_hist = _advance_controller(state.queue, state.head_hist,
+                                               cfg, depth)
         slots, queue, paths, lengths = _refill(
-            slots, queue, paths, lengths, cfg,
+            state.slots, queue, state.paths, state.lengths, cfg,
             jnp.zeros((cfg.num_slots,), bool))
-        state = (slots, queue, paths, lengths, stats, head_hist)
+        state = state._replace(slots=slots, queue=queue, paths=paths,
+                               lengths=lengths, head_hist=head_hist)
 
-        def cond(state):
-            slots, queue, _, _, stats, _ = state
-            work_left = (queue.head < num_queries) | jnp.any(slots.active)
-            return work_left & (stats.supersteps < cfg.max_supersteps)
+        def cond(st):
+            return _work_left(st) & (st.stats.supersteps < cfg.max_supersteps)
 
         step = partial(_superstep, graph, spec, cfg, base_key, depth)
         state = jax.lax.while_loop(cond, step, state)
-        slots, queue, paths, lengths, stats, _ = state
-        return WalkResult(paths=paths, lengths=lengths, stats=stats)
+        return WalkResult(paths=state.paths, lengths=state.lengths,
+                          stats=state.stats)
 
     return run
 

@@ -8,11 +8,9 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
-import jax.numpy as jnp
-
 from repro.core.samplers import SamplerSpec
-from repro.core.walk_engine import EngineConfig, run_walks
 from repro.core.tasks import WalkResult
+from repro.core.walk_engine import EngineConfig, run_walks
 from repro.graph.csr import CSRGraph
 
 

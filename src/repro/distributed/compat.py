@@ -1,0 +1,20 @@
+"""JAX version compatibility shims for the distributed engines."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """`jax.shard_map` across jax versions.
+
+    jax >= 0.6 exposes ``jax.shard_map(..., check_vma=...)``; on the 0.4.x
+    line pinned in requirements.txt the API lives at
+    ``jax.experimental.shard_map.shard_map`` and the replication-check
+    kwarg is spelled ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -1,9 +1,10 @@
 """Graph substrate: CSR representation, generators, alias tables, partitioning."""
-from repro.graph.csr import CSRGraph, build_csr, degrees, validate_csr
-from repro.graph.generators import rmat_edges, erdos_renyi_edges, GRAPH500, BALANCED
 from repro.graph.alias import build_alias_tables
-from repro.graph.datasets import make_dataset, DATASET_SPECS
-from repro.graph.partition import partition_graph, PartitionedGraph, owner_of
+from repro.graph.csr import CSRGraph, build_csr, degrees, validate_csr
+from repro.graph.datasets import DATASET_SPECS, make_dataset
+from repro.graph.generators import (BALANCED, GRAPH500, erdos_renyi_edges,
+                                    rmat_edges)
+from repro.graph.partition import PartitionedGraph, owner_of, partition_graph
 
 __all__ = [
     "CSRGraph", "build_csr", "degrees", "validate_csr",

@@ -7,10 +7,10 @@ draw for the column, one for the accept test) lives in ``core/samplers.py``.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph
-import jax.numpy as jnp
 
 
 def _vose(prob_seg: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

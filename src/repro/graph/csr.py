@@ -15,9 +15,9 @@ import dataclasses
 from functools import partial
 from typing import Optional
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @partial(jax.tree_util.register_dataclass,

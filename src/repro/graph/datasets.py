@@ -17,9 +17,9 @@ from typing import Optional
 
 import numpy as np
 
-from repro.graph.csr import CSRGraph, build_csr
-from repro.graph.generators import rmat_edges, BALANCED, GRAPH500
 from repro.graph.alias import build_alias_tables
+from repro.graph.csr import CSRGraph, build_csr
+from repro.graph.generators import GRAPH500, rmat_edges
 
 
 @dataclass(frozen=True)

@@ -4,6 +4,6 @@ Validated in interpret mode on CPU; targeted at TPU (BlockSpec VMEM/SMEM
 tiling + async-copy DMA pipelining).  Each kernel ships with ``ops.py``
 (jitted wrapper) and ``ref.py`` (pure-jnp oracle).
 """
-from repro.kernels.walk_step import walk_step_uniform, walk_step_alias
-from repro.kernels.segment_sum import segment_sum, SegmentSumOp
 from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.segment_sum import SegmentSumOp, segment_sum
+from repro.kernels.walk_step import walk_step_alias, walk_step_uniform

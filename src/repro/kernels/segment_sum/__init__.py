@@ -1,1 +1,1 @@
-from repro.kernels.segment_sum.ops import segment_sum, SegmentSumOp
+from repro.kernels.segment_sum.ops import SegmentSumOp, segment_sum

@@ -5,9 +5,8 @@ ids) is computed once and reused every step; `SegmentSumOp` caches it.
 """
 from __future__ import annotations
 
-import numpy as np
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.segment_sum import segment_sum as _k
 from repro.kernels.segment_sum.ref import segment_sum_ref

@@ -1,1 +1,1 @@
-from repro.kernels.walk_step.ops import walk_step_uniform, walk_step_alias
+from repro.kernels.walk_step.ops import walk_step_alias, walk_step_uniform

@@ -11,8 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.walk_step import walk_step as _k
-from repro.kernels.walk_step import ref as _ref
+from repro.kernels.walk_step import ref as _ref, walk_step as _k
 
 
 def _pad_to(x, n, fill):

@@ -11,9 +11,7 @@ metadata) — the launcher does the same padding for real data.
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +21,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_arch
 from repro.configs.base import ShapeCell
 from repro.launch.mesh import dp_axes, flat_axes
-from repro.optim import adamw
 from repro.models import transformer as tfm
+from repro.optim import adamw
 
 
 def _pad_up(n: int, div: int) -> int:

@@ -13,11 +13,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch
 from repro.data import pipeline as datapipe

@@ -8,7 +8,6 @@ Equivalent to full softmax attention (LSE-combined); asserted in tests.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

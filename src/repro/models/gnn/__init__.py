@@ -1,1 +1,1 @@
-from repro.models.gnn import meshgraphnet, schnet, pna, mace
+from repro.models.gnn import mace, meshgraphnet, pna, schnet

@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
-from repro.models.gnn.common import scatter_sum
 
 
 @dataclasses.dataclass(frozen=True)

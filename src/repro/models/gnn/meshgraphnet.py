@@ -3,13 +3,12 @@ passing layers, d_hidden=128, sum aggregation, 2-layer MLPs + LayerNorm."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
-from repro.models.gnn.common import mlp_ln_init, mlp_ln, scatter_sum
+from repro.models.gnn.common import mlp_ln, mlp_ln_init, scatter_sum
 
 
 @dataclasses.dataclass(frozen=True)

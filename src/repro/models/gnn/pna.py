@@ -9,9 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
-from repro.models.gnn.common import (degrees, mlp_ln, mlp_ln_init,
-                                     scatter_max, scatter_mean, scatter_min,
-                                     scatter_sum)
+from repro.models.gnn.common import (degrees, mlp_ln, mlp_ln_init, scatter_max,
+                                     scatter_mean, scatter_min)
 
 
 @dataclasses.dataclass(frozen=True)

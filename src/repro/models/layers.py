@@ -7,7 +7,6 @@ PartitionSpecs produced by the model's ``param_specs`` function.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

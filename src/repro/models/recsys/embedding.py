@@ -9,7 +9,6 @@ the same access regime the paper's asynchronous memory engine targets
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -27,8 +27,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import layers as L
-from repro.models.moe import (MoEConfig, moe_init, moe_apply,
-                              moe_apply_batched, moe_param_specs)
+from repro.models.moe import (MoEConfig, moe_apply_batched, moe_init,
+                              moe_param_specs)
 
 
 @dataclasses.dataclass(frozen=True)

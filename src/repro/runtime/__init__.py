@@ -1,1 +1,1 @@
-from repro.runtime import train_loop, elastic
+from repro.runtime import elastic, train_loop

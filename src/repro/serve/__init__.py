@@ -1,0 +1,6 @@
+"""Open-system walk serving: continuous request arrival over the streaming
+engine (`core.walk_engine.make_superstep_runner`)."""
+from repro.serve.service import WalkRequest, WalkService
+from repro.serve.workload import OpenLoad, run_open_load
+
+__all__ = ["WalkRequest", "WalkService", "OpenLoad", "run_open_load"]

@@ -1,0 +1,290 @@
+"""Open-system walk service on the streaming engine (ROADMAP north star).
+
+The closed-system engine (`core.walk_engine.make_engine`) drains a fixed
+query batch; a *service* faces continuous arrivals from many tenants.
+:class:`WalkService` keeps a persistent :class:`~repro.core.StreamState` on
+device and alternates two phases, never recompiling:
+
+  admit   — append pending requests' start vertices at the queue tail
+            (``inject_queries``; each request owns a contiguous query-id
+            range, the multi-tenancy bookkeeping),
+  run     — advance the engine a *chunk* of ``k`` supersteps
+            (``run_supersteps``), then harvest: any request whose whole
+            query-id range flipped ``done`` gets its recorded paths sliced
+            out and its sojourn (submit→complete, in supersteps) logged.
+
+The chunk size is the host-injection granularity: smaller chunks admit
+arrivals sooner (lower sojourn) at the cost of more host↔device syncs —
+the open-system analogue of the paper's §VI-A injection delay C.
+
+The device buffer holds ``capacity`` queries per *generation*.  When the
+buffer is exhausted and all in-flight walks have drained, the service
+rotates to a fresh state (generation += 1) with a distinct RNG seed, so an
+unbounded request stream is served with bounded device memory.  Query ids
+repeat across generations but ``(generation, qid)`` is unique — and walks
+in different generations use different seeds, keeping samples independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import ServiceAnalysis, analyze_service
+from repro.core.tasks import WalkStats
+from repro.core.walk_engine import (EngineConfig, init_stream_state,
+                                    inject_queries, make_superstep_runner)
+
+
+@dataclasses.dataclass
+class WalkRequest:
+    """One tenant request: a batch of walk queries tracked as a unit."""
+
+    request_id: int
+    num_walks: int
+    generation: int = -1
+    qid_lo: int = -1           # query-id range [qid_lo, qid_hi) in its generation
+    qid_hi: int = -1
+    submitted_at: int = -1     # service superstep clock at submit()
+    admitted_at: int = -1      # ... at injection into the device queue
+    completed_at: int = -1     # ... when the last walk terminated
+    wall_submitted: float = 0.0
+    wall_completed: float = 0.0
+    paths: Optional[np.ndarray] = None    # (num_walks, max_hops+1) once done
+    lengths: Optional[np.ndarray] = None  # (num_walks,) once done
+
+    @property
+    def done(self) -> bool:
+        return self.completed_at >= 0
+
+    @property
+    def sojourn(self) -> int:
+        """Supersteps from submission to completion (open-system latency)."""
+        return self.completed_at - self.submitted_at
+
+    @property
+    def wall_sojourn(self) -> float:
+        return self.wall_completed - self.wall_submitted
+
+
+def _pad_block(n: int, floor: int = 16) -> int:
+    """Next power of two >= n (>= floor): bounds distinct inject shapes to
+    O(log capacity) jit specializations."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+class WalkService:
+    """Multi-tenant streaming walk service over one graph + sampler spec.
+
+    Typical use::
+
+        svc = WalkService(graph, SamplerSpec(kind="uniform"), cfg)
+        rid = svc.submit(start_vertices)        # non-blocking
+        svc.step()                              # admit + run one chunk
+        req = svc.poll(rid)                     # WalkRequest or None
+        reqs = svc.drain()                      # run until all complete
+    """
+
+    def __init__(self, graph, spec, cfg: Optional[EngineConfig] = None,
+                 capacity: int = 4096, chunk: int = 16, seed: int = 0):
+        cfg = cfg or EngineConfig()
+        if not cfg.record_paths:
+            # Harvesting slices recorded paths; recording is mandatory here.
+            cfg = dataclasses.replace(cfg, record_paths=True)
+        self.graph = graph
+        self.spec = spec
+        self.cfg = cfg
+        self.capacity = int(capacity)
+        self.chunk = int(chunk)
+        self._base_seed = int(seed)
+        self._run = make_superstep_runner(spec, cfg)
+
+        self.generation = 0
+        self._state = init_stream_state(cfg, self.capacity)
+        self._tail = 0            # host mirror of queue.tail (admission check)
+        self._gen_supersteps = 0  # supersteps inside the current generation
+        self.clock = 0            # total supersteps across generations
+
+        self._pending: deque[WalkRequest] = deque()   # submitted, not admitted
+        self._pending_starts: Dict[int, np.ndarray] = {}
+        self._inflight: Dict[int, WalkRequest] = {}
+        self._completed: Dict[int, WalkRequest] = {}
+        self._next_rid = 0
+        # WalkStats accumulated from rotated-out generations (host ints).
+        self._stats_base = {f: 0 for f in WalkStats._fields}
+
+    # ------------------------------------------------------------- admission
+
+    def submit(self, start_vertices) -> int:
+        """Enqueue a request (a batch of walks); returns its request id."""
+        sv = np.asarray(start_vertices, np.int32).reshape(-1)
+        if sv.size == 0:
+            raise ValueError("empty request")
+        if sv.size > self.capacity:
+            raise ValueError(
+                f"request of {sv.size} walks exceeds buffer capacity "
+                f"{self.capacity}; split it or raise capacity")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = WalkRequest(request_id=rid, num_walks=int(sv.size),
+                          submitted_at=self.clock,
+                          wall_submitted=time.perf_counter())
+        self._pending.append(req)
+        self._pending_starts[rid] = sv
+        return rid
+
+    def _seed(self) -> int:
+        return self._base_seed + self.generation
+
+    def _block_for(self, n: int) -> int:
+        """Injection block size: power of two, capped at the full buffer, so
+        `inject_queries` compiles O(log capacity) shapes — never the
+        arbitrary residual room at the end of a generation."""
+        return min(_pad_block(n), self.capacity)
+
+    def _admit(self) -> int:
+        """FIFO-admit pending requests while buffer room remains."""
+        admitted = 0
+        while self._pending:
+            req = self._pending[0]
+            n = req.num_walks
+            block = self._block_for(n)
+            if self._tail + block > self.capacity:  # no room this generation
+                break
+            starts = self._pending_starts[req.request_id]
+            padded = np.zeros((block,), np.int32)
+            padded[:n] = starts
+            self._state = inject_queries(self._state, jnp.asarray(padded), n)
+            req.generation = self.generation
+            req.qid_lo, req.qid_hi = self._tail, self._tail + n
+            req.admitted_at = self.clock
+            self._tail += n
+            self._pending.popleft()
+            del self._pending_starts[req.request_id]
+            self._inflight[req.request_id] = req
+            admitted += 1
+        return admitted
+
+    def _maybe_rotate(self) -> None:
+        """Start a fresh generation once the buffer is spent and drained."""
+        if self._inflight or not self._pending:
+            return
+        n = self._pending[0].num_walks
+        if self._tail + self._block_for(n) <= self.capacity:
+            return  # head request still fits — no rotation needed
+        for f in WalkStats._fields:
+            self._stats_base[f] += int(getattr(self._state.stats, f))
+        self.generation += 1
+        self._state = init_stream_state(self.cfg, self.capacity)
+        self._tail = 0
+        self._gen_supersteps = 0
+
+    # ------------------------------------------------------------- execution
+
+    def step(self, k: Optional[int] = None) -> int:
+        """Admit pending requests, run one chunk of at most ``k`` supersteps,
+        harvest completions.  Returns the number of supersteps executed."""
+        self._maybe_rotate()
+        self._admit()
+        if not self._inflight:
+            return 0
+        k = self.chunk if k is None else int(k)
+        self._state = self._run(self.graph, self._state, self._seed(), k)
+        now = int(self._state.stats.supersteps)       # device→host sync point
+        ran = now - self._gen_supersteps
+        self._gen_supersteps = now
+        self.clock += ran
+        self._harvest()
+        return ran
+
+    def _harvest(self) -> None:
+        done = np.asarray(self._state.done)
+        finished: List[WalkRequest] = []
+        for req in self._inflight.values():
+            if done[req.qid_lo:req.qid_hi].all():
+                finished.append(req)
+        for req in finished:
+            sl = slice(req.qid_lo, req.qid_hi)
+            req.paths = np.asarray(self._state.paths[sl])
+            req.lengths = np.asarray(self._state.lengths[sl])
+            req.completed_at = self.clock
+            req.wall_completed = time.perf_counter()
+            del self._inflight[req.request_id]
+            self._completed[req.request_id] = req
+
+    def drain(self) -> List[WalkRequest]:
+        """Run until every submitted request has completed."""
+        while self._pending or self._inflight:
+            ran = self.step()
+            if ran == 0 and not self._pending and not self._inflight:
+                break
+            if ran == 0 and not self._inflight and self._pending:
+                # Only possible if rotation+admission made no progress.
+                raise RuntimeError("service stalled: pending request cannot "
+                                   "be admitted")
+        return sorted(self._completed.values(),
+                      key=lambda r: r.request_id)
+
+    def reset_metrics(self) -> None:
+        """Forget completed-request records and engine counters while keeping
+        the compiled superstep runner warm (benchmark sweeps time several
+        load points against one service without re-tracing XLA)."""
+        if self._pending or self._inflight:
+            raise RuntimeError("reset_metrics with requests outstanding")
+        self.generation += 1          # keep per-generation RNG streams fresh
+        self._state = init_stream_state(self.cfg, self.capacity)
+        self._tail = 0
+        self._gen_supersteps = 0
+        self.clock = 0
+        self._completed.clear()
+        self._stats_base = {f: 0 for f in WalkStats._fields}
+
+    # ------------------------------------------------------------ inspection
+
+    def poll(self, request_id: int) -> Optional[WalkRequest]:
+        """The completed WalkRequest, or None while still in flight."""
+        return self._completed.get(request_id)
+
+    def result(self, request_id: int) -> WalkRequest:
+        """Block (stepping the engine) until ``request_id`` completes."""
+        if (request_id not in self._completed
+                and request_id not in self._inflight
+                and all(r.request_id != request_id for r in self._pending)):
+            raise KeyError(f"unknown request id {request_id}")
+        while request_id not in self._completed:
+            self.step()
+        return self._completed[request_id]
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def num_inflight(self) -> int:
+        return len(self._inflight)
+
+    def walk_stats(self) -> WalkStats:
+        """Engine counters accumulated across all generations (host ints)."""
+        return WalkStats(**{
+            f: self._stats_base[f] + int(getattr(self._state.stats, f))
+            for f in WalkStats._fields})
+
+    def sojourns(self) -> List[int]:
+        return [r.sojourn for r in self._completed.values()]
+
+    def analyze(self, offered_load: float = float("nan"),
+                wall_time_s: Optional[float] = None) -> ServiceAnalysis:
+        reqs = list(self._completed.values())
+        mean_len = (float(np.mean([r.lengths.mean() for r in reqs]))
+                    if reqs else float("nan"))
+        return analyze_service(
+            self.sojourns(), self.walk_stats(), self.cfg.num_slots,
+            offered_load=offered_load, mean_walk_len=mean_len,
+            wall_time_s=wall_time_s)

@@ -9,6 +9,29 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+def hypothesis_or_stubs():
+    """``(given, settings, st)`` from hypothesis, or stand-ins that skip the
+    property tests when hypothesis is missing — so bare (runtime-only)
+    environments still collect and run every deterministic test."""
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        def given(*_a, **_k):
+            return lambda f: pytest.mark.skip(
+                reason="hypothesis not installed")(f)
+
+        def settings(*_a, **_k):
+            return lambda f: f
+
+        class _NoStrategies:
+            def __getattr__(self, _name):
+                return lambda *a, **k: None
+
+        st = _NoStrategies()
+    return given, settings, st
+
+
 def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600):
     """Run a python snippet with N forced host devices (device count is
     locked at first jax init, so multi-device tests need a fresh process)."""

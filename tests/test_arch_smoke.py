@@ -4,9 +4,9 @@ output shapes and no NaNs.  The FULL configs are exercised only via the
 dry-run (ShapeDtypeStruct, no allocation)."""
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_arch

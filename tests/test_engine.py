@@ -3,13 +3,10 @@ modes, Pallas/jnp step equivalence, determinism."""
 import dataclasses
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
-from repro.core import walks, EngineConfig
-from repro.core.samplers import SamplerSpec
+from repro.core import EngineConfig, walks
 from repro.core.scheduler import analyze_run, min_queue_depth
-from repro.core.walk_engine import run_walks
 
 
 CFG = EngineConfig(num_slots=128, max_hops=16)

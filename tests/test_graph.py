@@ -1,13 +1,12 @@
 """Graph substrate tests: CSR, generators, alias tables, partitioning."""
-import numpy as np
-import pytest
-
-from repro.graph import (build_csr, validate_csr, rmat_edges, GRAPH500,
-                         BALANCED, build_alias_tables, make_dataset,
-                         partition_graph)
-from repro.graph.csr import degrees, row_access, column_access
-from repro.graph.generators import dangling_fraction
 import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import (BALANCED, GRAPH500, build_alias_tables, build_csr,
+                         make_dataset, partition_graph, rmat_edges,
+                         validate_csr)
+from repro.graph.csr import column_access, degrees, row_access
+from repro.graph.generators import dangling_fraction
 
 
 def test_build_csr_basic():

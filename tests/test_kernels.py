@@ -1,18 +1,18 @@
 """Per-kernel validation: shape/dtype sweeps + hypothesis property tests
 against the pure-jnp oracles (interpret=True executes kernel bodies on CPU)."""
-import numpy as np
-import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from conftest import hypothesis_or_stubs
 from repro.graph import make_dataset
-from repro.kernels.walk_step import ops as ws_ops
-from repro.kernels.walk_step import ref as ws_ref
-from repro.kernels.segment_sum import segment_sum, SegmentSumOp
-from repro.kernels.segment_sum.ref import segment_sum_ref
 from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.segment_sum import segment_sum
+from repro.kernels.segment_sum.ref import segment_sum_ref
+from repro.kernels.walk_step import ops as ws_ops, ref as ws_ref
+
+given, settings, st = hypothesis_or_stubs()
 
 
 @pytest.fixture(scope="module")

@@ -1,15 +1,14 @@
 """Model correctness: transformer decode/prefill consistency, chunked
 attention oracle, MoE dispatch, MACE equivariance, DCN shapes."""
-import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
+import numpy as np
 
 from repro.models import transformer as tfm
-from repro.models.moe import MoEConfig, moe_init, moe_apply
-from repro.models.attention_chunked import chunked_attention, full_attention_ref
+from repro.models.attention_chunked import (chunked_attention,
+                                            full_attention_ref)
+from repro.models.moe import MoEConfig, moe_apply, moe_init
 
 
 KEY = jax.random.PRNGKey(0)

@@ -1,11 +1,9 @@
 """MoE dispatch variants: row vs global, expert padding, aux loss."""
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
+import numpy as np
 
-from repro.models.moe import (MoEConfig, moe_init, moe_apply,
-                              moe_apply_batched)
+from repro.models.moe import MoEConfig, moe_apply, moe_apply_batched, moe_init
 
 KEY = jax.random.PRNGKey(0)
 

@@ -4,6 +4,8 @@ import pytest
 
 from conftest import run_in_subprocess
 
+pytestmark = pytest.mark.slow  # out-of-process multi-device runs
+
 PIPE = r"""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh

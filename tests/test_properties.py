@@ -1,17 +1,22 @@
 """Cross-cutting property tests (hypothesis) on system invariants."""
 import dataclasses
 
-import numpy as np
 import jax
-import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import numpy as np
+import pytest
 
-from repro.core import walks, EngineConfig
+from repro.core import EngineConfig
 from repro.core.samplers import SamplerSpec
 from repro.core.walk_engine import run_walks
-from repro.graph import build_csr, build_alias_tables
-from repro.graph.generators import rmat_edges, GRAPH500
+from repro.graph import build_alias_tables, build_csr
+from repro.graph.generators import GRAPH500, rmat_edges
 from repro.models.attention_chunked import chunked_attention, full_attention_ref
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hypothesis.given, hypothesis.settings
+
+pytestmark = pytest.mark.slow  # each property runs many engine compiles
 
 
 @settings(max_examples=10, deadline=None)

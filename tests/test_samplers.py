@@ -1,13 +1,12 @@
 """Sampler correctness: distributions, adjacency tests, 2nd-order bias."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.core.samplers import (SamplerSpec, get_sampler, edge_exists,
-                                 sample_uniform)
+from repro.core.samplers import SamplerSpec, edge_exists, get_sampler
 from repro.core.tasks import WalkerSlots
-from repro.graph import build_csr, build_alias_tables
+from repro.graph import build_alias_tables, build_csr
 
 
 def _slots(v_curr, v_prev=None, n=None):

@@ -2,18 +2,18 @@
 delay bounds, and a hypothesis property test that the zero-bubble property
 holds across random workloads whenever the buffer is provisioned at the
 theorem depth."""
-import dataclasses
-
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import walks, EngineConfig
+from conftest import hypothesis_or_stubs
+from repro.core import EngineConfig, walks
 from repro.core.scheduler import (analyze_run, butterfly_feedback_delay,
                                   min_queue_depth, per_pipeline_fifo_depth,
                                   routing_capacity)
 from repro.graph import build_csr
-from repro.graph.generators import rmat_edges, GRAPH500
+from repro.graph.generators import GRAPH500, rmat_edges
+
+given, settings, st = hypothesis_or_stubs()
 
 
 def test_paper_constants():
@@ -31,6 +31,7 @@ def test_routing_capacity_margin():
     assert routing_capacity(7, 8, margin=2.0) == 2  # ceil on tiny loads
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 10_000), delay=st.integers(0, 4),
        slots_pow=st.integers(4, 7))

@@ -1,0 +1,169 @@
+"""Streaming (open-system) engine + WalkService: chunked/one-shot parity,
+mid-stream injection, multi-tenant harvesting, generation rotation."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig
+from repro.core.samplers import SamplerSpec
+from repro.core.walk_engine import (init_stream_state, inject_queries,
+                                    make_superstep_runner, run_walks)
+from repro.serve import OpenLoad, WalkService, run_open_load
+
+CFG = EngineConfig(num_slots=64, max_hops=12)
+SPECS = {
+    "uniform": SamplerSpec(kind="uniform"),
+    "node2vec": SamplerSpec(kind="rejection_n2v", p=2.0, q=0.5),
+}
+
+
+def _drain_stream(runner, graph, state, seed, chunk):
+    for _ in range(10_000):
+        if bool(np.asarray(state.done).all()):
+            return state
+        state = runner(graph, state, seed, chunk)
+    raise AssertionError("stream did not drain")
+
+
+@pytest.mark.parametrize("algo", sorted(SPECS))
+def test_chunked_matches_oneshot(algo, small_graph, rng):
+    """Parity: chunked run_supersteps == one-shot engine, bit-identical."""
+    spec = SPECS[algo]
+    starts = rng.integers(0, small_graph.num_vertices, 300).astype(np.int32)
+    one = run_walks(small_graph, starts, spec, CFG, seed=3)
+    p1, l1 = one.as_numpy()
+
+    runner = make_superstep_runner(spec, CFG)
+    state = init_stream_state(CFG, capacity=300)
+    state = inject_queries(state, jnp.asarray(starts), 300)
+    state = _drain_stream(runner, small_graph, state, seed=3, chunk=7)
+    assert np.array_equal(p1, np.asarray(state.paths))
+    assert np.array_equal(l1, np.asarray(state.lengths))
+    assert int(state.stats.terminations) == 300
+
+
+def test_midstream_injection_preserves_paths(small_graph, rng):
+    """Queries injected while the engine is mid-flight sample the same
+    paths as a single up-front batch (stateless tasks, §V-A)."""
+    spec = SPECS["uniform"]
+    starts = rng.integers(0, small_graph.num_vertices, 200).astype(np.int32)
+    p1, l1 = run_walks(small_graph, starts, spec, CFG, seed=5).as_numpy()
+
+    runner = make_superstep_runner(spec, CFG)
+    state = init_stream_state(CFG, capacity=200)
+    state = inject_queries(state, jnp.asarray(starts[:80]), 80)
+    state = runner(small_graph, state, 5, 4)
+    assert not bool(np.asarray(state.done).all())
+    state = inject_queries(state, jnp.asarray(starts[80:]), 120)
+    state = _drain_stream(runner, small_graph, state, seed=5, chunk=6)
+    assert np.array_equal(p1, np.asarray(state.paths))
+    assert np.array_equal(l1, np.asarray(state.lengths))
+
+
+def test_inject_padding_is_inert(small_graph, rng):
+    """Padded injection (fixed block shapes) must not create phantom
+    queries: tail advances by n_valid only and padding is overwritten."""
+    spec = SPECS["uniform"]
+    starts = rng.integers(0, small_graph.num_vertices, 48).astype(np.int32)
+    p1, l1 = run_walks(small_graph, starts, spec, CFG, seed=2).as_numpy()
+
+    runner = make_superstep_runner(spec, CFG)
+    state = init_stream_state(CFG, capacity=48)
+    pad1 = np.zeros((32,), np.int32)
+    pad1[:20] = starts[:20]
+    state = inject_queries(state, jnp.asarray(pad1), 20)
+    assert int(state.queue.tail) == 20
+    pad2 = np.zeros((28,), np.int32)
+    pad2[:28] = starts[20:]
+    state = inject_queries(state, jnp.asarray(pad2), 28)
+    assert int(state.queue.tail) == 48
+    state = _drain_stream(runner, small_graph, state, seed=2, chunk=5)
+    assert np.array_equal(p1, np.asarray(state.paths))
+    assert np.array_equal(l1, np.asarray(state.lengths))
+
+
+def test_staged_watermark_tracks_arrivals(small_graph):
+    """Open system: the controller may stage only queries that actually
+    arrived (staged <= tail), not the whole buffer capacity."""
+    spec = SPECS["uniform"]
+    runner = make_superstep_runner(spec, CFG)
+    state = init_stream_state(CFG, capacity=512)
+    state = inject_queries(state, jnp.zeros((16,), jnp.int32), 16)
+    state = runner(small_graph, state, 0, 3)
+    assert int(state.queue.staged) <= int(state.queue.tail) == 16
+    assert int(state.queue.head) <= int(state.queue.staged)
+
+
+def test_service_two_waves(small_graph, rng):
+    """Two request waves; every walk completes and each tenant harvests
+    exactly its own queries."""
+    cfg = dataclasses.replace(CFG, max_hops=8)
+    svc = WalkService(small_graph, SPECS["uniform"], cfg,
+                      capacity=512, chunk=4, seed=1)
+    waves = []
+    rids = []
+    for _ in range(3):
+        waves.append(rng.integers(0, small_graph.num_vertices, 16)
+                     .astype(np.int32))
+        rids.append(svc.submit(waves[-1]))
+    svc.step()
+    assert svc.num_inflight == 3
+    for _ in range(2):
+        waves.append(rng.integers(0, small_graph.num_vertices, 24)
+                     .astype(np.int32))
+        rids.append(svc.submit(waves[-1]))
+    done = svc.drain()
+    assert len(done) == 5 and svc.num_pending == svc.num_inflight == 0
+
+    ranges = []
+    for rid, starts in zip(rids, waves):
+        r = svc.poll(rid)
+        assert r is not None and r.done
+        assert r.paths.shape == (len(starts), cfg.max_hops + 1)
+        assert np.array_equal(r.paths[:, 0], starts)
+        assert (r.lengths >= 1).all() and (r.lengths <= cfg.max_hops + 1).all()
+        assert r.sojourn >= 1
+        ranges.append((r.generation, r.qid_lo, r.qid_hi))
+    # per-generation qid ranges are disjoint (multi-tenant isolation)
+    for i, (g1, lo1, hi1) in enumerate(ranges):
+        for g2, lo2, hi2 in ranges[i + 1:]:
+            assert g1 != g2 or hi1 <= lo2 or hi2 <= lo1
+
+    # harvested paths are real walks on the graph
+    rp, col = np.asarray(small_graph.row_ptr), np.asarray(small_graph.col)
+    r = svc.poll(rids[0])
+    for q in range(r.num_walks):
+        for t in range(r.lengths[q] - 1):
+            u, v = r.paths[q, t], r.paths[q, t + 1]
+            assert v in col[rp[u]:rp[u + 1]]
+
+
+def test_service_rotation_bounded_buffer(small_graph, rng):
+    """An unbounded request stream is served with a bounded device buffer
+    via generation rotation; all requests still complete."""
+    svc = WalkService(small_graph, SPECS["uniform"],
+                      dataclasses.replace(CFG, max_hops=6),
+                      capacity=64, chunk=4, seed=2)
+    rids = [svc.submit(rng.integers(0, small_graph.num_vertices, 32))
+            for _ in range(6)]
+    done = svc.drain()
+    assert len(done) == 6
+    assert svc.generation >= 2
+    assert all(svc.poll(rid).done for rid in rids)
+    assert int(svc.walk_stats().terminations) == 6 * 32
+
+
+def test_open_load_below_saturation_completes(small_graph):
+    """Poisson arrivals at moderate utilization: everything completes and
+    sojourn percentiles are finite."""
+    svc = WalkService(small_graph, SPECS["uniform"],
+                      dataclasses.replace(CFG, max_hops=8),
+                      capacity=1024, chunk=4, seed=3)
+    a = run_open_load(svc, OpenLoad(num_requests=20, request_size=8,
+                                    utilization=0.5), seed=0)
+    assert a.requests == 20
+    assert a.walks == 20 * 8
+    assert a.p50_sojourn <= a.p99_sojourn < float("inf")
+    assert 0.0 <= a.bubble_ratio <= 1.0

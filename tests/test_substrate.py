@@ -3,18 +3,16 @@ tolerance, gradient compression, data pipeline determinism."""
 import dataclasses
 import os
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
+import numpy as np
 
+from repro.checkpoint import checkpointer
+from repro.data import pipeline as datapipe
 from repro.optim import adamw
 from repro.optim.grad_compression import (compress_with_feedback,
-                                          init_error_state, quantize_int8,
-                                          dequantize_int8)
-from repro.checkpoint import checkpointer
+                                          dequantize_int8, quantize_int8)
 from repro.runtime import train_loop
-from repro.data import pipeline as datapipe
 
 
 def test_adamw_minimizes_quadratic():

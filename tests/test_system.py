@@ -7,14 +7,17 @@ the CPU-scale version of the paper's Fig. 11 claim chain.
 """
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
-from repro.core import walks, EngineConfig
+from repro.core import EngineConfig, walks
 from repro.core.scheduler import analyze_run
-from repro.graph import make_dataset, build_alias_tables
+from repro.graph import make_dataset
 from repro.models import embeddings as emb
+
+pytestmark = pytest.mark.slow  # end-to-end training loops
 
 
 def test_deepwalk_to_skipgram_end_to_end(rng):
