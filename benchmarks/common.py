@@ -7,7 +7,7 @@ import time
 import numpy as np
 
 from repro.core.scheduler import analyze_run
-from repro.core.walk_engine import EngineConfig
+from repro.walker import ExecutionConfig, WalkProgram, compile as compile_walker
 
 
 def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
@@ -25,18 +25,19 @@ def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
     return float(np.median(ts)), out
 
 
-def bench_walk(g, starts, spec, cfg: EngineConfig, seed=0, repeats=3):
-    """Returns (median_time_s, RunAnalysis)."""
+def bench_walk(g, starts, program: WalkProgram,
+               execution: ExecutionConfig, seed=0, repeats=3):
+    """Compile ``program`` on the single-device backend and time the
+    closed-batch run.  Returns (median_time_s, RunAnalysis)."""
     import jax
-    from repro.core.walk_engine import make_engine
-    run = make_engine(spec, cfg)
+    walker = compile_walker(program, execution=execution)
     sv = np.asarray(starts, np.int32)
-    out = run(g, sv, seed, num_queries=sv.shape[0])
+    out = walker.run(g, sv, seed=seed)
     jax.block_until_ready(out.stats.steps)   # compile + warm
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        out = run(g, sv, seed, num_queries=sv.shape[0])
+        out = walker.run(g, sv, seed=seed)
         jax.block_until_ready(out.stats.steps)
         ts.append(time.perf_counter() - t0)
     dt = float(np.median(ts))

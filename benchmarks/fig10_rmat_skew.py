@@ -11,28 +11,26 @@ import dataclasses
 import numpy as np
 
 from benchmarks.common import bench_walk, emit
-from repro.core.samplers import SamplerSpec
-from repro.core.walk_engine import EngineConfig
 from repro.graph import build_csr
 from repro.graph.generators import BALANCED, GRAPH500, rmat_edges
-
-CFG = EngineConfig(num_slots=1024, max_hops=80, record_paths=False)
+from repro.walker import ExecutionConfig, WalkProgram
 
 
 def run(quick: bool = False):
     scale = 12 if quick else 14
     queries = 2000 if quick else 6000
-    cfg0 = dataclasses.replace(CFG, num_slots=256 if quick else 1024)
+    ex = ExecutionConfig(num_slots=256 if quick else 1024,
+                         record_paths=False)
+    program = WalkProgram.urw(80)
     results = {}
     for label, init in [("balanced", BALANCED), ("graph500", GRAPH500)]:
         for ef in ([8] if quick else [8, 32]):
             edges, n = rmat_edges(scale, ef, init, seed=0)
             g = build_csr(edges, n)
             starts = np.random.default_rng(2).integers(0, n, queries)
-            spec = SamplerSpec(kind="uniform")
-            dt_z, a_z = bench_walk(g, starts, spec, cfg0)
+            dt_z, a_z = bench_walk(g, starts, program, ex)
             dt_s, a_s = bench_walk(
-                g, starts, spec, dataclasses.replace(cfg0, mode="static"))
+                g, starts, program, dataclasses.replace(ex, mode="static"))
             emit(f"fig10_SC{scale}-{ef}_{label}", dt_z * 1e6,
                  f"msteps={a_z.msteps_per_s:.3f};"
                  f"static_msteps={a_s.msteps_per_s:.3f};"

@@ -16,11 +16,8 @@ import dataclasses
 import numpy as np
 
 from benchmarks.common import bench_walk, emit
-from repro.core.samplers import SamplerSpec
-from repro.core.walk_engine import EngineConfig
 from repro.graph import make_dataset
-
-CFG = EngineConfig(num_slots=1024, max_hops=80, record_paths=False)
+from repro.walker import ExecutionConfig, WalkProgram
 
 MODES = {
     "baseline": dict(mode="static", step_impl="jnp"),
@@ -34,17 +31,18 @@ def run(quick: bool = False):
     datasets = ["WG"] if quick else ["WG", "CP", "AS", "LJ"]
     queries = 2000 if quick else 8000
     slots = 256 if quick else 1024
+    program = WalkProgram.urw(80)
     results = {}
     for ds in datasets:
         g = make_dataset(ds)
         starts = np.random.default_rng(3).integers(0, g.num_vertices, queries)
-        spec = SamplerSpec(kind="uniform")
         base_ss = None
         for label, kw in MODES.items():
             if quick and kw["step_impl"] == "pallas":
                 continue
-            cfg = dataclasses.replace(CFG, num_slots=slots, **kw)
-            dt, a = bench_walk(g, starts, spec, cfg, repeats=2)
+            ex = dataclasses.replace(
+                ExecutionConfig(num_slots=slots, record_paths=False), **kw)
+            dt, a = bench_walk(g, starts, program, ex, repeats=2)
             if label == "baseline":
                 base_ss = a.supersteps
             sched_speedup = base_ss / a.supersteps if base_ss else 1.0

@@ -11,32 +11,31 @@ import dataclasses
 import numpy as np
 
 from benchmarks.common import bench_walk, emit
-from repro.core.samplers import SamplerSpec
-from repro.core.walk_engine import EngineConfig
 from repro.graph import make_dataset
+from repro.walker import ExecutionConfig, WalkProgram
 
 DATASETS = ["WG", "CP", "AS", "LJ"]
-CFG = EngineConfig(num_slots=1024, max_hops=80, record_paths=False)
 
 
 def run(quick: bool = False):
     datasets = DATASETS[:2] if quick else DATASETS
     queries = 2000 if quick else 8000
-    cfg = dataclasses.replace(CFG, num_slots=256 if quick else 1024)
+    ex = ExecutionConfig(num_slots=256 if quick else 1024,
+                         record_paths=False)
     rows = []
     for name in datasets:
-        for algo, spec, kwargs in [
-            ("deepwalk", SamplerSpec(kind="alias"),
-             dict(weighted=True, with_alias=True)),
-            ("ppr", SamplerSpec(kind="uniform", stop_prob=0.15), {}),
-            ("urw", SamplerSpec(kind="uniform"), {}),
+        for program, kwargs in [
+            (WalkProgram.deepwalk(80), dict(weighted=True, with_alias=True)),
+            (WalkProgram.ppr(0.15, 80), {}),
+            (WalkProgram.urw(80), {}),
         ]:
+            algo = program.name
             g = make_dataset(name, **kwargs)
             starts = np.random.default_rng(0).integers(
                 0, g.num_vertices, queries)
-            dt_s, a_s = bench_walk(g, starts, spec,
-                                   dataclasses.replace(cfg, mode="static"))
-            dt_z, a_z = bench_walk(g, starts, spec, cfg)
+            dt_s, a_s = bench_walk(g, starts, program,
+                                   dataclasses.replace(ex, mode="static"))
+            dt_z, a_z = bench_walk(g, starts, program, ex)
             speedup = dt_s / dt_z
             emit(f"fig8_{algo}_{name}", dt_z * 1e6,
                  f"msteps={a_z.msteps_per_s:.3f};static_msteps="

@@ -8,34 +8,32 @@ positions for context in EXPERIMENTS.md.
 import numpy as np
 
 from benchmarks.common import bench_walk, emit
-from repro.core.samplers import SamplerSpec
-from repro.core.walk_engine import EngineConfig
 from repro.graph import make_dataset
+from repro.walker import ExecutionConfig, WalkProgram
 
 ALGOS = {
-    "urw": (SamplerSpec(kind="uniform"), {}),
-    "ppr": (SamplerSpec(kind="uniform", stop_prob=0.15), {}),
-    "deepwalk": (SamplerSpec(kind="alias"),
+    "urw": (WalkProgram.urw(80), {}),
+    "ppr": (WalkProgram.ppr(0.15, 80), {}),
+    "deepwalk": (WalkProgram.deepwalk(80),
                  dict(weighted=True, with_alias=True)),
-    "node2vec": (SamplerSpec(kind="rejection_n2v", p=2.0, q=0.5), {}),
+    "node2vec": (WalkProgram.node2vec(2.0, 0.5, 80), {}),
 }
-CFG = EngineConfig(num_slots=1024, max_hops=80, record_paths=False)
 
 
 def run(quick: bool = False):
-    import dataclasses
     datasets = ["WG", "CP"] if quick else ["WG", "CP", "AS", "LJ", "AB", "UK"]
     queries = 2000 if quick else 6000
-    cfg = dataclasses.replace(CFG, num_slots=256 if quick else 1024)
+    ex = ExecutionConfig(num_slots=256 if quick else 1024,
+                         record_paths=False)
     out = {}
     for ds in datasets:
-        for algo, (spec, kwargs) in ALGOS.items():
+        for algo, (program, kwargs) in ALGOS.items():
             if quick and algo == "node2vec" and ds != "WG":
                 continue
             g = make_dataset(ds, **kwargs)
             starts = np.random.default_rng(1).integers(
                 0, g.num_vertices, queries)
-            dt, a = bench_walk(g, starts, spec, cfg)
+            dt, a = bench_walk(g, starts, program, ex)
             emit(f"fig9_{algo}_{ds}", dt * 1e6,
                  f"msteps={a.msteps_per_s:.3f};steps={a.steps};"
                  f"occ={a.occupancy:.2f}")

@@ -15,10 +15,9 @@ import argparse
 import time
 
 from benchmarks.common import emit
-from repro.core.samplers import SamplerSpec
-from repro.core.walk_engine import EngineConfig
 from repro.graph import make_dataset
-from repro.serve import OpenLoad, WalkService, run_open_load
+from repro.serve import OpenLoad, run_open_load
+from repro.walker import ExecutionConfig, WalkProgram, compile as compile_walker
 
 # Target utilizations; computed against E[L] = max_hops, so the *measured*
 # rho in the output is lower when walks dead-end early. The top points are
@@ -33,16 +32,16 @@ def run(quick: bool = True):
     request_size = 16 if quick else 64
     chunk = 4 if quick else 8
     g = make_dataset("WG", scale_override=10 if quick else None)
-    spec = SamplerSpec(kind="uniform")
-    cfg = EngineConfig(num_slots=slots, max_hops=max_hops)
+    program = WalkProgram.urw(max_hops)
+    walker = compile_walker(program,
+                            execution=ExecutionConfig(num_slots=slots))
 
     # One service for the whole sweep: the superstep runner and injection
     # shapes are traced/compiled once (warm-up below), then reset_metrics
     # clears counters between load points so XLA compile never pollutes a
     # timed run.
-    svc = WalkService(g, spec, cfg,
-                      capacity=max(2048, requests * request_size),
-                      chunk=chunk, seed=7)
+    svc = walker.serve(g, capacity=max(2048, requests * request_size),
+                       chunk=chunk, seed=7)
     run_open_load(svc, OpenLoad(num_requests=4, request_size=request_size,
                                 utilization=0.5), seed=99)
 

@@ -14,25 +14,25 @@ from benchmarks.common import emit
 SNIPPET = r"""
 import time, numpy as np, jax, json
 from repro.graph import make_dataset, partition_graph
-from repro.core.samplers import SamplerSpec
-from repro.core.distributed import DistConfig, run_distributed
+from repro import walker
 
 N = {N}
 g = make_dataset("WG", scale_override={scale})
 pg = partition_graph(g, N)
 starts = np.random.default_rng(0).integers(0, g.num_vertices, {queries}).astype(np.int32)
-spec = SamplerSpec(kind="uniform")
-cfg = DistConfig(slots_per_device=max(2048 // N, 64), max_hops=80,
-                 record_paths=False)
-logs, stats = run_distributed(pg, starts, spec, cfg)   # compile+warm
-jax.block_until_ready(stats.steps)
+w = walker.compile(
+    walker.WalkProgram.urw(80), backend="sharded",
+    execution=walker.ExecutionConfig(
+        slots_per_device=max(2048 // N, 64), record_paths=False))
+res = w.run(pg, starts)   # compile+warm
+jax.block_until_ready(res.stats.steps)
 t0 = time.time()
-logs, stats = run_distributed(pg, starts, spec, cfg)
-jax.block_until_ready(stats.steps)
+res = w.run(pg, starts)
+jax.block_until_ready(res.stats.steps)
 dt = time.time() - t0
-steps = int(np.asarray(stats.steps).sum())
-waits = int(np.asarray(stats.route_waits).sum())
-drops = int(np.asarray(stats.drops).sum())
+steps = int(np.asarray(res.stats.steps))
+waits = int(np.asarray(res.stats.route_waits))
+drops = int(np.asarray(res.stats.drops))
 print(json.dumps(dict(N=N, dt=dt, steps=steps, msteps=steps/dt/1e6,
                       waits=waits, drops=drops)))
 """

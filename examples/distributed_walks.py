@@ -1,8 +1,11 @@
-"""Distributed walk service across 8 emulated devices (channels).
+"""Distributed walks across 8 emulated devices via the unified walker API.
 
-Shows the full §IV dataflow: vertex-partitioned graph, per-hop butterfly
-routing (all_to_all), zero-bubble local refill, streaming path write-back
-— and verifies the result is bit-identical to the single-device engine.
+`walker.compile(program, backend="sharded")` runs the full §IV dataflow:
+vertex-partitioned graph, per-phase butterfly routing (all_to_all),
+flow-controlled zero-bubble refill, streaming path write-back — and the
+result is bit-identical to the single-device backend (paper §V-A).
+Second-order walks (Node2Vec) route through the same path: the sampler's
+declared capability picks the task word and the phase schedule.
 
   PYTHONPATH=src python examples/distributed_walks.py
   (sets XLA_FLAGS itself; run in a fresh process)
@@ -17,14 +20,11 @@ import time
 import numpy as np
 import jax
 
-from repro.core import EngineConfig
-from repro.core.distributed import (DistConfig, assemble_paths,
-                                    run_distributed)
-from repro.core.samplers import SamplerSpec
-from repro.core.walk_engine import run_walks
+from repro import walker
 from repro.graph import make_dataset, partition_graph
 
 N_DEV = 8
+MAXH = 40
 g = make_dataset("CP", scale_override=12)
 pg = partition_graph(g, N_DEV)
 print(f"graph |V|={g.num_vertices} |E|={g.num_edges}, "
@@ -32,24 +32,24 @@ print(f"graph |V|={g.num_vertices} |E|={g.num_edges}, "
 
 starts = np.random.default_rng(0).integers(0, g.num_vertices, 2000)\
     .astype(np.int32)
-spec = SamplerSpec(kind="uniform")
-MAXH = 40
+program = walker.WalkProgram.urw(MAXH)
 
+sharded = walker.compile(
+    program, backend="sharded",
+    execution=walker.ExecutionConfig(slots_per_device=128,
+                                     log_capacity=1 << 17))
 t0 = time.time()
-logs, stats = run_distributed(
-    pg, starts, spec,
-    DistConfig(slots_per_device=128, max_hops=MAXH, log_capacity=1 << 17))
-jax.block_until_ready(logs.cursor)
+res = sharded.run(pg, starts, seed=0)
+jax.block_until_ready(res.stats.steps)
 dt = time.time() - t0
-steps = int(np.asarray(stats.steps).sum())
-print(f"distributed: {steps} steps in {dt:.1f}s; per-device steps = "
-      f"{np.asarray(stats.steps).ravel().tolist()}")
-print(f"route waits={int(np.asarray(stats.route_waits).sum())} "
-      f"drops={int(np.asarray(stats.drops).sum())} (must be 0)")
+print(f"distributed: {int(res.stats.steps)} steps in {dt:.1f}s")
+print(f"route waits={int(res.stats.route_waits)} "
+      f"drops={int(res.stats.drops)} (must be 0)")
 
-dp, dl = assemble_paths(logs, starts, MAXH)
-ref = run_walks(g, starts, spec, EngineConfig(num_slots=512, max_hops=MAXH),
-                seed=0)
+ref = walker.compile(
+    program, execution=walker.ExecutionConfig(num_slots=512)).run(
+        g, starts, seed=0)
+dp, dl = res.as_numpy()
 rp, rl = ref.as_numpy()
 print("bit-identical to single-device engine:",
       bool((dp == rp).all() and (dl == rl).all()))

@@ -1,32 +1,49 @@
-"""Quickstart: build a graph, run every GRW algorithm, inspect paths.
+"""Quickstart: declare programs, compile them, run every GRW algorithm.
 
-  PYTHONPATH=src python examples/quickstart.py
+One `WalkProgram` (algorithm) × one `ExecutionConfig` (machine) →
+`walker.compile(program)` → `.run(graph, starts)`.  The same program also
+streams (`.stream`) and serves (`.serve`), and compiles to the sharded
+multi-device backend — see examples/distributed_walks.py.
+
+  PYTHONPATH=src python examples/quickstart.py            # full demo
+  PYTHONPATH=src python examples/quickstart.py --scale 10 --queries 300 \
+      --max-hops 16                                       # CI-sized smoke
 """
+import argparse
+
 import numpy as np
 
-from repro.core import EngineConfig, walks
+from repro import walker
 from repro.core.scheduler import analyze_run
 from repro.graph import make_dataset
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--scale", type=int, default=12, help="RMAT scale")
+ap.add_argument("--queries", type=int, default=2000)
+ap.add_argument("--max-hops", type=int, default=80)
+ap.add_argument("--slots", type=int, default=512)
+args = ap.parse_args()
+
 # Graph500-skewed RMAT stand-in for web-Google (paper Table II).
-g = make_dataset("WG", scale_override=12, weighted=True, with_alias=True,
-                 num_edge_types=3)
+g = make_dataset("WG", scale_override=args.scale, weighted=True,
+                 with_alias=True, num_edge_types=3)
 print(f"graph: |V|={g.num_vertices} |E|={g.num_edges} "
       f"max_deg={g.max_degree}")
 
-starts = np.random.default_rng(0).integers(0, g.num_vertices, 2000)
-cfg = EngineConfig(num_slots=512, max_hops=80)
+starts = np.random.default_rng(0).integers(0, g.num_vertices, args.queries)
+H = args.max_hops
+execution = walker.ExecutionConfig(num_slots=args.slots)
 
-for name, run in [
-    ("URW", lambda: walks.urw(g, starts, 80, cfg)),
-    ("PPR(α=.15)", lambda: walks.ppr(g, starts, 0.15, 80, cfg)),
-    ("DeepWalk", lambda: walks.deepwalk(g, starts, 80, cfg)),
-    ("Node2Vec(2,.5)", lambda: walks.node2vec(g, starts, 2.0, 0.5, 80,
-                                              cfg=cfg)),
-    ("MetaPath[0,1,2]", lambda: walks.metapath(g, starts, [0, 1, 2], 80,
-                                               cfg)),
-]:
-    res = run()
+programs = [
+    ("URW", walker.WalkProgram.urw(H)),
+    ("PPR(α=.15)", walker.WalkProgram.ppr(0.15, H)),
+    ("DeepWalk", walker.WalkProgram.deepwalk(H)),
+    ("Node2Vec(2,.5)", walker.WalkProgram.node2vec(2.0, 0.5, H)),
+    ("MetaPath[0,1,2]", walker.WalkProgram.metapath([0, 1, 2], H)),
+]
+
+for name, program in programs:
+    res = walker.compile(program, execution=execution).run(g, starts)
     a = analyze_run(res.stats)
     paths, lengths = res.as_numpy()
     print(f"{name:16s} steps={a.steps:7d} supersteps={a.supersteps:5d} "

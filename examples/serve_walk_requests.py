@@ -8,17 +8,16 @@ lane pool busy across both, and each tenant harvests exactly its own walks
 """
 import numpy as np
 
-from repro.core import EngineConfig
-from repro.core.samplers import SamplerSpec
+from repro import walker
 from repro.graph import make_dataset
-from repro.serve import WalkService
 
 g = make_dataset("WG", scale_override=11)
 print(f"graph: |V|={g.num_vertices} |E|={g.num_edges}")
 
-svc = WalkService(g, SamplerSpec(kind="uniform"),
-                  EngineConfig(num_slots=256, max_hops=20),
-                  capacity=4096, chunk=4, seed=0)
+svc = walker.compile(
+    walker.WalkProgram.urw(20),
+    execution=walker.ExecutionConfig(num_slots=256)).serve(
+        g, capacity=4096, chunk=4, seed=0)
 rng = np.random.default_rng(0)
 
 # Tenant A submits three requests; the service starts working immediately.

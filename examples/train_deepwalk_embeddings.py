@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EngineConfig, walks
+from repro import walker
 from repro.graph import make_dataset
 from repro.models import embeddings as emb
 from repro.optim import adamw
@@ -41,9 +41,9 @@ def main():
     starts = rng.integers(0, g.num_vertices, args.walks).astype(np.int32)
 
     t0 = time.time()
-    res = walks.deepwalk(g, starts, args.walk_len,
-                         cfg=EngineConfig(num_slots=2048,
-                                          max_hops=args.walk_len))
+    res = walker.compile(
+        walker.WalkProgram.deepwalk(args.walk_len),
+        execution=walker.ExecutionConfig(num_slots=2048)).run(g, starts)
     paths, lengths = res.as_numpy()
     print(f"walk corpus: {int(res.stats.steps)} steps "
           f"in {time.time()-t0:.1f}s")

@@ -2,18 +2,20 @@
 slot-pool engine, queuing-theoretic scheduler, distributed routing."""
 from repro.core import scheduler, walks
 from repro.core.samplers import SamplerSpec, edge_exists, get_sampler
-from repro.core.tasks import (QueryQueue, WalkerSlots, WalkResult, WalkStats,
+from repro.core.tasks import (N2VSlots, QueryQueue, ReservoirSlots,
+                              WalkerSlots, WalkResult, WalkStats,
                               empty_queue, empty_slots, make_queue)
-from repro.core.walk_engine import (EngineConfig, StreamState,
+from repro.core.walk_engine import (EngineConfig, StreamState, build_engine,
                                     init_stream_state, inject_queries,
                                     make_engine, make_superstep_runner,
                                     run_walks)
 
 __all__ = [
     "SamplerSpec", "get_sampler", "edge_exists",
-    "WalkerSlots", "QueryQueue", "WalkStats", "WalkResult",
+    "WalkerSlots", "N2VSlots", "ReservoirSlots", "QueryQueue",
+    "WalkStats", "WalkResult",
     "empty_slots", "empty_queue", "make_queue",
     "EngineConfig", "StreamState", "init_stream_state", "inject_queries",
-    "make_engine", "make_superstep_runner", "run_walks",
+    "build_engine", "make_engine", "make_superstep_runner", "run_walks",
     "scheduler", "walks",
 ]

@@ -2,17 +2,36 @@
 (paper §IV: 16 pipelines over 32 HBM channels → here, the device mesh).
 
 The full run loop lives inside a single ``shard_map`` over the ``ch``
-(channel) axis: per superstep each device (a) executes one hop for every
-live task whose current vertex it owns, (b) terminates finished walks and
-refills freed lanes from its local query shard (zero-bubble scheduling),
-(c) routes every live task to the owner of its new vertex with one
-``all_to_all`` (the butterfly, `router.py`).
+(channel) axis: per superstep each device (a) executes one *phase* of work
+for every live task homed on it, (b) terminates finished walks and refills
+freed lanes from its local query shard (zero-bubble scheduling), (c)
+routes every live task to the device that owns the data its next phase
+reads, with one ``all_to_all`` (the butterfly, `router.py`).
+
+One generic superstep serves every sampler through **capability
+dispatch** (`SamplerSpec.capability`): first-order samplers execute a
+whole hop at owner(v_curr); second-order samplers declare the extra slot
+state they carry and a multi-phase schedule — Node2Vec rejection proposes
+at owner(v_curr) and verifies at owner(v_prev) (two phases/hop), weighted
+Node2Vec ping-pongs reservoir chunks between the two owners.  The engine
+allocates the declared task word (`WalkerSlots` / `N2VSlots` /
+`ReservoirSlots`) and drives the same routing path for all of them.
 
 Because tasks are stateless and their randomness derives from
 (seed, query_id, hop), the distributed engine produces *bit-identical
 walks* to the single-device engine — the strongest possible correctness
 check of the paper's claim that out-of-order, cross-pipeline execution
-does not alter the sampled distribution (§V-A).  Tests assert this.
+does not alter the sampled distribution (§V-A).  Tests assert this for
+first- AND second-order walks.
+
+Losslessness.  Refill is flow-controlled: a device admits new queries
+only up to its fair share of the *global* live-task headroom
+(``psum``-coordinated), which bounds live tasks system-wide by N·W_loc;
+the router retention region is provisioned to that bound
+(`DistConfig.retention_cap`), so bucket overflow can always be retained
+and ``drops == 0`` is a guarantee, not a hope.  (The previous
+heuristically-sized retention dropped tasks under hub skew — the root
+cause of the 8-device bit-identity failure; see ROADMAP.)
 
 Path write-back uses the paper's streaming-window scheme (§IV-B): each
 device appends (query_id, hop, vertex) records to a device-resident
@@ -23,17 +42,23 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rng as task_rng, router
-from repro.core.samplers import SALT_STOP, SamplerSpec, get_sampler
+from repro.core.samplers import (SALT_CHUNK0, SALT_COLUMN, SALT_STOP,
+                                 SamplerSpec, es_chunk_score, es_merge,
+                                 es_num_chunks, get_sampler,
+                                 sample_reservoir_n2v)
 from repro.core.scheduler import routing_capacity
-from repro.core.tasks import WalkerSlots, zero_stats
+from repro.core.tasks import (N2VSlots, ReservoirSlots, WalkerSlots,
+                              empty_n2v_slots, empty_reservoir_slots,
+                              empty_slots, zero_stats)
 from repro.distributed.compat import shard_map
 from repro.graph.partition import PartitionedGraph, owner_of
 
@@ -43,21 +68,46 @@ class DistConfig:
     slots_per_device: int = 256    # W_loc — target live tasks per device
     max_hops: int = 80
     capacity_margin: float = 2.0   # Theorem VI.1 margin on bucket capacity
-    retention_factor: float = 2.0  # retention region = factor × W_loc
+    retention_factor: float = 1.0  # × N·W_loc (global live bound); >= 1.0
+                                   # guarantees drops == 0 (see module doc)
     log_capacity: int = 1 << 16    # emission-log entries per device
     record_paths: bool = True
     max_supersteps: int = 1 << 16
     axis_name: str = "ch"
 
+    def __post_init__(self):
+        if self.slots_per_device <= 0:
+            raise ValueError(
+                f"slots_per_device must be a positive lane count, got "
+                f"{self.slots_per_device}")
+        if self.max_hops <= 0:
+            raise ValueError(f"max_hops must be positive, got "
+                             f"{self.max_hops}")
+        if self.capacity_margin <= 0:
+            raise ValueError(f"capacity_margin must be positive, got "
+                             f"{self.capacity_margin}")
+        if self.retention_factor <= 0:
+            raise ValueError(f"retention_factor must be positive, got "
+                             f"{self.retention_factor}")
+        if self.log_capacity <= 0 or self.max_supersteps <= 0:
+            raise ValueError(
+                f"log_capacity / max_supersteps must be positive, got "
+                f"{self.log_capacity} / {self.max_supersteps}")
+
     def bucket_cap(self, num_devices: int) -> int:
         return routing_capacity(self.slots_per_device, num_devices,
                                 self.capacity_margin)
 
-    def retention_cap(self) -> int:
-        return int(math.ceil(self.retention_factor * self.slots_per_device))
+    def retention_cap(self, num_devices: int) -> int:
+        """Retention region sized to the global live-task bound N·W_loc:
+        every live task in the system could, worst case, pile onto one
+        device (hub skew) and must be retainable there."""
+        return int(math.ceil(self.retention_factor
+                             * num_devices * self.slots_per_device))
 
     def pool_size(self, num_devices: int) -> int:
-        return num_devices * self.bucket_cap(num_devices) + self.retention_cap()
+        return (num_devices * self.bucket_cap(num_devices)
+                + self.retention_cap(num_devices))
 
 
 class LocalView(NamedTuple):
@@ -78,7 +128,19 @@ class DistLogs(NamedTuple):
     cursor: jnp.ndarray  # (N,) int32
 
 
-def _local_row_access(view: LocalView, v: jnp.ndarray, rank, num_devices: int,
+class StepOut(NamedTuple):
+    """What a capability's per-phase step hands back to the generic
+    superstep: the updated pool plus the hop-advance/termination masks the
+    emission log and refill need.  ``query_id``/``active`` must be left
+    untouched by the step — the generic code owns their lifecycle."""
+    slots: Any
+    adv: jnp.ndarray         # lanes that advanced one hop this superstep
+    terminated: jnp.ndarray  # lanes whose walk ended this superstep
+    v_next: jnp.ndarray      # vertex to record for advanced lanes
+    new_hop: jnp.ndarray     # hop index of that record
+
+
+def _local_row_access(view: LocalView, v: jnp.ndarray, num_devices: int,
                       v_per_dev: int):
     lid = jnp.clip(jnp.where(v >= 0, v // num_devices, 0), 0, v_per_dev - 1)
     addr = view.row_ptr[lid]
@@ -86,90 +148,380 @@ def _local_row_access(view: LocalView, v: jnp.ndarray, rank, num_devices: int,
     return addr, deg
 
 
-def _superstep_dist(spec, cfg, N, v_per_dev, nq_total, base_key, view,
+def _local_edge_exists(view: LocalView, src, dst_mat, N, v_per_dev):
+    """Bisect dst_mat (S, K) in src's LOCAL neighbor list (sorted)."""
+    addr, deg = _local_row_access(view, src, N, v_per_dev)
+    lo = jnp.broadcast_to(addr[:, None], dst_mat.shape).astype(jnp.int32)
+    hi0 = jnp.broadcast_to((addr + deg)[:, None], dst_mat.shape).astype(jnp.int32)
+    hi = hi0
+    iters = max(1, int(math.ceil(math.log2(max(int(view.max_degree), 2) + 1))))
+    ne = view.col.shape[-1]
+    for _ in range(iters):
+        active = lo < hi
+        mid = (lo + hi) // 2
+        v = view.col[jnp.clip(mid, 0, ne - 1)]
+        go_right = v < dst_mat
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+    found = (lo < hi0) & (view.col[jnp.clip(lo, 0, ne - 1)] == dst_mat)
+    return found & (src >= 0)[:, None]
+
+
+# --------------------------------------------------------------------------
+# Capabilities: per-sampler task word + phase schedule (one routing path).
+# --------------------------------------------------------------------------
+
+
+class _FirstOrderCap:
+    """Whole hop at owner(v_curr): Row Access → Sampling → Column Access."""
+
+    def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
+                 v_per_dev: int, max_degree: int):
+        self.spec, self.cfg = spec, cfg
+        self.N, self.v_per_dev = num_devices, v_per_dev
+
+    def empty_pool(self, size: int) -> WalkerSlots:
+        return empty_slots(size)
+
+    def home(self, slots) -> jnp.ndarray:
+        return owner_of(slots.v_curr, self.N)
+
+    route_dest = home
+
+    def reset_extras(self, slots, take):
+        return slots
+
+    def step(self, view: LocalView, slots, mine, base_key) -> StepOut:
+        spec, cfg = self.spec, self.cfg
+        if spec.stop_prob > 0.0:
+            u_stop = task_rng.task_uniforms(base_key, slots.query_id,
+                                            slots.hop, 1, SALT_STOP)[:, 0]
+            stop = mine & (u_stop < spec.stop_prob)
+        else:
+            stop = jnp.zeros_like(mine)
+
+        addr, deg = _local_row_access(view, slots.v_curr, self.N,
+                                      self.v_per_dev)
+        sampler = get_sampler(spec)
+        idx, ok = sampler(view, addr, deg, slots, base_key)
+        e = jnp.clip(addr + idx, 0, view.col.shape[-1] - 1)
+        v_next = view.col[e]
+
+        adv = mine & ~stop & ok
+        dead = mine & ~stop & ~ok
+        new_hop = jnp.where(adv, slots.hop + 1, slots.hop)
+        reached_max = adv & (new_hop >= cfg.max_hops)
+        terminated = stop | dead | reached_max
+
+        slots = slots._replace(
+            v_curr=jnp.where(adv, v_next, slots.v_curr),
+            v_prev=jnp.where(adv, slots.v_curr, slots.v_prev),
+            hop=new_hop,
+        )
+        return StepOut(slots, adv, terminated, v_next, new_hop)
+
+
+class _TwoPhaseN2VCap:
+    """Second-order rejection Node2Vec: phase A draws K proposals at
+    owner(v_curr) and carries them in the task word; phase B bisects each
+    candidate in N(v_prev), applies the (p, q) bias, accepts the first
+    winner — same bounded-round semantics and same (seed, qid, hop)-derived
+    uniforms as the single-device sampler ⇒ bit-identical walks.  Hop 0
+    has no v_prev (bias ≡ 1) and verifies locally in phase A, which also
+    avoids an owner(-1) thundering-herd hotspot on device 0."""
+
+    def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
+                 v_per_dev: int, max_degree: int):
+        self.spec, self.cfg = spec, cfg
+        self.N, self.v_per_dev = num_devices, v_per_dev
+
+    def empty_pool(self, size: int) -> N2VSlots:
+        return empty_n2v_slots(size, self.spec.rejection_rounds)
+
+    def home(self, slots) -> jnp.ndarray:
+        return owner_of(jnp.where(slots.phase == 0, slots.v_curr,
+                                  jnp.maximum(slots.v_prev, 0)), self.N)
+
+    def route_dest(self, slots) -> jnp.ndarray:
+        return owner_of(jnp.where(slots.phase == 1,
+                                  jnp.maximum(slots.v_prev, 0),
+                                  slots.v_curr), self.N)
+
+    def reset_extras(self, slots, take):
+        return slots._replace(phase=jnp.where(take, 0, slots.phase))
+
+    def step(self, view: LocalView, slots, mine, base_key) -> StepOut:
+        spec, cfg = self.spec, self.cfg
+        K = spec.rejection_rounds
+
+        do_a = mine & (slots.phase == 0)
+        if spec.stop_prob > 0.0:   # termination draw at the top of a hop
+            u_stop = task_rng.task_uniforms(base_key, slots.query_id,
+                                            slots.hop, 1, SALT_STOP)[:, 0]
+            stop = do_a & (u_stop < spec.stop_prob)
+        else:
+            stop = jnp.zeros_like(do_a)
+
+        # ---- phase A: propose K candidates from N(v_curr) ---------------
+        addr, deg = _local_row_access(view, slots.v_curr, self.N,
+                                      self.v_per_dev)
+        u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
+                                   2 * K, SALT_COLUMN)
+        u_col, u_acc = u[:, :K], u[:, K:]
+        idx = jnp.minimum((u_col * deg[:, None]).astype(jnp.int32),
+                          jnp.maximum(deg - 1, 0)[:, None])
+        e = jnp.clip(addr[:, None] + idx, 0, view.col.shape[-1] - 1)
+        proposals = view.col[e]                                   # (S, K)
+        dead = do_a & ~stop & (deg == 0)
+        w_max = max(1.0 / spec.p, 1.0, 1.0 / spec.q)
+        hop0 = do_a & ~stop & (slots.v_prev < 0) & (deg > 0)
+        acc0 = (u_acc * w_max <= 1.0).at[:, K - 1].set(True)
+        first0 = jnp.argmax(acc0, axis=1)
+        v0 = jnp.take_along_axis(proposals, first0[:, None], 1)[:, 0]
+        go_b = do_a & ~stop & ~dead & ~hop0
+
+        # ---- phase B: verify candidates against N(v_prev) ---------------
+        do_b = mine & (slots.phase == 1)
+        is_ret = slots.cand == slots.v_prev[:, None]
+        common = _local_edge_exists(view, slots.v_prev, slots.cand, self.N,
+                                    self.v_per_dev)
+        w = jnp.where(is_ret, 1.0 / spec.p,
+                      jnp.where(common, 1.0, 1.0 / spec.q))
+        accept = (u_acc * w_max <= w).at[:, K - 1].set(True)
+        first = jnp.argmax(accept, axis=1)
+        vb = jnp.take_along_axis(slots.cand, first[:, None], 1)[:, 0]
+
+        adv = do_b | hop0
+        v_next = jnp.where(hop0, v0, vb)
+        new_hop = jnp.where(adv, slots.hop + 1, slots.hop)
+        reached_max = adv & (new_hop >= cfg.max_hops)
+        terminated = stop | dead | reached_max
+
+        slots = slots._replace(
+            v_curr=jnp.where(adv, v_next, slots.v_curr),
+            v_prev=jnp.where(adv, slots.v_curr, slots.v_prev),
+            hop=new_hop,
+            phase=jnp.where(go_b, 1, jnp.where(adv, 0, slots.phase)),
+            cand=jnp.where(go_b[:, None], proposals, slots.cand),
+        )
+        return StepOut(slots, adv, terminated, v_next, new_hop)
+
+
+class _ChunkedReservoirCap:
+    """Second-order *weighted* Node2Vec (Efraimidis–Spirakis reservoir):
+    the O(deg) scan of N(v_curr) ping-pongs fixed-size chunks between
+    owner(v_curr) — gather (candidate, edge weight) for chunk c — and
+    owner(v_prev) — score the chunk against the local adjacency bias and
+    fold it into the carried reservoir maximum.  Phase 2·n_chunks
+    finalizes at owner(v_curr) with a column access on the winning offset.
+
+    Scoring reuses `samplers.es_chunk_score`/`es_merge` with the same
+    (seed, qid, hop, chunk)-derived uniforms as the single-device
+    reservoir sampler, and the bias uses the same float expressions, so
+    the scanned maximum — and therefore every sampled path — is
+    bit-identical to the single-device engine.  Hop 0 (bias ≡ 1) runs the
+    whole scan locally at owner(v_curr) in one superstep."""
+
+    def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
+                 v_per_dev: int, max_degree: int):
+        self.spec, self.cfg = spec, cfg
+        self.N, self.v_per_dev = num_devices, v_per_dev
+        self.CH = spec.reservoir_chunk
+        self.n_chunks = es_num_chunks(max_degree, self.CH)
+
+    def empty_pool(self, size: int) -> ReservoirSlots:
+        return empty_reservoir_slots(size, self.CH)
+
+    def _owner_for_phase(self, slots) -> jnp.ndarray:
+        # Even phases (gather / finalize) live at owner(v_curr); odd
+        # (score) at owner(v_prev).
+        return owner_of(jnp.where(slots.phase % 2 == 0, slots.v_curr,
+                                  jnp.maximum(slots.v_prev, 0)), self.N)
+
+    home = _owner_for_phase
+    route_dest = _owner_for_phase
+
+    def reset_extras(self, slots, take):
+        return slots._replace(
+            phase=jnp.where(take, 0, slots.phase),
+            best_key=jnp.where(take, -jnp.inf, slots.best_key),
+            best_idx=jnp.where(take, 0, slots.best_idx),
+        )
+
+    def step(self, view: LocalView, slots, mine, base_key) -> StepOut:
+        spec, cfg = self.spec, self.cfg
+        CH, NC = self.CH, self.n_chunks
+        phase = slots.phase
+        chunk = phase // 2
+
+        is_gather = mine & (phase % 2 == 0) & (phase < 2 * NC)
+        is_score = mine & (phase % 2 == 1)
+        is_final = mine & (phase == 2 * NC)
+        at_hop_start = is_gather & (chunk == 0)
+
+        if spec.stop_prob > 0.0:
+            u_stop = task_rng.task_uniforms(base_key, slots.query_id,
+                                            slots.hop, 1, SALT_STOP)[:, 0]
+            stop = at_hop_start & (u_stop < spec.stop_prob)
+        else:
+            stop = jnp.zeros_like(mine)
+
+        addr, deg = _local_row_access(view, slots.v_curr, self.N,
+                                      self.v_per_dev)
+        dead = at_hop_start & ~stop & (deg == 0)
+
+        # ---- hop 0: all-local scan (bias ≡ 1 without v_prev) ------------
+        hop0 = at_hop_start & ~stop & (slots.v_prev < 0) & (deg > 0)
+        idx0, _ = sample_reservoir_n2v(spec, view, addr, deg, slots, base_key)
+        v0 = view.col[jnp.clip(addr + idx0, 0, view.col.shape[-1] - 1)]
+
+        # ---- gather: stage chunk c of (candidate, edge weight) ----------
+        do_gather = is_gather & ~stop & ~dead & ~hop0
+        pos = chunk[:, None] * CH + jnp.arange(CH, dtype=jnp.int32)[None, :]
+        gvalid = pos < deg[:, None]
+        e = jnp.clip(addr[:, None] + pos, 0, view.col.shape[-1] - 1)
+        y = jnp.where(gvalid, view.col[e], -1)
+        if view.weights is not None:
+            w_edge = jnp.where(gvalid, view.weights[e], 0.0)
+        else:
+            w_edge = jnp.where(gvalid, 1.0, 0.0)
+        cand = jnp.where(do_gather[:, None], y, slots.cand)
+        cand_w = jnp.where(do_gather[:, None], w_edge, slots.cand_w)
+
+        # ---- score: E-S keys under the local N(v_prev) bias -------------
+        u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, CH,
+                                   SALT_CHUNK0 + chunk)
+        svalid = slots.cand >= 0
+        is_ret = slots.cand == slots.v_prev[:, None]
+        common = _local_edge_exists(view, slots.v_prev, slots.cand, self.N,
+                                    self.v_per_dev)
+        bias = jnp.where(is_ret, 1.0 / spec.p,
+                         jnp.where(common, 1.0, 1.0 / spec.q))
+        w = slots.cand_w * bias
+        c_best, c_key = es_chunk_score(u, svalid, w)
+        m_key, m_idx = es_merge(slots.best_key, slots.best_idx, chunk, CH,
+                                c_best, c_key)
+
+        # ---- finalize: column access on the scanned argmax --------------
+        idx_f = jnp.clip(slots.best_idx, 0, jnp.maximum(deg - 1, 0))
+        v_f = view.col[jnp.clip(addr + idx_f, 0, view.col.shape[-1] - 1)]
+
+        adv = is_final | hop0
+        v_next = jnp.where(hop0, v0, v_f)
+        new_hop = jnp.where(adv, slots.hop + 1, slots.hop)
+        reached_max = adv & (new_hop >= cfg.max_hops)
+        terminated = stop | dead | reached_max
+
+        slots = slots._replace(
+            v_curr=jnp.where(adv, v_next, slots.v_curr),
+            v_prev=jnp.where(adv, slots.v_curr, slots.v_prev),
+            hop=new_hop,
+            phase=jnp.where(do_gather | is_score, phase + 1,
+                            jnp.where(adv, 0, phase)),
+            cand=cand,
+            cand_w=cand_w,
+            best_key=jnp.where(is_score, m_key,
+                               jnp.where(adv, -jnp.inf, slots.best_key)),
+            best_idx=jnp.where(is_score, m_idx,
+                               jnp.where(adv, 0, slots.best_idx)),
+        )
+        return StepOut(slots, adv, terminated, v_next, new_hop)
+
+
+_CAPABILITIES = {
+    "first_order": _FirstOrderCap,
+    "two_phase_n2v": _TwoPhaseN2VCap,
+    "chunked_reservoir_n2v": _ChunkedReservoirCap,
+}
+
+
+def get_capability(spec: SamplerSpec, cfg: DistConfig, num_devices: int,
+                   v_per_dev: int, max_degree: int):
+    """Resolve the sampler's declared capability to an engine adapter."""
+    name = spec.capability
+    if name is None:
+        raise NotImplementedError(
+            f"sampler kind {spec.kind!r} declares no distributed "
+            "capability (metapath type_offsets are not partitioned yet — "
+            "see ROADMAP); run it on the single-device backend")
+    return _CAPABILITIES[name](spec, cfg, num_devices, v_per_dev, max_degree)
+
+
+# --------------------------------------------------------------------------
+# Generic superstep: phase-step → emission log → terminate → flow-controlled
+# refill → butterfly route.  Identical for every capability.
+# --------------------------------------------------------------------------
+
+
+def _superstep_dist(cap, cfg: DistConfig, N: int, base_key, view,
                     starts_loc, qcount, rank, carry):
     (slots, head, log_q, log_h, log_v, cursor, stats, done, t) = carry
     W_loc = cfg.slots_per_device
     K = cfg.bucket_cap(N)
-    R = cfg.retention_cap()
+    R = cfg.retention_cap(N)
     S = cfg.pool_size(N)
 
-    # ---- process: one hop for locally-owned live tasks ------------------
-    mine = slots.active & (owner_of(slots.v_curr, N) == rank)
-    if spec.stop_prob > 0.0:
-        u_stop = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
-                                        1, SALT_STOP)[:, 0]
-        stop = mine & (u_stop < spec.stop_prob)
-    else:
-        stop = jnp.zeros_like(mine)
-
-    addr, deg = _local_row_access(view, slots.v_curr, rank, N, v_per_dev)
-    sampler = get_sampler(spec)
-    idx, ok = sampler(view, addr, deg, slots, base_key)
-    e = jnp.clip(addr + idx, 0, view.col.shape[-1] - 1)
-    v_next = view.col[e]
-
-    adv = mine & ~stop & ok
-    dead = mine & ~stop & ~ok
-    new_hop = jnp.where(adv, slots.hop + 1, slots.hop)
-    reached_max = adv & (new_hop >= cfg.max_hops)
-    terminated = stop | dead | reached_max
+    # ---- process: one phase for locally-homed live tasks ----------------
+    mine = slots.active & (cap.home(slots) == rank)
+    out = cap.step(view, slots, mine, base_key)
+    slots, adv, terminated = out.slots, out.adv, out.terminated
 
     # ---- emission log (streaming write-back, paper §IV-B) ---------------
-    # Must run before the slot update clears query_id of terminated lanes
-    # (the final hop of a walk is still a recorded visit).
+    # Runs before the terminated lanes' query_id is cleared (the final hop
+    # of a walk is still a recorded visit).
     log_drop = jnp.zeros((), jnp.int32)
     if cfg.record_paths:
-        cap = cfg.log_capacity
+        cap_log = cfg.log_capacity
         pos = cursor + jnp.cumsum(adv.astype(jnp.int32)) - 1
-        keep = adv & (pos < cap)
-        p_safe = jnp.where(keep, pos, cap)
-        qid_rec = jnp.where(adv, slots.query_id, -1)
-        log_q = log_q.at[p_safe].set(qid_rec, mode="drop")
-        log_h = log_h.at[p_safe].set(new_hop, mode="drop")
-        log_v = log_v.at[p_safe].set(v_next, mode="drop")
-        n_adv = jnp.sum(adv.astype(jnp.int32))
+        keep = adv & (pos < cap_log)
+        p_safe = jnp.where(keep, pos, cap_log)
+        log_q = log_q.at[p_safe].set(jnp.where(adv, slots.query_id, -1),
+                                     mode="drop")
+        log_h = log_h.at[p_safe].set(out.new_hop, mode="drop")
+        log_v = log_v.at[p_safe].set(out.v_next, mode="drop")
         log_drop = jnp.sum((adv & ~keep).astype(jnp.int32))
-        cursor = jnp.minimum(cursor + n_adv, cap)
+        cursor = jnp.minimum(cursor + jnp.sum(adv.astype(jnp.int32)), cap_log)
 
-    slots = WalkerSlots(
-        v_curr=jnp.where(adv, v_next, slots.v_curr),
-        v_prev=jnp.where(adv, slots.v_curr, slots.v_prev),
+    slots = slots._replace(
         query_id=jnp.where(terminated, -1, slots.query_id),
-        hop=new_hop,
         active=slots.active & ~terminated,
     )
 
-    # ---- zero-bubble refill from the local query shard ------------------
+    # ---- zero-bubble refill, flow-controlled to the global live bound ---
+    # Each device admits at most its fair share of the global headroom
+    # N·W_loc - live, so system-wide live tasks never exceed N·W_loc — the
+    # bound the retention region is provisioned for (drops == 0 by
+    # construction, not by margin).
     n_active = jnp.sum(slots.active.astype(jnp.int32))
+    global_live = jax.lax.psum(n_active, cfg.axis_name)
+    slack = jnp.maximum(N * W_loc - global_live, 0)
     free = ~slots.active
-    budget = jnp.maximum(W_loc - n_active, 0)
+    budget = jnp.minimum(jnp.maximum(W_loc - n_active, 0), slack // N)
     avail = jnp.minimum(jnp.maximum(qcount - head, 0), budget)
     rank_free = jnp.cumsum(free.astype(jnp.int32)) - 1
     take = free & (rank_free < avail)
     k_local = head + rank_free
     k_safe = jnp.clip(k_local, 0, starts_loc.shape[0] - 1)
-    start_v = starts_loc[k_safe]
-    qid_new = k_local * N + rank  # global query id of local index k
-    slots = WalkerSlots(
-        v_curr=jnp.where(take, start_v, slots.v_curr),
+    slots = slots._replace(
+        v_curr=jnp.where(take, starts_loc[k_safe], slots.v_curr),
         v_prev=jnp.where(take, -1, slots.v_prev),
-        query_id=jnp.where(take, qid_new, slots.query_id),
+        query_id=jnp.where(take, k_local * N + rank, slots.query_id),
         hop=jnp.where(take, 0, slots.hop),
         active=slots.active | take,
     )
+    slots = cap.reset_extras(slots, take)
     head = head + jnp.sum(take.astype(jnp.int32))
 
-    # ---- route: butterfly all_to_all to the owning device ---------------
-    dest = owner_of(slots.v_curr, N)
+    # ---- route: butterfly all_to_all to each task's next home -----------
+    dest = cap.route_dest(slots)
     lane = jnp.arange(S, dtype=jnp.int32)
     priority = jnp.where(lane >= N * K, 0, 1)  # retained tasks go first
     rr = router.pack_buckets(slots, dest, priority, N, K, R)
     incoming = router.exchange(rr.send, cfg.axis_name)
-    slots = WalkerSlots(*(jnp.concatenate([a, b])
+    slots = type(slots)(*(jnp.concatenate([a, b])
                           for a, b in zip(incoming, rr.retention)))
 
-    # ---- stats + global termination --------------------------------------
+    # ---- stats + global termination -------------------------------------
     busy = jnp.sum(mine.astype(jnp.int32))
     upstream = (head < qcount).astype(jnp.int32)
     stats = stats._replace(
@@ -177,7 +529,8 @@ def _superstep_dist(spec, cfg, N, v_per_dev, nq_total, base_key, view,
         slot_steps=stats.slot_steps + W_loc,
         bubbles=stats.bubbles + jnp.maximum(W_loc - busy, 0),
         starved=stats.starved + jnp.maximum(W_loc - busy, 0) * upstream,
-        terminations=stats.terminations + jnp.sum(terminated.astype(jnp.int32)),
+        terminations=stats.terminations
+        + jnp.sum(terminated.astype(jnp.int32)),
         supersteps=stats.supersteps + 1,
         route_waits=stats.route_waits + rr.waits,
         drops=stats.drops + rr.drops + log_drop,
@@ -188,22 +541,17 @@ def _superstep_dist(spec, cfg, N, v_per_dev, nq_total, base_key, view,
     return (slots, head, log_q, log_h, log_v, cursor, stats, done, t + 1)
 
 
-def _empty_pool(S: int) -> WalkerSlots:
-    return WalkerSlots(
-        v_curr=jnp.full((S,), -1, jnp.int32),
-        v_prev=jnp.full((S,), -1, jnp.int32),
-        query_id=jnp.full((S,), -1, jnp.int32),
-        hop=jnp.zeros((S,), jnp.int32),
-        active=jnp.zeros((S,), bool),
-    )
-
-
 def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
                             cfg: DistConfig, mesh: jax.sharding.Mesh):
-    """Build a jitted distributed runner over the given 1-D mesh."""
+    """Build a jitted distributed runner over the given 1-D mesh.
+
+    Works for every sampler kind that declares a capability — first- and
+    second-order walks share this one routing path.
+    """
     N = pg.num_devices
     assert mesh.devices.size == N, (mesh.devices.size, N)
     v_per_dev = pg.vertices_per_device
+    cap = get_capability(spec, cfg, N, v_per_dev, pg.max_degree)
     P = jax.sharding.PartitionSpec
 
     has_w = pg.weights is not None
@@ -221,25 +569,24 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
         starts_l = starts_loc[0]
         qcount_l = qcount[0, 0]
         S = cfg.pool_size(N)
-        cap = cfg.log_capacity if cfg.record_paths else 1
+        cap_log = cfg.log_capacity if cfg.record_paths else 1
         carry = (
-            _empty_pool(S),
+            cap.empty_pool(S),
             jnp.zeros((), jnp.int32),
-            jnp.full((cap,), -1, jnp.int32),
-            jnp.full((cap,), -1, jnp.int32),
-            jnp.full((cap,), -1, jnp.int32),
+            jnp.full((cap_log,), -1, jnp.int32),
+            jnp.full((cap_log,), -1, jnp.int32),
+            jnp.full((cap_log,), -1, jnp.int32),
             jnp.zeros((), jnp.int32),
             zero_stats(),
             jnp.asarray(False),
             jnp.zeros((), jnp.int32),
         )
-        nq_total = starts_l.shape[0] * N
 
         def cond(c):
             return (~c[7]) & (c[8] < cfg.max_supersteps)
 
-        step = partial(_superstep_dist, spec, cfg, N, v_per_dev, nq_total,
-                       base_key, view, starts_l, qcount_l, rank)
+        step = partial(_superstep_dist, cap, cfg, N, base_key, view,
+                       starts_l, qcount_l, rank)
         carry = jax.lax.while_loop(cond, step, carry)
         _, head, log_q, log_h, log_v, cursor, stats, _, _ = carry
         return (log_q[None], log_h[None], log_v[None], cursor[None],
@@ -267,30 +614,50 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
     return run
 
 
-def run_distributed(pg: PartitionedGraph, starts, spec: SamplerSpec,
-                    cfg: Optional[DistConfig] = None,
-                    mesh: Optional[jax.sharding.Mesh] = None, seed: int = 0):
+def shard_starts(starts, num_devices: int):
+    """Round-robin shard start vertices across devices; returns the
+    (N, q_loc) padded shard matrix and the (N, 1) per-device counts.
+    Query ``k`` of device ``r`` is global query id ``k·N + r``."""
+    starts = np.asarray(starts, dtype=np.int32)
+    N = num_devices
+    q_loc = max((starts.shape[0] + N - 1) // N, 1)
+    starts_sh = np.zeros((N, q_loc), dtype=np.int32)
+    qcount = np.zeros((N, 1), dtype=np.int32)
+    for r in range(N):
+        part = starts[r::N]
+        starts_sh[r, : part.size] = part
+        qcount[r, 0] = part.size
+    return starts_sh, qcount
+
+
+def _run_distributed(pg: PartitionedGraph, starts, spec: SamplerSpec,
+                     cfg: Optional[DistConfig] = None,
+                     mesh: Optional[jax.sharding.Mesh] = None, seed: int = 0):
     """One-shot distributed run. Returns (DistLogs, WalkStats-per-device)."""
     cfg = cfg or DistConfig()
     N = pg.num_devices
     if mesh is None:
         devs = np.array(jax.devices()[:N])
         mesh = jax.sharding.Mesh(devs, (cfg.axis_name,))
-    starts = np.asarray(starts, dtype=np.int32)
-    Q = starts.shape[0]
-    q_loc = (Q + N - 1) // N
-    starts_sh = np.full((N, q_loc), 0, dtype=np.int32)
-    qcount = np.zeros((N, 1), dtype=np.int32)
-    for r in range(N):
-        part = starts[r::N]
-        starts_sh[r, : part.size] = part
-        qcount[r, 0] = part.size
+    starts_sh, qcount = shard_starts(starts, N)
     run = make_distributed_engine(pg, spec, cfg, mesh)
     base_key = jax.random.PRNGKey(seed)
     log_q, log_h, log_v, cursor, stats = run(
         pg, jnp.asarray(starts_sh), jnp.asarray(qcount), base_key)
     logs = DistLogs(qid=log_q, hop=log_h, vertex=log_v, cursor=cursor)
     return logs, stats
+
+
+def run_distributed(pg: PartitionedGraph, starts, spec: SamplerSpec,
+                    cfg: Optional[DistConfig] = None,
+                    mesh: Optional[jax.sharding.Mesh] = None, seed: int = 0):
+    """Deprecated one-shot entry — use
+    ``repro.walker.compile(program, backend="sharded").run(...)``."""
+    warnings.warn(
+        "run_distributed is deprecated; use repro.walker.compile(program, "
+        "backend='sharded').run(graph, starts) instead",
+        DeprecationWarning, stacklevel=2)
+    return _run_distributed(pg, starts, spec, cfg, mesh, seed)
 
 
 def assemble_paths(logs: DistLogs, starts, max_hops: int):

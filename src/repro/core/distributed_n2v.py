@@ -1,266 +1,34 @@
-"""Distributed SECOND-ORDER walks (Node2Vec) — two-phase routing.
-
-Beyond-paper extension of §V-C: a second-order hop needs data from TWO
-vertices — the proposal draw reads N(v_curr), the rejection bias reads
-N(v_prev) (is the candidate adjacent to the previous vertex?).  The paper
-carries "two vertices for higher-order walks" in the task word; we extend
-that to a *two-phase* task that routes twice per hop:
-
-  phase A  @ owner(v_curr): draw K uniform proposals from N(v_curr),
-           store them in the task word (K·32 bits — still ≤ 512-bit word
-           for K ≤ 12, matching the paper's single-word constraint),
-           route to owner(v_prev);
-  phase B  @ owner(v_prev): bisect each candidate in N(v_prev), compute
-           the (p, q) bias, accept the first winner (same bounded-round
-           semantics AND the same (seed, qid, hop)-derived uniforms as the
-           single-device sampler ⇒ bit-identical walks, asserted in
-           tests), advance, terminate/refill, route to owner(v_curr').
-
-Both phases coexist in the same slot pool every superstep (a lane's phase
-bit selects its work), so the pipeline stays full — the zero-bubble
-property is phase-agnostic.
+"""Deprecated shim — distributed second-order walks now live in the
+generic engine (`repro.core.distributed`) via sampler-capability dispatch:
+`SamplerSpec.capability` selects the task word (`N2VSlots`,
+`ReservoirSlots`) and the per-phase routing schedule, so first- and
+second-order walks share one routing path.  Prefer
+``repro.walker.compile(program, backend="sharded")``.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import NamedTuple, Optional
+import warnings
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import rng as task_rng, router
-from repro.core.distributed import DistConfig, DistLogs, LocalView
-from repro.core.samplers import SALT_COLUMN, SamplerSpec
-from repro.core.tasks import zero_stats
-from repro.distributed.compat import shard_map
-from repro.graph.partition import PartitionedGraph, owner_of
-
-
-class N2VSlots(NamedTuple):
-    """Two-phase Node2Vec task word (SoA)."""
-    v_curr: jnp.ndarray    # (S,) int32
-    v_prev: jnp.ndarray    # (S,) int32
-    query_id: jnp.ndarray  # (S,) int32 (-1 = free)
-    hop: jnp.ndarray       # (S,) int32
-    active: jnp.ndarray    # (S,) bool
-    phase: jnp.ndarray     # (S,) int32: 0 = propose (A), 1 = verify (B)
-    cand: jnp.ndarray      # (S, K) int32 — proposals carried A -> B
-
-
-def _local_deg_addr(view: LocalView, v, N, v_per_dev):
-    lid = jnp.clip(jnp.where(v >= 0, v // N, 0), 0, v_per_dev - 1)
-    addr = view.row_ptr[lid]
-    return addr, view.row_ptr[lid + 1] - addr
-
-
-def _local_edge_exists(view: LocalView, src, dst_mat, N, v_per_dev):
-    """Bisect dst_mat (S, K) in src's LOCAL neighbor list (sorted)."""
-    addr, deg = _local_deg_addr(view, src, N, v_per_dev)
-    lo = jnp.broadcast_to(addr[:, None], dst_mat.shape).astype(jnp.int32)
-    hi0 = jnp.broadcast_to((addr + deg)[:, None], dst_mat.shape).astype(jnp.int32)
-    hi = hi0
-    iters = max(1, int(math.ceil(math.log2(max(int(view.max_degree), 2) + 1))))
-    ne = view.col.shape[-1]
-    for _ in range(iters):
-        active = lo < hi
-        mid = (lo + hi) // 2
-        v = view.col[jnp.clip(mid, 0, ne - 1)]
-        go_right = v < dst_mat
-        lo = jnp.where(active & go_right, mid + 1, lo)
-        hi = jnp.where(active & ~go_right, mid, hi)
-    found = (lo < hi0) & (view.col[jnp.clip(lo, 0, ne - 1)] == dst_mat)
-    return found & (src >= 0)[:, None]
-
-
-def _superstep_n2v(spec: SamplerSpec, cfg: DistConfig, N, v_per_dev,
-                   base_key, view, starts_loc, qcount, rank, carry):
-    (slots, head, log_q, log_h, log_v, cursor, stats, done, t) = carry
-    K = spec.rejection_rounds
-    W_loc = cfg.slots_per_device
-    Kb = cfg.bucket_cap(N)
-    R = cfg.retention_cap()
-    S = cfg.pool_size(N)
-
-    here = owner_of(jnp.where(slots.phase == 0, slots.v_curr,
-                              jnp.maximum(slots.v_prev, 0)), N) == rank
-    mine = slots.active & here
-
-    # ---- phase A: propose K candidates from N(v_curr) -------------------
-    do_a = mine & (slots.phase == 0)
-    addr, deg = _local_deg_addr(view, slots.v_curr, N, v_per_dev)
-    u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 2 * K,
-                               SALT_COLUMN)
-    u_col, u_acc = u[:, :K], u[:, K:]
-    idx = jnp.minimum((u_col * deg[:, None]).astype(jnp.int32),
-                      jnp.maximum(deg - 1, 0)[:, None])
-    e = jnp.clip(addr[:, None] + idx, 0, view.col.shape[-1] - 1)
-    proposals = view.col[e]                                   # (S, K)
-    dead = do_a & (deg == 0)
-    # hop 0 has no v_prev: bias ≡ 1 -> verify locally in phase A (also
-    # avoids the owner(-1) thundering-herd hotspot on device 0)
-    w_max = max(1.0 / spec.p, 1.0, 1.0 / spec.q)
-    hop0 = do_a & (slots.v_prev < 0) & (deg > 0)
-    acc0 = (u_acc * w_max <= 1.0).at[:, K - 1].set(True)
-    first0 = jnp.argmax(acc0, axis=1)
-    v0 = jnp.take_along_axis(proposals, first0[:, None], 1)[:, 0]
-
-    # ---- phase B: verify candidates against N(v_prev) -------------------
-    do_b = mine & (slots.phase == 1)
-    is_ret = slots.cand == slots.v_prev[:, None]
-    common = _local_edge_exists(view, slots.v_prev, slots.cand, N, v_per_dev)
-    w = jnp.where(is_ret, 1.0 / spec.p,
-                  jnp.where(common, 1.0, 1.0 / spec.q))
-    accept = (u_acc * w_max <= w).at[:, K - 1].set(True)
-    first = jnp.argmax(accept, axis=1)
-    v_next = jnp.take_along_axis(slots.cand, first[:, None], 1)[:, 0]
-
-    adv = do_b | hop0
-    v_next = jnp.where(hop0, v0, v_next)
-    new_hop = jnp.where(adv, slots.hop + 1, slots.hop)
-    reached_max = adv & (new_hop >= cfg.max_hops)
-    terminated = dead | reached_max
-
-    # ---- emission log ----------------------------------------------------
-    log_drop = jnp.zeros((), jnp.int32)
-    if cfg.record_paths:
-        cap = cfg.log_capacity
-        pos = cursor + jnp.cumsum(adv.astype(jnp.int32)) - 1
-        keep = adv & (pos < cap)
-        p_safe = jnp.where(keep, pos, cap)
-        log_q = log_q.at[p_safe].set(jnp.where(adv, slots.query_id, -1),
-                                     mode="drop")
-        log_h = log_h.at[p_safe].set(new_hop, mode="drop")
-        log_v = log_v.at[p_safe].set(v_next, mode="drop")
-        log_drop = jnp.sum((adv & ~keep).astype(jnp.int32))
-        cursor = jnp.minimum(cursor + jnp.sum(adv.astype(jnp.int32)), cap)
-
-    slots = N2VSlots(
-        v_curr=jnp.where(adv, v_next, slots.v_curr),
-        v_prev=jnp.where(adv, slots.v_curr, slots.v_prev),
-        query_id=jnp.where(terminated, -1, slots.query_id),
-        hop=new_hop,
-        active=slots.active & ~terminated,
-        phase=jnp.where(do_a & ~hop0, 1, jnp.where(adv, 0, slots.phase)),
-        cand=jnp.where((do_a & ~hop0)[:, None], proposals, slots.cand),
-    )
-
-    # ---- zero-bubble refill ----------------------------------------------
-    n_active = jnp.sum(slots.active.astype(jnp.int32))
-    free = ~slots.active
-    budget = jnp.maximum(W_loc - n_active, 0)
-    avail = jnp.minimum(jnp.maximum(qcount - head, 0), budget)
-    rank_free = jnp.cumsum(free.astype(jnp.int32)) - 1
-    take = free & (rank_free < avail)
-    k_local = head + rank_free
-    k_safe = jnp.clip(k_local, 0, starts_loc.shape[0] - 1)
-    slots = N2VSlots(
-        v_curr=jnp.where(take, starts_loc[k_safe], slots.v_curr),
-        v_prev=jnp.where(take, -1, slots.v_prev),
-        query_id=jnp.where(take, k_local * N + rank, slots.query_id),
-        hop=jnp.where(take, 0, slots.hop),
-        active=slots.active | take,
-        phase=jnp.where(take, 0, slots.phase),
-        cand=slots.cand,
-    )
-    head = head + jnp.sum(take.astype(jnp.int32))
-
-    # ---- route: phase A tasks go to owner(v_prev); phase B -> owner(v_curr)
-    dest = jnp.where(slots.phase == 1,
-                     owner_of(jnp.maximum(slots.v_prev, 0), N),
-                     owner_of(slots.v_curr, N))
-    lane = jnp.arange(S, dtype=jnp.int32)
-    priority = jnp.where(lane >= N * Kb, 0, 1)
-    rr = router.pack_buckets(slots, dest, priority, N, Kb, R)
-    incoming = router.exchange(rr.send, cfg.axis_name)
-    slots = N2VSlots(*(jnp.concatenate([a, b])
-                       for a, b in zip(incoming, rr.retention)))
-
-    busy = jnp.sum(mine.astype(jnp.int32))
-    upstream = (head < qcount).astype(jnp.int32)
-    stats = stats._replace(
-        steps=stats.steps + jnp.sum(adv.astype(jnp.int32)),
-        slot_steps=stats.slot_steps + W_loc,
-        bubbles=stats.bubbles + jnp.maximum(W_loc - busy, 0),
-        starved=stats.starved + jnp.maximum(W_loc - busy, 0) * upstream,
-        terminations=stats.terminations + jnp.sum(terminated.astype(jnp.int32)),
-        supersteps=stats.supersteps + 1,
-        route_waits=stats.route_waits + rr.waits,
-        drops=stats.drops + rr.drops + log_drop,
-    )
-    n_live = jnp.sum(slots.active.astype(jnp.int32))
-    remaining = jnp.maximum(qcount - head, 0)
-    done = jax.lax.psum(n_live + remaining, cfg.axis_name) == 0
-    return (slots, head, log_q, log_h, log_v, cursor, stats, done, t + 1)
-
-
-def _empty_pool_n2v(S: int, K: int) -> N2VSlots:
-    return N2VSlots(
-        v_curr=jnp.full((S,), -1, jnp.int32),
-        v_prev=jnp.full((S,), -1, jnp.int32),
-        query_id=jnp.full((S,), -1, jnp.int32),
-        hop=jnp.zeros((S,), jnp.int32),
-        active=jnp.zeros((S,), bool),
-        phase=jnp.zeros((S,), jnp.int32),
-        cand=jnp.full((S, K), -1, jnp.int32),
-    )
+from repro.core.distributed import DistConfig, _run_distributed
+from repro.core.samplers import SamplerSpec
+from repro.core.tasks import N2VSlots  # noqa: F401 — legacy re-export
+from repro.graph.partition import PartitionedGraph
 
 
 def run_distributed_n2v(pg: PartitionedGraph, starts, spec: SamplerSpec,
                         cfg: Optional[DistConfig] = None,
                         mesh: Optional[jax.sharding.Mesh] = None,
                         seed: int = 0):
-    """Distributed rejection-sampling Node2Vec. Returns (DistLogs, stats)."""
-    assert spec.kind == "rejection_n2v"
-    cfg = cfg or DistConfig()
-    N = pg.num_devices
-    if mesh is None:
-        devs = np.array(jax.devices()[:N])
-        mesh = jax.sharding.Mesh(devs, (cfg.axis_name,))
-    P = jax.sharding.PartitionSpec
-    starts = np.asarray(starts, dtype=np.int32)
-    Q = starts.shape[0]
-    q_loc = (Q + N - 1) // N
-    starts_sh = np.zeros((N, q_loc), dtype=np.int32)
-    qcount = np.zeros((N, 1), dtype=np.int32)
-    for r in range(N):
-        part = starts[r::N]
-        starts_sh[r, : part.size] = part
-        qcount[r, 0] = part.size
-    v_per_dev = pg.vertices_per_device
-
-    def body(rowp, colp, starts_loc, qc, base_key):
-        rank = jax.lax.axis_index(cfg.axis_name)
-        view = LocalView(row_ptr=rowp[0], col=colp[0], weights=None,
-                         alias_prob=None, alias_idx=None,
-                         max_degree=pg.max_degree)
-        S = cfg.pool_size(N)
-        cap = cfg.log_capacity if cfg.record_paths else 1
-        carry = (_empty_pool_n2v(S, spec.rejection_rounds),
-                 jnp.zeros((), jnp.int32),
-                 jnp.full((cap,), -1, jnp.int32),
-                 jnp.full((cap,), -1, jnp.int32),
-                 jnp.full((cap,), -1, jnp.int32),
-                 jnp.zeros((), jnp.int32),
-                 zero_stats(), jnp.asarray(False), jnp.zeros((), jnp.int32))
-
-        def cond(c):
-            return (~c[7]) & (c[8] < cfg.max_supersteps)
-
-        step = partial(_superstep_n2v, spec, cfg, N, v_per_dev, base_key,
-                       view, starts_loc[0], qc[0, 0], rank)
-        carry = jax.lax.while_loop(cond, step, carry)
-        _, head, log_q, log_h, log_v, cursor, stats, _, _ = carry
-        return (log_q[None], log_h[None], log_v[None], cursor[None],
-                jax.tree.map(lambda x: x[None], stats))
-
-    smapped = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(cfg.axis_name),) * 4 + (P(),),
-        out_specs=(P(cfg.axis_name),) * 4 + (P(cfg.axis_name),),
-        check_vma=False)
-    log_q, log_h, log_v, cursor, stats = jax.jit(smapped)(
-        pg.row_ptr, pg.col, jnp.asarray(starts_sh), jnp.asarray(qcount),
-        jax.random.PRNGKey(seed))
-    return DistLogs(qid=log_q, hop=log_h, vertex=log_v, cursor=cursor), stats
+    """Deprecated: the generic distributed engine handles second-order
+    samplers.  Returns (DistLogs, stats), as before."""
+    warnings.warn(
+        "run_distributed_n2v is deprecated; second-order walks route "
+        "through the generic distributed engine — use repro.walker."
+        "compile(program, backend='sharded').run(...) or "
+        "repro.core.distributed.run_distributed",
+        DeprecationWarning, stacklevel=2)
+    assert spec.second_order, spec.kind
+    return _run_distributed(pg, starts, spec, cfg, mesh, seed)

@@ -51,6 +51,24 @@ class SamplerSpec:
     def second_order(self) -> bool:
         return self.kind in ("rejection_n2v", "reservoir_n2v")
 
+    @property
+    def capability(self) -> str | None:
+        """Distributed-execution capability this sampler declares — the
+        dispatch key the sharded engine uses to allocate the task word and
+        routing schedule (first- and second-order walks share one routing
+        path; second-order kinds declare the extra slot state they carry).
+
+        ``first_order``: the whole hop reads one vertex's data — route to
+        owner(v_curr), WalkerSlots task word.
+        ``two_phase_n2v``: propose at owner(v_curr), verify at
+        owner(v_prev) — N2VSlots with a phase bit + candidate payload.
+        ``chunked_reservoir_n2v``: O(deg) weighted scan ping-pongs chunks
+        between owner(v_curr) and owner(v_prev) — ReservoirSlots.
+        ``None``: not distributable yet (metapath: typed sub-segments are
+        not partitioned).
+        """
+        return _DIST_CAPABILITIES[self.kind]
+
 
 def _col_at(g, e):
     return g.col[jnp.clip(e, 0, g.col.shape[-1] - 1)]
@@ -140,13 +158,42 @@ def sample_rejection_n2v(spec, g, addr, deg, slots, base_key):
     return idx, deg > 0
 
 
+def es_chunk_score(u, valid, w):
+    """Efraimidis–Spirakis chunk scoring: key = u^(1/w), monotone in
+    log(u)/w (stabler) — returns the within-chunk (argmax, max).
+
+    Shared verbatim by the single-device reservoir sampler and the sharded
+    engine's chunk-score phase so the two are bit-identical: both feed the
+    same (u, valid, w) and the same float ops produce the same key.
+    """
+    key = jnp.where(valid & (w > 0), jnp.log(u + 1e-20) / w, -jnp.inf)
+    c_best = jnp.argmax(key, axis=1)
+    c_key = jnp.take_along_axis(key, c_best[:, None], 1)[:, 0]
+    return c_best, c_key
+
+
+def es_merge(best_key, best_idx, chunk_index, chunk_size, c_best, c_key):
+    """Fold one chunk's (argmax, max) into the running reservoir maximum.
+    Strict > keeps the earliest chunk on ties — shared by both engines."""
+    take = c_key > best_key
+    best_idx = jnp.where(take,
+                         chunk_index * chunk_size + c_best.astype(jnp.int32),
+                         best_idx)
+    best_key = jnp.maximum(best_key, c_key)
+    return best_key, best_idx
+
+
+def es_num_chunks(max_degree: int, chunk: int) -> int:
+    return max(1, -(-int(max_degree) // chunk))
+
+
 def sample_reservoir_n2v(spec, g, addr, deg, slots, base_key):
     """Weighted Node2Vec via Efraimidis–Spirakis weighted reservoir
     (LightRW's method): scan the full neighbor list in chunks, key =
     u^(1/w'), keep the max.  O(deg) work per hop — inherent to exact
     weighted 2nd-order sampling; chunked so the working set stays in VMEM."""
     CH = spec.reservoir_chunk
-    n_chunks = max(1, -(-int(g.max_degree) // CH))
+    n_chunks = es_num_chunks(g.max_degree, CH)
     W = addr.shape[0]
     weights = g.weights if g.weights is not None else None
 
@@ -160,14 +207,8 @@ def sample_reservoir_n2v(spec, g, addr, deg, slots, base_key):
         y = g.col[e]
         w = weights[e] if weights is not None else jnp.ones_like(u)
         w = w * _n2v_bias(spec, g, slots.v_prev, y)
-        # E-S key: u^(1/w) — monotone in log(u)/w; use that (stabler).
-        key = jnp.where(valid & (w > 0), jnp.log(u + 1e-20) / w, -jnp.inf)
-        c_best = jnp.argmax(key, axis=1)
-        c_key = jnp.take_along_axis(key, c_best[:, None], 1)[:, 0]
-        take = c_key > best_key
-        best_idx = jnp.where(take, c * CH + c_best.astype(jnp.int32), best_idx)
-        best_key = jnp.maximum(best_key, c_key)
-        return best_key, best_idx
+        c_best, c_key = es_chunk_score(u, valid, w)
+        return es_merge(best_key, best_idx, c, CH, c_best, c_key)
 
     init = (jnp.full((W,), -jnp.inf), jnp.zeros((W,), jnp.int32))
     _, best_idx = jax.lax.fori_loop(0, n_chunks, chunk_body, init)
@@ -198,6 +239,17 @@ _SAMPLERS = {
     "rejection_n2v": sample_rejection_n2v,
     "reservoir_n2v": sample_reservoir_n2v,
     "metapath": sample_metapath,
+}
+
+# Distributed capability each sampler kind declares (see
+# SamplerSpec.capability).  The sharded engine dispatches on this to pick
+# the task word + per-phase routing schedule — one routing path for all.
+_DIST_CAPABILITIES = {
+    "uniform": "first_order",
+    "alias": "first_order",
+    "rejection_n2v": "two_phase_n2v",
+    "reservoir_n2v": "chunked_reservoir_n2v",
+    "metapath": None,
 }
 
 

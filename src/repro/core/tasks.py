@@ -43,6 +43,70 @@ def empty_slots(width: int) -> WalkerSlots:
     )
 
 
+class N2VSlots(NamedTuple):
+    """Two-phase second-order task word (SoA) for distributed Node2Vec
+    rejection sampling: phase A draws K proposals at owner(v_curr), phase B
+    verifies them against N(v_prev) — the paper's "two vertices for
+    higher-order walks" extension of the task tuple, plus the K·32-bit
+    candidate payload carried between phases."""
+
+    v_curr: jnp.ndarray    # (S,) int32
+    v_prev: jnp.ndarray    # (S,) int32
+    query_id: jnp.ndarray  # (S,) int32 (-1 = free)
+    hop: jnp.ndarray       # (S,) int32
+    active: jnp.ndarray    # (S,) bool
+    phase: jnp.ndarray     # (S,) int32: 0 = propose (A), 1 = verify (B)
+    cand: jnp.ndarray      # (S, K) int32 — proposals carried A -> B
+
+
+def empty_n2v_slots(width: int, k: int) -> N2VSlots:
+    return N2VSlots(
+        v_curr=jnp.full((width,), -1, jnp.int32),
+        v_prev=jnp.full((width,), -1, jnp.int32),
+        query_id=jnp.full((width,), -1, jnp.int32),
+        hop=jnp.zeros((width,), jnp.int32),
+        active=jnp.zeros((width,), bool),
+        phase=jnp.zeros((width,), jnp.int32),
+        cand=jnp.full((width, k), -1, jnp.int32),
+    )
+
+
+class ReservoirSlots(NamedTuple):
+    """Chunked-scan second-order task word for distributed *weighted*
+    Node2Vec (Efraimidis–Spirakis reservoir).  The scan over N(v_curr)
+    ping-pongs between owner(v_curr) (gather a chunk of candidates and
+    their edge weights) and owner(v_prev) (score the chunk against the
+    local adjacency bias), carrying the running reservoir maximum."""
+
+    v_curr: jnp.ndarray    # (S,) int32
+    v_prev: jnp.ndarray    # (S,) int32
+    query_id: jnp.ndarray  # (S,) int32 (-1 = free)
+    hop: jnp.ndarray       # (S,) int32
+    active: jnp.ndarray    # (S,) bool
+    phase: jnp.ndarray     # (S,) int32: 2c = gather chunk c @owner(v_curr),
+                           #             2c+1 = score chunk c @owner(v_prev),
+                           #             2·n_chunks = finalize @owner(v_curr)
+    cand: jnp.ndarray      # (S, CH) int32 — chunk candidates (-1 = padding)
+    cand_w: jnp.ndarray    # (S, CH) float32 — candidate edge weights
+    best_key: jnp.ndarray  # (S,) float32 — running E-S reservoir key
+    best_idx: jnp.ndarray  # (S,) int32 — running argmax neighbor offset
+
+
+def empty_reservoir_slots(width: int, chunk: int) -> ReservoirSlots:
+    return ReservoirSlots(
+        v_curr=jnp.full((width,), -1, jnp.int32),
+        v_prev=jnp.full((width,), -1, jnp.int32),
+        query_id=jnp.full((width,), -1, jnp.int32),
+        hop=jnp.zeros((width,), jnp.int32),
+        active=jnp.zeros((width,), bool),
+        phase=jnp.zeros((width,), jnp.int32),
+        cand=jnp.full((width, chunk), -1, jnp.int32),
+        cand_w=jnp.zeros((width, chunk), jnp.float32),
+        best_key=jnp.full((width,), -jnp.inf, jnp.float32),
+        best_idx=jnp.zeros((width,), jnp.int32),
+    )
+
+
 class QueryQueue(NamedTuple):
     """Device-resident pending-query buffer (the Theorem VI.1 queue).
 
@@ -73,11 +137,22 @@ def make_queue(start_vertices, staged: int | None = None,
                tail: int | None = None) -> QueryQueue:
     sv = jnp.asarray(start_vertices, jnp.int32)
     q = sv.shape[-1]
+    tail = q if tail is None else tail
+    staged = tail if staged is None else staged
+    if tail > q:
+        raise ValueError(
+            f"tail={tail} exceeds the queue buffer capacity {q}; only "
+            f"queries that fit in the buffer can have arrived")
+    if staged > tail:
+        raise ValueError(
+            f"staged={staged} exceeds tail={tail}: the injection watermark "
+            f"cannot run ahead of the queries that actually arrived "
+            f"(invariant head <= staged <= tail <= capacity)")
     return QueryQueue(
         start_vertex=sv,
         head=jnp.zeros((), jnp.int32),
-        staged=jnp.asarray(q if staged is None else min(staged, q), jnp.int32),
-        tail=jnp.asarray(q if tail is None else min(tail, q), jnp.int32),
+        staged=jnp.asarray(staged, jnp.int32),
+        tail=jnp.asarray(tail, jnp.int32),
     )
 
 

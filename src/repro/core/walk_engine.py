@@ -26,7 +26,7 @@ Closed vs. open system
 ----------------------
 The engine exposes two execution styles over one superstep function:
 
-  * ``make_engine`` — the closed system of the paper's evaluation: a fixed
+  * ``build_engine`` — the closed system of the paper's evaluation: a fixed
     query batch is drained to completion inside a single
     ``jax.lax.while_loop``.
   * ``make_superstep_runner`` — the open system of the queuing-theoretic
@@ -35,8 +35,11 @@ The engine exposes two execution styles over one superstep function:
     supersteps and returns the persistent :class:`StreamState`, so the host
     can append newly arrived queries (``inject_queries``) between chunks
     without recompiling.  ``k`` and the arrival count are traced scalars;
-    only the buffer shapes are static.  `repro.serve` builds a multi-tenant
-    walk service on top of this.
+    only the buffer shapes are static.
+
+`repro.walker` is the front-end over both (``compile(program).run()`` /
+``.stream()`` / ``.serve()``); the deprecated ``make_engine`` /
+``run_walks`` names survive as warning shims.
 
 Because path content depends only on ``(seed, query_id, hop)``, chunked
 execution is bit-identical to one-shot execution for the same seed — the
@@ -45,6 +48,7 @@ property `tests/test_streaming.py` pins down.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -58,6 +62,12 @@ from repro.core.tasks import (QueryQueue, WalkerSlots, WalkResult, WalkStats,
 from repro.graph.csr import CSRGraph, column_access, row_access
 
 
+# Allowed scheduling modes / step implementations — shared with
+# ExecutionConfig so the two validation layers cannot drift.
+MODES = ("zero_bubble", "static")
+STEP_IMPLS = ("jnp", "pallas")
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     num_slots: int = 1024          # W — lane count (outstanding tasks/core)
@@ -68,6 +78,35 @@ class EngineConfig:
     queue_depth_factor: float = 1.0  # × Theorem VI.1 depth D
     max_supersteps: int = 1 << 20  # safety bound for the while loop
     step_impl: str = "jnp"         # jnp | pallas (fused walk-step kernel)
+
+    def __post_init__(self):
+        if self.num_slots <= 0:
+            raise ValueError(
+                f"num_slots must be a positive lane count (W), got "
+                f"{self.num_slots}; a zero-width slot pool can do no work")
+        if self.max_hops <= 0:
+            raise ValueError(
+                f"max_hops must be positive, got {self.max_hops}; a walk "
+                "needs at least one hop of budget")
+        if self.mode not in MODES:
+            raise ValueError(
+                f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.step_impl not in STEP_IMPLS:
+            raise ValueError(
+                f"step_impl must be one of {STEP_IMPLS}, got "
+                f"{self.step_impl!r}")
+        if self.injection_delay < 0:
+            raise ValueError(
+                f"injection_delay is a latency in supersteps and cannot be "
+                f"negative, got {self.injection_delay}")
+        if self.queue_depth_factor <= 0:
+            raise ValueError(
+                f"queue_depth_factor must be positive (it scales the "
+                f"Theorem VI.1 stage-ahead depth), got "
+                f"{self.queue_depth_factor}")
+        if self.max_supersteps <= 0:
+            raise ValueError(
+                f"max_supersteps must be positive, got {self.max_supersteps}")
 
 
 class StreamState(NamedTuple):
@@ -313,9 +352,13 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
     return run_supersteps
 
 
-def make_engine(spec: SamplerSpec, cfg: EngineConfig):
+def build_engine(spec: SamplerSpec, cfg: EngineConfig):
     """Build a jitted ``run(graph, start_vertices, seed) -> WalkResult``
-    (the closed system: drain a fixed query batch to completion)."""
+    (the closed system: drain a fixed query batch to completion).
+
+    Engine-layer builder used by `repro.walker.compile`; prefer the
+    `Walker` front-end unless you are extending the engine itself.
+    """
 
     @partial(jax.jit, static_argnames=("num_queries",))
     def run(graph: CSRGraph, start_vertices: jnp.ndarray, seed,
@@ -353,10 +396,31 @@ def make_engine(spec: SamplerSpec, cfg: EngineConfig):
     return run
 
 
-def run_walks(graph: CSRGraph, start_vertices, spec: SamplerSpec,
-              cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
-    """Convenience one-shot API (examples / tests)."""
+def make_engine(spec: SamplerSpec, cfg: EngineConfig):
+    """Deprecated alias for :func:`build_engine` — prefer
+    ``repro.walker.compile(program).run(...)``."""
+    warnings.warn(
+        "make_engine is deprecated; use repro.walker.compile(program)"
+        ".run(graph, starts) (or build_engine when extending the engine)",
+        DeprecationWarning, stacklevel=2)
+    return build_engine(spec, cfg)
+
+
+def _run_walks(graph: CSRGraph, start_vertices, spec: SamplerSpec,
+               cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
+    """One-shot closed-system run (engine-internal reference path)."""
     cfg = cfg or EngineConfig()
     sv = jnp.asarray(start_vertices, jnp.int32)
-    run = make_engine(spec, cfg)
+    run = build_engine(spec, cfg)
     return run(graph, sv, seed, num_queries=int(sv.shape[0]))
+
+
+def run_walks(graph: CSRGraph, start_vertices, spec: SamplerSpec,
+              cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
+    """Deprecated convenience one-shot API — prefer
+    ``repro.walker.compile(program).run(graph, starts)``."""
+    warnings.warn(
+        "run_walks is deprecated; use repro.walker.compile(program)"
+        ".run(graph, starts)",
+        DeprecationWarning, stacklevel=2)
+    return _run_walks(graph, start_vertices, spec, cfg, seed)

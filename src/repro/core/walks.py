@@ -1,75 +1,100 @@
-"""GRW algorithm front-ends (paper Table I + §VIII-A4).
+"""Deprecated GRW algorithm front-ends (paper Table I + §VIII-A4).
 
-Thin wrappers that pick the right SamplerSpec for each published GRW and
-run the engine.  Defaults follow the paper's evaluation setup: query
-length 80; Node2Vec p=2, q=0.5; ThunderRW-style edge weights.
+Thin shims over the unified walker API — each call builds the equivalent
+:class:`repro.walker.WalkProgram` and runs it on the single-device
+backend, emitting a ``DeprecationWarning``.  Prefer::
+
+    from repro import walker
+    w = walker.compile(walker.WalkProgram.deepwalk(max_hops=80))
+    result = w.run(graph, starts, seed=0)
+
+Defaults follow the paper's evaluation setup: query length 80; Node2Vec
+p=2, q=0.5; ThunderRW-style edge weights.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Optional, Sequence
 
-from repro.core.samplers import SamplerSpec
 from repro.core.tasks import WalkResult
-from repro.core.walk_engine import EngineConfig, run_walks
-from repro.graph.csr import CSRGraph
+from repro.core.walk_engine import EngineConfig
+
+_MIGRATE = {
+    "urw": "WalkProgram.urw(max_hops)",
+    "ppr": "WalkProgram.ppr(alpha, max_hops)",
+    "deepwalk": "WalkProgram.deepwalk(max_hops)",
+    "node2vec": "WalkProgram.node2vec(p, q, max_hops, weighted=...)",
+    "metapath": "WalkProgram.metapath(schedule, max_hops)",
+}
 
 
-def urw(graph: CSRGraph, starts, max_hops: int = 80,
+def _deprecated_run(name: str, program, graph, starts,
+                    cfg: Optional[EngineConfig], seed: int) -> WalkResult:
+    warnings.warn(
+        f"walks.{name} is deprecated; use repro.walker.compile("
+        f"{_MIGRATE[name]}).run(graph, starts, seed=seed)",
+        DeprecationWarning, stacklevel=3)
+    from repro import walker
+    execution = (walker.ExecutionConfig.from_engine_config(cfg)
+                 if cfg is not None else walker.ExecutionConfig())
+    return walker.compile(program, execution=execution).run(
+        graph, starts, seed=seed)
+
+
+def urw(graph, starts, max_hops: int = 80,
         cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
     """Unbiased random walk [49]: uniform neighbor sampling."""
-    spec = SamplerSpec(kind="uniform")
-    cfg = (cfg or EngineConfig())
-    cfg = _with(cfg, max_hops=max_hops)
-    return run_walks(graph, starts, spec, cfg, seed)
+    from repro.walker import WalkProgram
+    return _deprecated_run("urw", WalkProgram.urw(max_hops), graph, starts,
+                           cfg, seed)
 
 
-def ppr(graph: CSRGraph, starts, alpha: float = 0.15, max_hops: int = 80,
+def ppr(graph, starts, alpha: float = 0.15, max_hops: int = 80,
         cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
     """Personalized PageRank walks [50]: uniform sampling, geometric
     termination with teleport probability α (walk endpoints estimate PPR
     mass)."""
-    spec = SamplerSpec(kind="uniform", stop_prob=alpha)
-    cfg = _with(cfg or EngineConfig(), max_hops=max_hops)
-    return run_walks(graph, starts, spec, cfg, seed)
+    from repro.walker import WalkProgram
+    return _deprecated_run("ppr", WalkProgram.ppr(alpha, max_hops), graph,
+                           starts, cfg, seed)
 
 
-def deepwalk(graph: CSRGraph, starts, max_hops: int = 80,
+def deepwalk(graph, starts, max_hops: int = 80,
              cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
     """DeepWalk [5]: alias sampling over (weighted) neighbor lists.
     Graph must carry alias tables (graph.alias.build_alias_tables)."""
+    from repro.walker import WalkProgram
     assert graph.has_alias, "DeepWalk requires alias tables on the graph"
-    spec = SamplerSpec(kind="alias")
-    cfg = _with(cfg or EngineConfig(), max_hops=max_hops)
-    return run_walks(graph, starts, spec, cfg, seed)
+    return _deprecated_run("deepwalk", WalkProgram.deepwalk(max_hops), graph,
+                           starts, cfg, seed)
 
 
-def node2vec(graph: CSRGraph, starts, p: float = 2.0, q: float = 0.5,
+def node2vec(graph, starts, p: float = 2.0, q: float = 0.5,
              max_hops: int = 80, weighted: Optional[bool] = None,
              cfg: Optional[EngineConfig] = None, seed: int = 0) -> WalkResult:
     """Node2Vec [9]: rejection sampling (unweighted) or Efraimidis–Spirakis
     reservoir sampling (weighted) — paper Table I."""
+    from repro.walker import WalkProgram
     if weighted is None:
         weighted = graph.weighted
-    kind = "reservoir_n2v" if weighted else "rejection_n2v"
-    spec = SamplerSpec(kind=kind, p=p, q=q)
-    cfg = _with(cfg or EngineConfig(), max_hops=max_hops)
-    return run_walks(graph, starts, spec, cfg, seed)
+    program = WalkProgram.node2vec(p, q, max_hops, weighted=weighted)
+    return _deprecated_run("node2vec", program, graph, starts, cfg, seed)
 
 
-def metapath(graph: CSRGraph, starts, schedule: Sequence[int],
+def metapath(graph, starts, schedule: Sequence[int],
              max_hops: int = 80, cfg: Optional[EngineConfig] = None,
              seed: int = 0) -> WalkResult:
     """MetaPath walks [16]: each hop samples uniformly among neighbors of
     the scheduled edge type; no match → early termination (the workload
     that most stresses the zero-bubble scheduler, §VIII-B)."""
+    from repro.walker import WalkProgram
     assert graph.typed, "MetaPath requires a typed graph"
-    spec = SamplerSpec(kind="metapath", metapath=tuple(int(t) for t in schedule))
-    cfg = _with(cfg or EngineConfig(), max_hops=max_hops)
-    return run_walks(graph, starts, spec, cfg, seed)
+    return _deprecated_run("metapath", WalkProgram.metapath(schedule, max_hops),
+                           graph, starts, cfg, seed)
 
 
 def _with(cfg: EngineConfig, **kw) -> EngineConfig:
-    import dataclasses
     return dataclasses.replace(cfg, **kw)
 
 

@@ -1,22 +1,22 @@
-"""GRW service driver — the paper's workload as a runnable CLI.
+"""GRW service driver — the paper's workload as a runnable CLI, on the
+unified walker API (`repro.walker.compile`).
 
   PYTHONPATH=src python -m repro.launch.walk --algo deepwalk --dataset WG \
       --queries 2000 --slots 1024
-  PYTHONPATH=src python -m repro.launch.walk --algo urw --distributed \
+  PYTHONPATH=src python -m repro.launch.walk --algo node2vec --backend sharded \
       --devices 8 ...   (needs XLA_FLAGS=--xla_force_host_platform_device_count=8)
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import numpy as np
 
-from repro.configs.ridgewalker import ALGORITHMS, ENGINE, QUERY_LENGTH
+from repro import walker
+from repro.configs.ridgewalker import ALGORITHMS, QUERY_LENGTH
 from repro.core.scheduler import analyze_run
-from repro.core.walk_engine import run_walks
-from repro.graph import make_dataset, partition_graph
+from repro.graph import make_dataset
 
 
 def main():
@@ -31,13 +31,18 @@ def main():
     ap.add_argument("--mode", default="zero_bubble",
                     choices=["zero_bubble", "static"])
     ap.add_argument("--step-impl", default="jnp", choices=["jnp", "pallas"])
-    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--backend", default="single",
+                    choices=list(walker.BACKENDS))
+    ap.add_argument("--distributed", action="store_true",
+                    help="alias for --backend sharded")
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--record-paths", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     spec = ALGORITHMS[args.algo]
+    program = walker.WalkProgram(spec=spec, max_hops=args.max_hops,
+                                 name=args.algo)
     weighted = spec.kind in ("alias", "reservoir_n2v")
     g = make_dataset(args.dataset, weighted=weighted,
                      with_alias=spec.kind == "alias",
@@ -47,36 +52,24 @@ def main():
     rng = np.random.default_rng(args.seed)
     starts = rng.integers(0, g.num_vertices, args.queries).astype(np.int32)
 
-    if args.distributed:
-        from repro.core.distributed import DistConfig, run_distributed
-        pg = partition_graph(g, args.devices)
-        cfg = DistConfig(slots_per_device=args.slots // args.devices,
-                         max_hops=args.max_hops,
-                         record_paths=args.record_paths)
-        t0 = time.time()
-        if spec.kind == "rejection_n2v":
-            from repro.core.distributed_n2v import run_distributed_n2v
-            logs, stats = run_distributed_n2v(pg, starts, spec, cfg,
-                                              seed=args.seed)
-        else:
-            logs, stats = run_distributed(pg, starts, spec, cfg,
-                                          seed=args.seed)
-        import jax
-        jax.block_until_ready(logs.cursor)
-        dt = time.time() - t0
-        import jax.numpy as jnp
-        tot = type(stats)(*(v.sum() for v in stats))
-        a = analyze_run(tot, dt)
+    backend = "sharded" if args.distributed else args.backend
+    if backend == "sharded":
+        if args.mode != "zero_bubble" or args.step_impl != "jnp":
+            ap.error("--mode/--step-impl only apply to --backend single "
+                     "(the sharded superstep is always zero-bubble jnp)")
+        execution = walker.ExecutionConfig(
+            num_slots=args.slots, record_paths=args.record_paths,
+            num_devices=args.devices)
     else:
-        cfg = dataclasses.replace(
-            ENGINE, num_slots=args.slots, max_hops=args.max_hops,
-            mode=args.mode, record_paths=args.record_paths,
-            step_impl=args.step_impl)
-        t0 = time.time()
-        res = run_walks(g, starts, spec, cfg, seed=args.seed)
-        res.stats.steps.block_until_ready()
-        dt = time.time() - t0
-        a = analyze_run(res.stats, dt)
+        execution = walker.ExecutionConfig(
+            num_slots=args.slots, record_paths=args.record_paths,
+            mode=args.mode, step_impl=args.step_impl)
+    w = walker.compile(program, backend=backend, execution=execution)
+    t0 = time.time()
+    res = w.run(g, starts, seed=args.seed)
+    res.stats.steps.block_until_ready()
+    dt = time.time() - t0
+    a = analyze_run(res.stats, dt)
     print(f"steps={a.steps} supersteps={a.supersteps} "
           f"throughput={a.msteps_per_s:.3f} MStep/s "
           f"occupancy={a.occupancy:.3f} starved={a.starved} drops={a.drops}")

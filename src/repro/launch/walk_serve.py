@@ -10,10 +10,10 @@ from __future__ import annotations
 
 import argparse
 
+from repro import walker
 from repro.configs.ridgewalker import ALGORITHMS, QUERY_LENGTH
-from repro.core.walk_engine import EngineConfig
 from repro.graph import make_dataset
-from repro.serve import OpenLoad, WalkService, run_open_load
+from repro.serve import OpenLoad, run_open_load
 
 
 def main():
@@ -45,10 +45,12 @@ def main():
     print(f"{args.dataset}: |V|={g.num_vertices} |E|={g.num_edges} "
           f"max_deg={g.max_degree}")
 
-    cfg = EngineConfig(num_slots=args.slots, max_hops=args.max_hops,
-                       injection_delay=args.injection_delay)
-    svc = WalkService(g, spec, cfg, capacity=args.capacity,
-                      chunk=args.chunk, seed=args.seed)
+    program = walker.WalkProgram(spec=spec, max_hops=args.max_hops,
+                                 name=args.algo)
+    execution = walker.ExecutionConfig(num_slots=args.slots,
+                                       injection_delay=args.injection_delay)
+    svc = walker.compile(program, execution=execution).serve(
+        g, capacity=args.capacity, chunk=args.chunk, seed=args.seed)
     load = OpenLoad(num_requests=args.requests,
                     request_size=args.request_size,
                     utilization=args.rho)

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.samplers import SamplerSpec
 from repro.core.scheduler import ServiceAnalysis, analyze_service
 from repro.core.tasks import WalkStats
 from repro.core.walk_engine import (EngineConfig, init_stream_state,
@@ -83,18 +84,31 @@ def _pad_block(n: int, floor: int = 16) -> int:
 class WalkService:
     """Multi-tenant streaming walk service over one graph + sampler spec.
 
-    Typical use::
+    Typical use (the walker front-end)::
 
-        svc = WalkService(graph, SamplerSpec(kind="uniform"), cfg)
+        svc = walker.compile(WalkProgram.urw(80)).serve(graph)
         rid = svc.submit(start_vertices)        # non-blocking
         svc.step()                              # admit + run one chunk
         req = svc.poll(rid)                     # WalkRequest or None
         reqs = svc.drain()                      # run until all complete
+
+    ``program`` may be a :class:`repro.walker.WalkProgram` (preferred;
+    machine knobs come from ``execution``) or a bare
+    :class:`~repro.core.SamplerSpec` with a legacy ``cfg``
+    :class:`~repro.core.EngineConfig`.
     """
 
-    def __init__(self, graph, spec, cfg: Optional[EngineConfig] = None,
-                 capacity: int = 4096, chunk: int = 16, seed: int = 0):
-        cfg = cfg or EngineConfig()
+    def __init__(self, graph, program, cfg: Optional[EngineConfig] = None,
+                 capacity: int = 4096, chunk: int = 16, seed: int = 0,
+                 execution=None):
+        if isinstance(program, SamplerSpec):
+            spec = program
+            cfg = cfg or EngineConfig()
+        else:  # WalkProgram
+            spec = program.spec
+            if cfg is None:
+                from repro.walker.execution import ExecutionConfig
+                cfg = (execution or ExecutionConfig()).engine_config(program)
         if not cfg.record_paths:
             # Harvesting slices recorded paths; recording is mandatory here.
             cfg = dataclasses.replace(cfg, record_paths=True)

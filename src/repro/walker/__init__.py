@@ -1,0 +1,28 @@
+"""Unified walker API: one declarative program, every backend.
+
+``WalkProgram`` (algorithm: sampler + termination + hop budget) ×
+``ExecutionConfig`` (machine: slots, staging, placement) →
+``compile(program, backend=...)`` → a ``Walker`` exposing
+
+  * ``.run(graph, starts)``  — closed batch, drained to completion;
+  * ``.stream(graph, ...)``  — open system with mid-flight injection;
+  * ``.serve(graph, ...)``   — multi-tenant ``WalkService``;
+
+with ``backend="single"`` or ``"sharded"`` (vertex-partitioned
+``shard_map`` execution, bit-identical to single-device).
+
+The legacy surfaces (`core.walks`, `run_walks`, `make_engine`,
+`run_distributed`, `run_distributed_n2v`) remain as deprecated shims.
+"""
+from repro.walker.compile import BACKENDS, Walker, WalkStream, compile
+from repro.walker.execution import ExecutionConfig
+from repro.walker.program import WalkProgram
+
+__all__ = [
+    "WalkProgram",
+    "ExecutionConfig",
+    "compile",
+    "Walker",
+    "WalkStream",
+    "BACKENDS",
+]

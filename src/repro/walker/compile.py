@@ -1,0 +1,272 @@
+"""compile(program, backend=...) — one entry point for every regime.
+
+The Markov property makes every hop a stateless task (paper §V-A), so a
+single superstep definition serves the closed batch system, the open
+streaming system, the multi-tenant service, and the ``shard_map``-
+partitioned multi-device system.  :func:`compile` binds a
+:class:`~repro.walker.WalkProgram` to a backend and returns a
+:class:`Walker` exposing all three execution styles:
+
+    walker = compile(WalkProgram.node2vec(p=2.0, q=0.5), backend="single")
+    result = walker.run(graph, starts, seed=0)        # closed batch
+    stream = walker.stream(graph, capacity=4096)      # open system
+    service = walker.serve(graph)                     # multi-tenant
+
+Paths are bit-identical across backends for the same (seed, query_id,
+hop) — pinned by ``tests/test_walker_api.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import (DistLogs, assemble_paths,
+                                    make_distributed_engine, shard_starts)
+from repro.core.tasks import WalkResult, WalkStats
+from repro.core.walk_engine import (StreamState, build_engine,
+                                    init_stream_state, inject_queries,
+                                    make_superstep_runner)
+from repro.graph.partition import PartitionedGraph, partition_graph
+from repro.walker.execution import ExecutionConfig
+from repro.walker.program import WalkProgram
+
+BACKENDS = ("single", "sharded")
+
+
+def compile(program: WalkProgram, backend: str = "single",
+            execution: Optional[ExecutionConfig] = None,
+            mesh: Optional[jax.sharding.Mesh] = None) -> "Walker":
+    """Bind ``program`` to an execution backend.
+
+    backend:
+      ``single``  — one device: slot-pool engine with zero-bubble refill.
+      ``sharded`` — ``shard_map`` over a 1-D device mesh: vertex-
+                    partitioned graph, per-phase butterfly routing,
+                    flow-controlled lossless refill.
+    """
+    if not isinstance(program, WalkProgram):
+        raise TypeError(
+            f"compile expects a WalkProgram, got {type(program).__name__}; "
+            "build one with WalkProgram.urw()/ppr()/deepwalk()/node2vec()/"
+            "metapath() or WalkProgram(spec=...)")
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got "
+                         f"{backend!r}")
+    return Walker(program, backend, execution or ExecutionConfig(), mesh)
+
+
+class Walker:
+    """A compiled walk program: one algorithm, three execution styles."""
+
+    def __init__(self, program: WalkProgram, backend: str,
+                 execution: ExecutionConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        self.program = program
+        self.backend = backend
+        self.execution = execution
+        self._mesh = mesh
+        self._engine = None         # single-device closed-system runner
+        self._dist_cache = {}       # sharded runners keyed by graph shape
+
+    # ----------------------------------------------------------- internals
+
+    def _engine_cfg(self):
+        return self.execution.engine_config(self.program)
+
+    def _single_engine(self):
+        if self._engine is None:
+            self._engine = build_engine(self.program.spec, self._engine_cfg())
+        return self._engine
+
+    def _partition(self, graph) -> PartitionedGraph:
+        if isinstance(graph, PartitionedGraph):
+            return graph
+        n = self.execution.num_devices or len(jax.devices())
+        return partition_graph(graph, n)
+
+    def _dist_engine(self, pg: PartitionedGraph):
+        # max_degree is baked into the compiled engine (bisect iteration
+        # count, reservoir chunk count), so it must key the cache.
+        key = (pg.num_devices, pg.vertices_per_device, pg.col.shape,
+               pg.max_degree,
+               pg.weights is not None, pg.alias_prob is not None)
+        if key not in self._dist_cache:
+            cfg = self.execution.dist_config(self.program, pg.num_devices)
+            mesh = self._mesh
+            if mesh is None:
+                devs = np.array(jax.devices()[: pg.num_devices])
+                mesh = jax.sharding.Mesh(devs, (cfg.axis_name,))
+            self._dist_cache[key] = (
+                make_distributed_engine(pg, self.program.spec, cfg, mesh), cfg)
+        return self._dist_cache[key]
+
+    # ---------------------------------------------------------- closed run
+
+    def run(self, graph, starts, seed: int = 0) -> WalkResult:
+        """Closed system: drain the batch of ``starts`` to completion.
+
+        On the sharded backend ``graph`` may be a ``CSRGraph`` (partitioned
+        on the fly over the configured device count) or a pre-built
+        ``PartitionedGraph``; the emission logs are assembled into the same
+        ``WalkResult`` layout as the single-device engine, with per-device
+        stats summed.
+        """
+        if self.backend == "single":
+            self.program.requires(graph)
+            sv = jnp.asarray(starts, jnp.int32)
+            return self._single_engine()(graph, sv, seed,
+                                         num_queries=int(sv.shape[0]))
+
+        if not isinstance(graph, PartitionedGraph):
+            self.program.requires(graph)
+        elif self.program.spec.kind == "alias" and graph.alias_prob is None:
+            raise ValueError(
+                "alias (DeepWalk) programs need alias tables on the "
+                "partitioned graph — build the CSRGraph with alias tables "
+                "before partition_graph")
+        pg = self._partition(graph)
+        run, cfg = self._dist_engine(pg)
+        starts_np = np.asarray(starts, dtype=np.int32)
+        starts_sh, qcount = shard_starts(starts_np, pg.num_devices)
+        log_q, log_h, log_v, cursor, stats = run(
+            pg, jnp.asarray(starts_sh), jnp.asarray(qcount),
+            jax.random.PRNGKey(seed))
+        # Devices run the lockstep superstep loop the same number of times:
+        # supersteps is a global clock (max), everything else is additive.
+        total = WalkStats(*(
+            jnp.max(v) if name == "supersteps" else jnp.sum(v)
+            for name, v in zip(WalkStats._fields, stats)))
+        if int(total.supersteps) >= cfg.max_supersteps:
+            warnings.warn(
+                f"sharded run hit max_supersteps={cfg.max_supersteps} before "
+                "draining — walks may be truncated; raise "
+                "ExecutionConfig.max_supersteps", RuntimeWarning,
+                stacklevel=2)
+        if int(total.drops) > 0:
+            # Routing drops are structurally impossible (flow-controlled
+            # refill), so any drop is an emission-log overflow: recorded
+            # paths have holes.
+            warnings.warn(
+                f"{int(total.drops)} path records dropped (emission log "
+                "overflow) — assembled paths are incomplete; raise "
+                "ExecutionConfig.log_capacity", RuntimeWarning, stacklevel=2)
+        if cfg.record_paths:
+            logs = DistLogs(qid=log_q, hop=log_h, vertex=log_v, cursor=cursor)
+            paths, lengths = assemble_paths(logs, starts_np,
+                                            self.program.max_hops)
+            return WalkResult(paths=jnp.asarray(paths),
+                              lengths=jnp.asarray(lengths), stats=total)
+        dummy = jnp.full((1, 1), -1, jnp.int32)
+        return WalkResult(paths=dummy, lengths=jnp.zeros((1,), jnp.int32),
+                          stats=total)
+
+    # --------------------------------------------------------- open stream
+
+    def stream(self, graph, capacity: int = 4096, seed: int = 0) -> "WalkStream":
+        """Open system: a persistent stream accepting injections between
+        superstep chunks (single-device backend; sharded streaming is a
+        ROADMAP item gated on this API)."""
+        if self.backend != "single":
+            raise NotImplementedError(
+                "streaming on the sharded backend is not implemented yet "
+                "(ROADMAP: shard serve.WalkService across devices); compile "
+                "with backend='single'")
+        self.program.requires(graph)
+        return WalkStream(self.program, self.execution, graph, capacity, seed)
+
+    # ------------------------------------------------------------- service
+
+    def serve(self, graph, capacity: int = 4096, chunk: int = 16,
+              seed: int = 0):
+        """Multi-tenant request service over the streaming engine."""
+        if self.backend != "single":
+            raise NotImplementedError(
+                "serving on the sharded backend is not implemented yet "
+                "(ROADMAP: shard serve.WalkService across devices); compile "
+                "with backend='single'")
+        self.program.requires(graph)
+        from repro.serve.service import WalkService
+        return WalkService(graph, self.program, execution=self.execution,
+                           capacity=capacity, chunk=chunk, seed=seed)
+
+
+class WalkStream:
+    """Persistent open-system stream: inject → advance → harvest.
+
+    Thin stateful handle over the jitted superstep runner; all device
+    state lives in a :class:`~repro.core.StreamState` whose shapes are
+    static, so any injection/advance cadence reuses one compilation.
+    """
+
+    def __init__(self, program: WalkProgram, execution: ExecutionConfig,
+                 graph, capacity: int, seed: int):
+        if capacity <= 0:
+            raise ValueError(f"stream capacity must be positive, got "
+                             f"{capacity}")
+        self.program = program
+        self.graph = graph
+        self.seed = seed
+        self.capacity = int(capacity)
+        # Harvesting slices recorded paths; recording is mandatory here
+        # (same guard as WalkService).
+        self._cfg = dataclasses.replace(
+            execution.engine_config(program), record_paths=True)
+        self._runner = make_superstep_runner(program.spec, self._cfg)
+        self.state: StreamState = init_stream_state(self._cfg, self.capacity)
+        self._tail = 0  # host mirror of queue.tail (admission bookkeeping)
+
+    def inject(self, starts, n_valid: Optional[int] = None) -> None:
+        """Append arrivals at the queue tail.  ``starts`` may be padded;
+        only the first ``n_valid`` entries become real queries."""
+        sv = np.asarray(starts, np.int32).reshape(-1)
+        n = int(sv.size if n_valid is None else n_valid)
+        if not 0 <= n <= sv.size:
+            raise ValueError(
+                f"n_valid={n} must be within [0, {sv.size}] (the injected "
+                "block); a negative/oversized count would corrupt the "
+                "queue tail")
+        # The WHOLE padded block must fit: inject_queries writes all of
+        # ``starts`` at the tail, and dynamic_update_slice clamps
+        # out-of-bounds starts — a too-large pad would silently overwrite
+        # already-admitted queries.
+        if self._tail + max(n, sv.size) > self.capacity:
+            raise ValueError(
+                f"injecting {n} queries (padded to {sv.size}) overflows the "
+                f"stream buffer ({self._tail}/{self.capacity} used); "
+                "harvest + rebuild the stream, or raise capacity "
+                "(WalkService rotates generations for you)")
+        self.state = inject_queries(self.state, jnp.asarray(sv), n)
+        self._tail += n
+
+    def advance(self, k: int = 16) -> int:
+        """Run at most ``k`` supersteps; returns how many executed."""
+        before = int(self.state.stats.supersteps)
+        self.state = self._runner(self.graph, self.state, self.seed, k)
+        return int(self.state.stats.supersteps) - before
+
+    @property
+    def num_injected(self) -> int:
+        return self._tail
+
+    def done_mask(self) -> np.ndarray:
+        """(capacity,) bool — True where that query id has terminated."""
+        return np.asarray(self.state.done)
+
+    def harvest(self, lo: int = 0, hi: Optional[int] = None):
+        """Recorded (paths, lengths) for query ids [lo, hi) as numpy."""
+        hi = self._tail if hi is None else hi
+        return (np.asarray(self.state.paths[lo:hi]),
+                np.asarray(self.state.lengths[lo:hi]))
+
+    def drain(self, chunk: int = 64, max_chunks: int = 100_000) -> None:
+        """Advance until every injected query is done."""
+        for _ in range(max_chunks):
+            if bool(self.done_mask()[: self._tail].all()):
+                return
+            self.advance(chunk)
+        raise RuntimeError("stream did not drain (engine stalled?)")

@@ -1,0 +1,150 @@
+"""Execution configuration (the machine half of the unified API).
+
+Everything here is a *machine* knob — lane counts, scheduling mode,
+host-injection latency, device placement, routing capacities.  None of it
+changes which walks are sampled: paths depend only on
+``(seed, query_id, hop)`` (paper §V-A), so one :class:`WalkProgram` runs
+bit-identically under any :class:`ExecutionConfig` and any backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+from repro.core.distributed import DistConfig
+from repro.core.walk_engine import (EngineConfig, MODES as _MODES,
+                                    STEP_IMPLS as _STEP_IMPLS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """Machine knobs for compiled walkers, across every backend.
+
+    Single-device knobs map onto :class:`repro.core.EngineConfig`;
+    sharded knobs onto :class:`repro.core.distributed.DistConfig`.
+
+    Attributes:
+      num_slots:        W — total walker lanes (divided across devices on
+                        the sharded backend unless ``slots_per_device`` is
+                        given).
+      record_paths:     keep per-query path buffers (required for
+                        harvesting / serving).
+      mode:             ``zero_bubble`` (per-superstep compaction+refill)
+                        or ``static`` (bulk-synchronous batches).
+      injection_delay:  C — host→device staging latency in supersteps.
+      queue_depth_factor: × the Theorem VI.1 stage-ahead depth D.
+      max_supersteps:   safety bound for the drain loop.
+      step_impl:        ``jnp`` or ``pallas`` (fused walk-step kernel).
+      num_devices:      sharded backend only — mesh size (default: all
+                        visible devices).
+      slots_per_device: sharded backend only — W_loc override (default
+                        ``num_slots // num_devices``).
+      capacity_margin:  × Theorem VI.1 margin on routing bucket capacity.
+      retention_factor: × the global live-task bound N·W_loc sizing the
+                        router retention region; >= 1.0 is provably
+                        lossless under the flow-controlled refill.
+      log_capacity:     per-device emission-log entries (path write-back).
+      axis_name:        mesh axis name for the sharded backend.
+    """
+
+    num_slots: int = 1024
+    record_paths: bool = True
+    mode: str = "zero_bubble"
+    injection_delay: int = 0
+    queue_depth_factor: float = 1.0
+    max_supersteps: int = 1 << 20
+    step_impl: str = "jnp"
+    # ---- sharded backend ----
+    num_devices: Optional[int] = None
+    slots_per_device: Optional[int] = None
+    capacity_margin: float = 2.0
+    retention_factor: float = 1.0
+    log_capacity: int = 1 << 16
+    axis_name: str = "ch"
+
+    def __post_init__(self):
+        if self.num_slots <= 0:
+            raise ValueError(
+                f"num_slots must be a positive lane count, got "
+                f"{self.num_slots}")
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got "
+                             f"{self.mode!r}")
+        if self.step_impl not in _STEP_IMPLS:
+            raise ValueError(f"step_impl must be one of {_STEP_IMPLS}, got "
+                             f"{self.step_impl!r}")
+        if self.injection_delay < 0:
+            raise ValueError(
+                f"injection_delay is a latency in supersteps and cannot be "
+                f"negative, got {self.injection_delay}")
+        if self.queue_depth_factor <= 0:
+            raise ValueError(
+                f"queue_depth_factor must be positive (it scales the "
+                f"Theorem VI.1 depth), got {self.queue_depth_factor}")
+        if self.max_supersteps <= 0:
+            raise ValueError(f"max_supersteps must be positive, got "
+                             f"{self.max_supersteps}")
+        if self.num_devices is not None and self.num_devices <= 0:
+            raise ValueError(f"num_devices must be positive, got "
+                             f"{self.num_devices}")
+        if self.slots_per_device is not None and self.slots_per_device <= 0:
+            raise ValueError(f"slots_per_device must be positive, got "
+                             f"{self.slots_per_device}")
+        if self.capacity_margin <= 0 or self.retention_factor <= 0:
+            raise ValueError(
+                f"capacity_margin / retention_factor must be positive, got "
+                f"{self.capacity_margin} / {self.retention_factor}")
+        if self.log_capacity <= 0:
+            raise ValueError(f"log_capacity must be positive, got "
+                             f"{self.log_capacity}")
+
+    # ---------------------------------------------------------- conversions
+
+    def engine_config(self, program) -> EngineConfig:
+        """Single-device engine view of these knobs for ``program``."""
+        return EngineConfig(
+            num_slots=self.num_slots,
+            max_hops=program.max_hops,
+            record_paths=self.record_paths,
+            mode=self.mode,
+            injection_delay=self.injection_delay,
+            queue_depth_factor=self.queue_depth_factor,
+            max_supersteps=self.max_supersteps,
+            step_impl=self.step_impl,
+        )
+
+    def dist_config(self, program, num_devices: int) -> DistConfig:
+        """Sharded engine view of these knobs for ``program``."""
+        if self.mode != "zero_bubble" or self.step_impl != "jnp":
+            warnings.warn(
+                f"mode={self.mode!r} / step_impl={self.step_impl!r} do not "
+                "apply to the sharded backend (it always runs the "
+                "zero-bubble jnp superstep) and are ignored",
+                RuntimeWarning, stacklevel=3)
+        w_loc = self.slots_per_device or max(self.num_slots // num_devices, 1)
+        return DistConfig(
+            slots_per_device=w_loc,
+            max_hops=program.max_hops,
+            capacity_margin=self.capacity_margin,
+            retention_factor=self.retention_factor,
+            log_capacity=self.log_capacity,
+            record_paths=self.record_paths,
+            max_supersteps=self.max_supersteps,
+            axis_name=self.axis_name,
+        )
+
+    @classmethod
+    def from_engine_config(cls, cfg: EngineConfig, **kw) -> "ExecutionConfig":
+        """Lift a legacy :class:`EngineConfig` (minus the program-level
+        ``max_hops``) into an ExecutionConfig — the shim path."""
+        return cls(
+            num_slots=cfg.num_slots,
+            record_paths=cfg.record_paths,
+            mode=cfg.mode,
+            injection_delay=cfg.injection_delay,
+            queue_depth_factor=cfg.queue_depth_factor,
+            max_supersteps=cfg.max_supersteps,
+            step_impl=cfg.step_impl,
+            **kw,
+        )

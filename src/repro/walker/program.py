@@ -1,0 +1,108 @@
+"""Declarative walk programs (the algorithm half of the unified API).
+
+RidgeWalker's Markov decomposition (paper §V-A) makes every hop a
+stateless task, so *one* program description — sampler + termination +
+hop budget — serves every execution regime: closed batch, open stream,
+multi-tenant service, and multi-device sharding.  :class:`WalkProgram`
+is that description.  It deliberately carries **no machine knobs**
+(lane counts, staging depths, device placement live in
+:class:`repro.walker.ExecutionConfig`); the same program compiles to any
+backend via :func:`repro.walker.compile`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.samplers import SamplerSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkProgram:
+    """One graph-random-walk algorithm, decoupled from the machine.
+
+    Attributes:
+      spec:      the sampling module configuration (paper Table I).
+      max_hops:  hop budget per query (paper §VIII-A4: 80).
+      name:      optional label for logs / benchmark rows.
+    """
+
+    spec: SamplerSpec = SamplerSpec(kind="uniform")
+    max_hops: int = 80
+    name: str = ""
+
+    def __post_init__(self):
+        if self.max_hops <= 0:
+            raise ValueError(
+                f"WalkProgram.max_hops must be positive, got {self.max_hops}; "
+                "a walk needs at least one hop of budget")
+        if not 0.0 <= self.spec.stop_prob <= 1.0:
+            raise ValueError(
+                f"stop_prob must be a probability in [0, 1], got "
+                f"{self.spec.stop_prob}")
+        if self.spec.kind == "metapath" and not self.spec.metapath:
+            raise ValueError(
+                "metapath programs need a non-empty edge-type schedule "
+                "(pass schedule=[t0, t1, ...])")
+        if self.spec.second_order and (self.spec.p <= 0 or self.spec.q <= 0):
+            raise ValueError(
+                f"Node2Vec parameters must be positive, got p={self.spec.p} "
+                f"q={self.spec.q}")
+
+    # ------------------------------------------------------------ factories
+
+    @staticmethod
+    def urw(max_hops: int = 80) -> "WalkProgram":
+        """Unbiased random walk [49]: uniform neighbor sampling."""
+        return WalkProgram(SamplerSpec(kind="uniform"), max_hops, "urw")
+
+    @staticmethod
+    def ppr(alpha: float = 0.15, max_hops: int = 80) -> "WalkProgram":
+        """Personalized PageRank walks [50]: geometric termination with
+        teleport probability α; endpoints estimate PPR mass."""
+        return WalkProgram(SamplerSpec(kind="uniform", stop_prob=alpha),
+                           max_hops, "ppr")
+
+    @staticmethod
+    def deepwalk(max_hops: int = 80) -> "WalkProgram":
+        """DeepWalk [5]: Walker alias sampling over weighted neighbor
+        lists.  The graph must carry alias tables."""
+        return WalkProgram(SamplerSpec(kind="alias"), max_hops, "deepwalk")
+
+    @staticmethod
+    def node2vec(p: float = 2.0, q: float = 0.5, max_hops: int = 80,
+                 weighted: bool = False,
+                 rejection_rounds: int = 12) -> "WalkProgram":
+        """Node2Vec [9]: bounded-round rejection sampling (unweighted) or
+        Efraimidis–Spirakis reservoir sampling (weighted) — paper Table I."""
+        kind = "reservoir_n2v" if weighted else "rejection_n2v"
+        return WalkProgram(
+            SamplerSpec(kind=kind, p=p, q=q,
+                        rejection_rounds=rejection_rounds),
+            max_hops, "node2vec_w" if weighted else "node2vec")
+
+    @staticmethod
+    def metapath(schedule: Sequence[int], max_hops: int = 80) -> "WalkProgram":
+        """MetaPath walks [16]: hop t samples uniformly among neighbors of
+        edge type schedule[t mod len]; no match → early termination."""
+        return WalkProgram(
+            SamplerSpec(kind="metapath",
+                        metapath=tuple(int(t) for t in schedule)),
+            max_hops, "metapath")
+
+    # ------------------------------------------------------------ helpers
+
+    @property
+    def second_order(self) -> bool:
+        return self.spec.second_order
+
+    def requires(self, graph) -> None:
+        """Validate that ``graph`` carries the payloads this program samples
+        from; raises ValueError with an actionable message otherwise."""
+        if self.spec.kind == "alias" and not graph.has_alias:
+            raise ValueError(
+                "alias (DeepWalk) programs need alias tables on the graph — "
+                "build it with with_alias=True / graph.alias.build_alias_tables")
+        if self.spec.kind == "metapath" and getattr(graph, "typed", False) is False:
+            raise ValueError(
+                "metapath programs need a typed graph (num_edge_types > 0)")

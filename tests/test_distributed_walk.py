@@ -1,4 +1,4 @@
-"""Distributed engine tests (8 forced host devices via subprocess —
+"""Distributed engine tests (forced host devices via subprocess —
 device count locks at first jax init, so these run out-of-process)."""
 import pytest
 
@@ -12,17 +12,17 @@ import numpy as np
 from repro.graph import make_dataset, partition_graph
 from repro.core import EngineConfig
 from repro.core.samplers import SamplerSpec
-from repro.core.distributed import DistConfig, run_distributed, assemble_paths
-from repro.core.walk_engine import run_walks
+from repro.core.distributed import DistConfig, _run_distributed, assemble_paths
+from repro.core.walk_engine import _run_walks
 
 for kind, kwargs in [("uniform", {}), ("alias", dict(weighted=True, with_alias=True))]:
     g = make_dataset("WG", scale_override=9, **kwargs)
     pg = partition_graph(g, {N})
     starts = np.random.default_rng(0).integers(0, g.num_vertices, 240).astype(np.int32)
     spec = SamplerSpec(kind=kind)
-    ref = run_walks(g, starts, spec, EngineConfig(num_slots=64, max_hops=10), seed=3)
+    ref = _run_walks(g, starts, spec, EngineConfig(num_slots=64, max_hops=10), seed=3)
     rp, rl = ref.as_numpy()
-    logs, stats = run_distributed(pg, starts, spec,
+    logs, stats = _run_distributed(pg, starts, spec,
         DistConfig(slots_per_device=16, max_hops=10, log_capacity=1<<14), seed=3)
     dp, dl = assemble_paths(logs, starts, 10)
     assert (dp == rp).all() and (dl == rl).all(), kind
@@ -31,17 +31,16 @@ print("EQUIV_OK")
 """
 
 
-@pytest.mark.parametrize("n_devices", [
-    2,
-    pytest.param(8, marks=pytest.mark.xfail(
-        reason="8-device walks diverge from single-device reference "
-               "(pre-existing; surfaced once the shard_map compat shim made "
-               "these tests runnable — see ROADMAP open items)",
-        strict=False)),
-])
+@pytest.mark.parametrize("n_devices", [2, 8])
 def test_distributed_bit_identical(n_devices):
     """The strongest §V-A check: re-routing tasks across N devices yields
-    bit-identical walks to the single-device engine."""
+    bit-identical walks to the single-device engine.
+
+    The 8-device case used to xfail: the heuristically-sized router
+    retention overflowed under hub skew and silently dropped live tasks,
+    truncating their walks.  The flow-controlled refill (global live-task
+    bound N·W_loc, retention provisioned to it) makes drops structurally
+    impossible — see core/distributed.py module docs."""
     out = run_in_subprocess(DIST_EQUIV.replace("{N}", str(n_devices)),
                             devices=max(n_devices, 2))
     assert "EQUIV_OK" in out
@@ -52,15 +51,15 @@ import numpy as np
 from repro.graph import make_dataset, partition_graph
 from repro.core import EngineConfig
 from repro.core.samplers import SamplerSpec
-from repro.core.distributed import DistConfig, run_distributed, assemble_paths
-from repro.core.walk_engine import run_walks
+from repro.core.distributed import DistConfig, _run_distributed, assemble_paths
+from repro.core.walk_engine import _run_walks
 
 g = make_dataset("CP", scale_override=9)
 pg = partition_graph(g, 8)
 starts = np.random.default_rng(1).integers(0, g.num_vertices, 200).astype(np.int32)
 spec = SamplerSpec(kind="uniform", stop_prob=0.2)
-ref = run_walks(g, starts, spec, EngineConfig(num_slots=64, max_hops=20), seed=11)
-logs, stats = run_distributed(pg, starts, spec,
+ref = _run_walks(g, starts, spec, EngineConfig(num_slots=64, max_hops=20), seed=11)
+logs, stats = _run_distributed(pg, starts, spec,
     DistConfig(slots_per_device=16, max_hops=20, log_capacity=1<<14), seed=11)
 dp, dl = assemble_paths(logs, starts, 20)
 rp, rl = ref.as_numpy()
@@ -121,28 +120,73 @@ import numpy as np
 from repro.graph import make_dataset, partition_graph
 from repro.core import EngineConfig
 from repro.core.samplers import SamplerSpec
-from repro.core.distributed import DistConfig, assemble_paths
-from repro.core.distributed_n2v import run_distributed_n2v
-from repro.core.walk_engine import run_walks
+from repro.core.distributed import DistConfig, _run_distributed, assemble_paths
+from repro.core.walk_engine import _run_walks
 
 g = make_dataset("WG", scale_override=9)
 pg = partition_graph(g, 8)
 starts = np.random.default_rng(0).integers(0, g.num_vertices, 200).astype(np.int32)
 spec = SamplerSpec(kind="rejection_n2v", p=2.0, q=0.5, rejection_rounds=8)
-ref = run_walks(g, starts, spec, EngineConfig(num_slots=64, max_hops=10), seed=5)
+ref = _run_walks(g, starts, spec, EngineConfig(num_slots=64, max_hops=10), seed=5)
 rp, rl = ref.as_numpy()
-logs, stats = run_distributed_n2v(pg, starts, spec,
+logs, stats = _run_distributed(pg, starts, spec,
     DistConfig(slots_per_device=16, max_hops=10, log_capacity=1<<14), seed=5)
 dp, dl = assemble_paths(logs, starts, 10)
 assert (dp == rp).all() and (dl == rl).all()
 assert int(np.asarray(stats.drops).sum()) == 0
+
+# the deprecated per-algorithm fork still works (and warns)
+import warnings
+from repro.core.distributed_n2v import run_distributed_n2v
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+    logs2, _ = run_distributed_n2v(pg, starts, spec,
+        DistConfig(slots_per_device=16, max_hops=10, log_capacity=1<<14), seed=5)
+assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+dp2, dl2 = assemble_paths(logs2, starts, 10)
+assert (dp2 == rp).all() and (dl2 == rl).all()
 print("N2V_DIST_OK")
 """
 
 
 def test_distributed_node2vec_two_phase():
-    """Second-order walks distributed via two-phase routing (propose at
-    owner(v_curr), verify at owner(v_prev)) are bit-identical to the
-    single-device rejection sampler."""
+    """Second-order walks route through the *generic* distributed engine
+    (capability dispatch: propose at owner(v_curr), verify at
+    owner(v_prev)) and are bit-identical to the single-device rejection
+    sampler; the old distributed_n2v fork survives as a warning shim."""
     out = run_in_subprocess(N2V_DIST, devices=8)
     assert "N2V_DIST_OK" in out
+
+
+W_N2V_DIST = r"""
+import numpy as np
+from repro import walker
+from repro.graph import make_dataset, partition_graph
+
+g = make_dataset("WG", scale_override=9, weighted=True)
+pg = partition_graph(g, 2)
+starts = np.random.default_rng(1).integers(0, g.num_vertices, 120).astype(np.int32)
+program = walker.WalkProgram.node2vec(2.0, 0.5, 10, weighted=True)
+ref = walker.compile(
+    program, execution=walker.ExecutionConfig(num_slots=64)).run(
+        g, starts, seed=7)
+rp, rl = ref.as_numpy()
+res = walker.compile(
+    program, backend="sharded",
+    execution=walker.ExecutionConfig(slots_per_device=16,
+                                     log_capacity=1 << 14)).run(
+        pg, starts, seed=7)
+dp, dl = res.as_numpy()
+assert (dp == rp).all() and (dl == rl).all()
+assert int(np.asarray(res.stats.drops)) == 0
+print("W_N2V_OK")
+"""
+
+
+def test_distributed_weighted_node2vec_reservoir():
+    """Weighted Node2Vec (Efraimidis–Spirakis reservoir) on 2 devices,
+    through compile(program, backend="sharded"): the chunked scan
+    ping-pongs between owner(v_curr) and owner(v_prev) and the sampled
+    walks are bit-identical to the single-device reference."""
+    out = run_in_subprocess(W_N2V_DIST, devices=2)
+    assert "W_N2V_OK" in out
