@@ -3,13 +3,21 @@ walk service (`repro.serve`).
 
 For each utilization point ρ = λ·E[L]/W we drive Poisson request arrivals
 into a WalkService and report the queuing-theoretic service metrics —
-p50/p99 request sojourn time (supersteps from submit to last-walk-done)
-and the engine bubble ratio.  Below saturation (ρ < 1) sojourn should be
-flat ≈ E[L] + chunk slack; past saturation it grows with the backlog while
+p50/p99 request sojourn (submit to last-walk-done, in supersteps), the
+host-side admission wait (submit to slot-ring injection; the backlog
+signal under the ring-buffer economy), and the engine bubble ratio.
+Below saturation (ρ < 1) sojourn should be flat ≈ E[L] + chunk slack and
+admission wait ≈ 0; past saturation both grow with the backlog while
 bubble ratio falls toward 0 (lanes never idle under overload).
 
   PYTHONPATH=src python -m benchmarks.serve_walks
   PYTHONPATH=src python -m benchmarks.serve_walks --full
+
+The same sweep runs over the sharded backend (one service over the
+distributed superstep; on CPU force devices first):
+
+  PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+      python -m benchmarks.serve_walks --backend sharded
 """
 import argparse
 import time
@@ -25,7 +33,7 @@ from repro.walker import ExecutionConfig, WalkProgram, compile as compile_walker
 RHOS = (0.25, 0.5, 0.9, 1.5, 2.5)
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, backend: str = "single"):
     slots = 128 if quick else 1024
     max_hops = 16 if quick else 80
     requests = 48 if quick else 256
@@ -33,15 +41,16 @@ def run(quick: bool = True):
     chunk = 4 if quick else 8
     g = make_dataset("WG", scale_override=10 if quick else None)
     program = WalkProgram.urw(max_hops)
-    walker = compile_walker(program,
+    walker = compile_walker(program, backend=backend,
                             execution=ExecutionConfig(num_slots=slots))
 
     # One service for the whole sweep: the superstep runner and injection
     # shapes are traced/compiled once (warm-up below), then reset_metrics
-    # clears counters between load points so XLA compile never pollutes a
-    # timed run.
-    svc = walker.serve(g, capacity=max(2048, requests * request_size),
-                       chunk=chunk, seed=7)
+    # clears counters + re-seeds the stream between load points so XLA
+    # compile never pollutes a timed run.  The slot ring recycles
+    # continuously, so capacity only needs to cover peak *concurrency*,
+    # not the total request volume.
+    svc = walker.serve(g, capacity=2048, chunk=chunk, seed=7)
     run_open_load(svc, OpenLoad(num_requests=4, request_size=request_size,
                                 utilization=0.5), seed=99)
 
@@ -53,10 +62,11 @@ def run(quick: bool = True):
         t0 = time.perf_counter()
         a = run_open_load(svc, load, seed=17)
         wall = time.perf_counter() - t0
-        emit(f"serve_walks_rho{rho:g}",
+        emit(f"serve_walks_{backend}_rho{rho:g}",
              wall * 1e6 / max(a.supersteps, 1),  # µs per superstep
              f"offered={a.offered_load:.2f};rho={a.utilization:.2f};"
              f"p50_sojourn={a.p50_sojourn:.1f};p99_sojourn={a.p99_sojourn:.1f};"
+             f"p50_wait={a.p50_admission_wait:.1f};"
              f"bubble_ratio={a.bubble_ratio:.3f};"
              f"throughput={a.throughput:.1f}hops/ss;"
              f"msteps={a.msteps_per_s:.3f}")
@@ -67,6 +77,8 @@ def run(quick: bool = True):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default="single",
+                    choices=("single", "sharded"))
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(quick=not args.full)
+    run(quick=not args.full, backend=args.backend)

@@ -2,7 +2,9 @@
 
 Two tenants submit request waves at different times; the service keeps the
 lane pool busy across both, and each tenant harvests exactly its own walks
-(request id → query-id range bookkeeping).
+(request id → ``(epoch, qid)`` slot bookkeeping: each walk occupies a
+slot of the device ring, and completed slots are recycled to later
+arrivals with a bumped epoch — continuous operation, no drain barrier).
 
   PYTHONPATH=src python examples/serve_walk_requests.py
 """
@@ -33,7 +35,9 @@ for tenant, rids in (("A", a_rids), ("B", b_rids)):
     for rid in rids:
         r = svc.poll(rid)
         print(f"tenant {tenant} request {rid}: {r.num_walks} walks, "
-              f"qids=[{r.qid_lo},{r.qid_hi}), sojourn={r.sojourn} supersteps, "
+              f"slots [{r.qids.min()},{r.qids.max()}] epoch "
+              f"{r.epochs.min()}..{r.epochs.max()}, "
+              f"wait={r.admission_wait} sojourn={r.sojourn} supersteps, "
               f"mean_len={r.lengths.mean():.1f}")
 
 r = svc.poll(b_rids[0])
@@ -43,4 +47,5 @@ print("\nfirst walk of tenant B's first request:",
 a = svc.analyze()
 print(f"\nservice: {a.walks} walks in {a.supersteps} supersteps, "
       f"bubble_ratio={a.bubble_ratio:.2f}, "
-      f"p99_sojourn={a.p99_sojourn:.0f} supersteps")
+      f"p99_sojourn={a.p99_sojourn:.0f} supersteps, "
+      f"p99_admission_wait={a.p99_admission_wait:.0f}")

@@ -195,7 +195,8 @@ class _FirstOrderCap:
         spec, cfg = self.spec, self.cfg
         if spec.stop_prob > 0.0:
             u_stop = task_rng.task_uniforms(base_key, slots.query_id,
-                                            slots.hop, 1, SALT_STOP)[:, 0]
+                                            slots.hop, 1, SALT_STOP,
+                                            epoch=slots.epoch)[:, 0]
             stop = mine & (u_stop < spec.stop_prob)
         else:
             stop = jnp.zeros_like(mine)
@@ -257,7 +258,8 @@ class _TwoPhaseN2VCap:
         do_a = mine & (slots.phase == 0)
         if spec.stop_prob > 0.0:   # termination draw at the top of a hop
             u_stop = task_rng.task_uniforms(base_key, slots.query_id,
-                                            slots.hop, 1, SALT_STOP)[:, 0]
+                                            slots.hop, 1, SALT_STOP,
+                                            epoch=slots.epoch)[:, 0]
             stop = do_a & (u_stop < spec.stop_prob)
         else:
             stop = jnp.zeros_like(do_a)
@@ -266,7 +268,7 @@ class _TwoPhaseN2VCap:
         addr, deg = _local_row_access(view, slots.v_curr, self.N,
                                       self.v_per_dev)
         u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
-                                   2 * K, SALT_COLUMN)
+                                   2 * K, SALT_COLUMN, epoch=slots.epoch)
         u_col, u_acc = u[:, :K], u[:, K:]
         idx = jnp.minimum((u_col * deg[:, None]).astype(jnp.int32),
                           jnp.maximum(deg - 1, 0)[:, None])
@@ -320,7 +322,17 @@ class _ChunkedReservoirCap:
     reservoir sampler, and the bias uses the same float expressions, so
     the scanned maximum — and therefore every sampled path — is
     bit-identical to the single-device engine.  Hop 0 (bias ≡ 1) runs the
-    whole scan locally at owner(v_curr) in one superstep."""
+    whole scan locally at owner(v_curr) in one superstep.
+
+    Early finalize (per lane): the gather phase knows deg(v_curr), so it
+    marks the chunk that covers the last neighbor; the matching score
+    phase then jumps straight to the finalize phase instead of stepping
+    through the remaining ceil(max_degree/chunk) - ceil(deg/chunk) empty
+    chunk pairs.  Skipped chunks would have contributed only -inf reservoir
+    keys (every candidate masked invalid), so the scanned maximum — and
+    bit-identity with the single-device sampler, which folds those same
+    -inf chunks — is unchanged; only the superstep count drops, from
+    2·ceil(max_degree/chunk)+1 per hop to 2·ceil(deg(v_curr)/chunk)+1."""
 
     def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
                  v_per_dev: int, max_degree: int):
@@ -346,6 +358,7 @@ class _ChunkedReservoirCap:
             phase=jnp.where(take, 0, slots.phase),
             best_key=jnp.where(take, -jnp.inf, slots.best_key),
             best_idx=jnp.where(take, 0, slots.best_idx),
+            last_chunk=jnp.where(take, False, slots.last_chunk),
         )
 
     def step(self, view: LocalView, slots, mine, base_key) -> StepOut:
@@ -361,7 +374,8 @@ class _ChunkedReservoirCap:
 
         if spec.stop_prob > 0.0:
             u_stop = task_rng.task_uniforms(base_key, slots.query_id,
-                                            slots.hop, 1, SALT_STOP)[:, 0]
+                                            slots.hop, 1, SALT_STOP,
+                                            epoch=slots.epoch)[:, 0]
             stop = at_hop_start & (u_stop < spec.stop_prob)
         else:
             stop = jnp.zeros_like(mine)
@@ -390,7 +404,7 @@ class _ChunkedReservoirCap:
 
         # ---- score: E-S keys under the local N(v_prev) bias -------------
         u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, CH,
-                                   SALT_CHUNK0 + chunk)
+                                   SALT_CHUNK0 + chunk, epoch=slots.epoch)
         svalid = slots.cand >= 0
         is_ret = slots.cand == slots.v_prev[:, None]
         common = _local_edge_exists(view, slots.v_prev, slots.cand, self.N,
@@ -412,11 +426,17 @@ class _ChunkedReservoirCap:
         reached_max = adv & (new_hop >= cfg.max_hops)
         terminated = stop | dead | reached_max
 
+        # Early finalize: the gather phase sees deg(v_curr) and flags the
+        # chunk covering the last neighbor; its score phase then jumps to
+        # the finalize phase rather than stepping through empty chunks.
+        covers_deg = (chunk + 1) * CH >= deg
+        next_phase = jnp.where(is_score & slots.last_chunk,
+                               2 * NC, phase + 1)
         slots = slots._replace(
             v_curr=jnp.where(adv, v_next, slots.v_curr),
             v_prev=jnp.where(adv, slots.v_curr, slots.v_prev),
             hop=new_hop,
-            phase=jnp.where(do_gather | is_score, phase + 1,
+            phase=jnp.where(do_gather | is_score, next_phase,
                             jnp.where(adv, 0, phase)),
             cand=cand,
             cand_w=cand_w,
@@ -424,6 +444,8 @@ class _ChunkedReservoirCap:
                                jnp.where(adv, -jnp.inf, slots.best_key)),
             best_idx=jnp.where(is_score, m_idx,
                                jnp.where(adv, 0, slots.best_idx)),
+            last_chunk=jnp.where(do_gather, covers_deg,
+                                 jnp.where(adv, False, slots.last_chunk)),
         )
         return StepOut(slots, adv, terminated, v_next, new_hop)
 
@@ -508,6 +530,7 @@ def _superstep_dist(cap, cfg: DistConfig, N: int, base_key, view,
         query_id=jnp.where(take, k_local * N + rank, slots.query_id),
         hop=jnp.where(take, 0, slots.hop),
         active=slots.active | take,
+        epoch=jnp.where(take, 0, slots.epoch),  # closed batch == epoch 0
     )
     slots = cap.reset_extras(slots, take)
     head = head + jnp.sum(take.astype(jnp.int32))
@@ -610,6 +633,271 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
                        graph.alias_prob if has_alias else dummy,
                        graph.alias_idx if has_alias else dummy_i,
                        starts_sharded, qcount, base_key)
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# Open-system (streaming) distributed engine: persistent sharded state,
+# chunked supersteps, host injection between chunks — the multi-device
+# realization of the ring-buffer slot economy (core/walk_engine.py).  The
+# same capability dispatch, flow-controlled refill, and butterfly routing
+# as the closed engine; only arrival/injection and harvest differ.
+# --------------------------------------------------------------------------
+
+
+class DistStreamState(NamedTuple):
+    """Persistent sharded stream state; every leaf's leading axis is the
+    device (channel) axis.
+
+    Arrivals are staged by the host into per-device *arrival rings* —
+    (start, qid, epoch) triplets appended at monotone ``tail`` counters on
+    whichever device the host round-robins them to.  Refill turns a staged
+    arrival into a hop-0 task on the staging device, and the very next
+    routing phase (the same butterfly ``all_to_all`` every live task rides)
+    carries it to owner(start_vertex) — injected queries reuse the existing
+    distributed routing rather than a second injection network.
+
+    ``paths``/``lengths``/``done`` are streaming write-back windows indexed
+    by global slot id: each device scatters only the hops *it* executed and
+    the host folds the shards with an elementwise max at harvest.  Every
+    (qid, hop) cell is written by exactly one device (the one that advanced
+    that hop) while all others keep the -1/0 fill, so the fold is exact and
+    — unlike the closed engine's bounded emission log — structurally
+    lossless: streaming harvests can never drop path records.
+
+    Rings are provisioned to the full stream ``capacity`` per device, so
+    even if every live query is staged on one device the ring cannot
+    overflow (live queries are bounded by ``capacity`` host-side).
+    """
+
+    slots: Any               # capability task word, leaves (N, S, ...)
+    ring_start: jnp.ndarray  # (N, cap) int32 — start vertex by arrival seq
+    ring_qid: jnp.ndarray    # (N, cap) int32 — slot id by arrival seq
+    ring_epoch: jnp.ndarray  # (N, cap) int32 — occupant epoch by arrival seq
+    head: jnp.ndarray        # (N,) int32 — monotone per-device issue counter
+    tail: jnp.ndarray        # (N,) int32 — monotone per-device arrival counter
+    paths: jnp.ndarray       # (N, cap, max_hops+1) int32 — per-device hops
+    lengths: jnp.ndarray     # (N, cap) int32
+    done: jnp.ndarray        # (N, cap) bool — terminated, by slot id
+    stats: WalkStats         # leaves (N,)
+
+
+def init_dist_stream_state(pg: PartitionedGraph, spec: SamplerSpec,
+                           cfg: DistConfig, capacity: int) -> DistStreamState:
+    """Empty sharded open-system state with room for ``capacity`` live
+    queries (global slot ids 0..capacity-1, shared across devices)."""
+    N = pg.num_devices
+    cap_ = get_capability(spec, cfg, N, pg.vertices_per_device,
+                          pg.max_degree)
+    pool = cap_.empty_pool(cfg.pool_size(N))
+
+    def rep(x):
+        return jnp.broadcast_to(x[None], (N,) + x.shape)
+
+    return DistStreamState(
+        slots=jax.tree.map(rep, pool),
+        ring_start=jnp.zeros((N, capacity), jnp.int32),
+        ring_qid=jnp.zeros((N, capacity), jnp.int32),
+        ring_epoch=jnp.zeros((N, capacity), jnp.int32),
+        head=jnp.zeros((N,), jnp.int32),
+        tail=jnp.zeros((N,), jnp.int32),
+        paths=jnp.full((N, capacity, cfg.max_hops + 1), -1, jnp.int32),
+        lengths=jnp.zeros((N, capacity), jnp.int32),
+        done=jnp.zeros((N, capacity), bool),
+        stats=jax.tree.map(rep, zero_stats()),
+    )
+
+
+@jax.jit
+def inject_stream_queries(state: DistStreamState, starts_blk, qid_blk,
+                          epoch_blk, counts) -> DistStreamState:
+    """Stage arrival blocks into the per-device rings (host→device).
+
+    ``starts_blk``/``qid_blk``/``epoch_blk`` are (N, B) blocks (padded to a
+    fixed B so injection compiles O(log capacity) shapes); row r's first
+    ``counts[r]`` entries are real arrivals for device r.  Recycled slots'
+    ``done`` bits and path rows are cleared on *every* device shard — an
+    old occupant's hops may have been recorded anywhere.
+    """
+    N, cap = state.ring_qid.shape
+    B = starts_blk.shape[1]
+    idx = jnp.arange(B, dtype=jnp.int32)[None, :]
+    counts = jnp.asarray(counts, jnp.int32)
+    valid = idx < counts[:, None]
+    row = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[:, None], (N, B))
+    pos = jnp.where(valid, (state.tail[:, None] + idx) % cap, cap)
+    ring_start = state.ring_start.at[row, pos].set(
+        jnp.asarray(starts_blk, jnp.int32), mode="drop")
+    ring_qid = state.ring_qid.at[row, pos].set(
+        jnp.asarray(qid_blk, jnp.int32), mode="drop")
+    ring_epoch = state.ring_epoch.at[row, pos].set(
+        jnp.asarray(epoch_blk, jnp.int32), mode="drop")
+
+    cols = jnp.where(valid, jnp.asarray(qid_blk, jnp.int32), cap).reshape(-1)
+    done = state.done.at[:, cols].set(False, mode="drop")
+    paths = state.paths.at[:, cols, :].set(-1, mode="drop")
+    lengths = state.lengths.at[:, cols].set(0, mode="drop")
+    return state._replace(
+        ring_start=ring_start, ring_qid=ring_qid, ring_epoch=ring_epoch,
+        tail=state.tail + counts, done=done, paths=paths, lengths=lengths)
+
+
+def _superstep_dist_stream(cap, cfg: DistConfig, N: int, capacity: int,
+                           base_key, view, rank, carry):
+    """One streaming superstep: phase-step → path/done scatter → terminate
+    → flow-controlled ring refill → butterfly route (mirrors
+    `_superstep_dist`, with the arrival ring in place of the start shard
+    and scatter windows in place of the emission log)."""
+    i, _, st = carry
+    slots = st.slots
+    W_loc = cfg.slots_per_device
+    K = cfg.bucket_cap(N)
+    R = cfg.retention_cap(N)
+    S = cfg.pool_size(N)
+
+    # ---- process: one phase for locally-homed live tasks ----------------
+    mine = slots.active & (cap.home(slots) == rank)
+    out = cap.step(view, slots, mine, base_key)
+    slots, adv, terminated = out.slots, out.adv, out.terminated
+
+    # ---- streaming write-back: scatter executed hops locally ------------
+    scatter_q = jnp.where(adv, slots.query_id, capacity)   # capacity = drop
+    paths = st.paths.at[scatter_q, out.new_hop].set(out.v_next, mode="drop")
+    lengths = st.lengths.at[scatter_q].set(out.new_hop + 1, mode="drop")
+    done = st.done.at[jnp.where(terminated, slots.query_id, capacity)].set(
+        True, mode="drop")
+
+    slots = slots._replace(
+        query_id=jnp.where(terminated, -1, slots.query_id),
+        active=slots.active & ~terminated,
+    )
+
+    # ---- zero-bubble refill from the local arrival ring, flow-controlled
+    # to the global live bound N·W_loc (identical psum coordination to the
+    # closed engine, so losslessness carries over to the open system) ----
+    n_active = jnp.sum(slots.active.astype(jnp.int32))
+    global_live = jax.lax.psum(n_active, cfg.axis_name)
+    slack = jnp.maximum(N * W_loc - global_live, 0)
+    free = ~slots.active
+    budget = jnp.minimum(jnp.maximum(W_loc - n_active, 0), slack // N)
+    avail = jnp.minimum(jnp.maximum(st.tail - st.head, 0), budget)
+    rank_free = jnp.cumsum(free.astype(jnp.int32)) - 1
+    take = free & (rank_free < avail)
+    pos = (st.head + jnp.maximum(rank_free, 0)) % capacity
+    qid = st.ring_qid[pos]
+    start = st.ring_start[pos]
+    ep = st.ring_epoch[pos]
+    slots = slots._replace(
+        v_curr=jnp.where(take, start, slots.v_curr),
+        v_prev=jnp.where(take, -1, slots.v_prev),
+        query_id=jnp.where(take, qid, slots.query_id),
+        hop=jnp.where(take, 0, slots.hop),
+        active=slots.active | take,
+        epoch=jnp.where(take, ep, slots.epoch),
+    )
+    slots = cap.reset_extras(slots, take)
+    head = st.head + jnp.sum(take.astype(jnp.int32))
+    # Record hop 0 on the staging device; the route below hands the task
+    # to owner(start_vertex) for its first hop.
+    sq = jnp.where(take, qid, capacity)
+    paths = paths.at[sq, 0].set(start, mode="drop")
+    lengths = lengths.at[sq].set(1, mode="drop")
+
+    # ---- route: butterfly all_to_all to each task's next home -----------
+    dest = cap.route_dest(slots)
+    lane = jnp.arange(S, dtype=jnp.int32)
+    priority = jnp.where(lane >= N * K, 0, 1)  # retained tasks go first
+    rr = router.pack_buckets(slots, dest, priority, N, K, R)
+    incoming = router.exchange(rr.send, cfg.axis_name)
+    slots = type(slots)(*(jnp.concatenate([a, b])
+                          for a, b in zip(incoming, rr.retention)))
+
+    # ---- stats + global work flag ---------------------------------------
+    busy = jnp.sum(mine.astype(jnp.int32))
+    upstream = (head < st.tail).astype(jnp.int32)
+    stats = st.stats._replace(
+        steps=st.stats.steps + jnp.sum(adv.astype(jnp.int32)),
+        slot_steps=st.stats.slot_steps + W_loc,
+        bubbles=st.stats.bubbles + jnp.maximum(W_loc - busy, 0),
+        starved=st.stats.starved + jnp.maximum(W_loc - busy, 0) * upstream,
+        terminations=st.stats.terminations
+        + jnp.sum(terminated.astype(jnp.int32)),
+        supersteps=st.stats.supersteps + 1,
+        route_waits=st.stats.route_waits + rr.waits,
+        drops=st.stats.drops + rr.drops,
+    )
+    n_live = jnp.sum(slots.active.astype(jnp.int32))
+    pending = jnp.maximum(st.tail - head, 0)
+    work = jax.lax.psum(n_live + pending, cfg.axis_name) > 0
+    st = DistStreamState(
+        slots=slots, ring_start=st.ring_start, ring_qid=st.ring_qid,
+        ring_epoch=st.ring_epoch, head=head, tail=st.tail, paths=paths,
+        lengths=lengths, done=done, stats=stats)
+    return (i + 1, work, st)
+
+
+def make_sharded_stream_engine(pg: PartitionedGraph, spec: SamplerSpec,
+                               cfg: DistConfig, mesh: jax.sharding.Mesh,
+                               capacity: int):
+    """Build a jitted ``run(graph, state, base_key, k) -> DistStreamState``
+    advancing the sharded stream by at most ``k`` supersteps (stopping
+    early when no work remains anywhere).  ``k`` is traced; the host
+    injects with :func:`inject_stream_queries` between chunks and harvests
+    by max-folding the per-device path windows.
+    """
+    N = pg.num_devices
+    assert mesh.devices.size == N, (mesh.devices.size, N)
+    v_per_dev = pg.vertices_per_device
+    cap_ = get_capability(spec, cfg, N, v_per_dev, pg.max_degree)
+    P = jax.sharding.PartitionSpec
+
+    has_w = pg.weights is not None
+    has_alias = pg.alias_prob is not None
+
+    def body(rowp, colp, wp, app, aip, state, base_key, k):
+        rank = jax.lax.axis_index(cfg.axis_name)
+        view = LocalView(
+            row_ptr=rowp[0], col=colp[0],
+            weights=wp[0] if has_w else None,
+            alias_prob=app[0] if has_alias else None,
+            alias_idx=aip[0] if has_alias else None,
+            max_degree=pg.max_degree,
+        )
+        st = jax.tree.map(lambda x: x[0], state)
+        live0 = jnp.sum(st.slots.active.astype(jnp.int32))
+        pending0 = jnp.maximum(st.tail - st.head, 0)
+        work0 = jax.lax.psum(live0 + pending0, cfg.axis_name) > 0
+
+        step = partial(_superstep_dist_stream, cap_, cfg, N, capacity,
+                       base_key, view, rank)
+
+        def cond(c):
+            return c[1] & (c[0] < k)
+
+        _, _, st = jax.lax.while_loop(
+            cond, step, (jnp.zeros((), jnp.int32), work0, st))
+        return jax.tree.map(lambda x: x[None], st)
+
+    smapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),
+                  P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),
+                  P(), P()),
+        out_specs=P(cfg.axis_name),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def run(graph: PartitionedGraph, state: DistStreamState, base_key,
+            k) -> DistStreamState:
+        dummy = jnp.zeros((N, 1), jnp.float32)
+        dummy_i = jnp.zeros((N, 1), jnp.int32)
+        return smapped(graph.row_ptr, graph.col,
+                       graph.weights if has_w else dummy,
+                       graph.alias_prob if has_alias else dummy,
+                       graph.alias_idx if has_alias else dummy_i,
+                       state, base_key, jnp.asarray(k, jnp.int32))
 
     return run
 

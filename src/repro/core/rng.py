@@ -12,6 +12,15 @@ This is the RNG-side half of the paper's Markov-based stateless
 decomposition (§V-A): reordering and re-routing tasks provably cannot
 change the sampled walk distribution because the randomness travels with
 the task identity, not with the execution site.
+
+Open-system slot reuse extends the task identity with an *epoch*: when the
+streaming engine reclaims a finished query's buffer slot (ring-buffer
+economy), the next occupant of slot ``qid`` carries ``epoch + 1`` and its
+draws derive from ``(seed, epoch, qid, hop)``.  Epoch 0 folds nothing
+extra, so it is bit-for-bit the classic ``(seed, query_id, hop)``
+derivation — a closed-batch run *is* epoch 0 of a stream, and epoch ``e``
+of any stream equals a closed-batch run under :func:`stream_key`'s
+epoch-salted base key.
 """
 from __future__ import annotations
 
@@ -20,31 +29,62 @@ import jax.numpy as jnp
 
 
 def task_fold(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
-              salt=0) -> jax.Array:
-    """Derive one PRNG key per task from (seed, query_id, hop, salt).
+              salt=0, epoch=None) -> jax.Array:
+    """Derive one PRNG key per task from (seed[, epoch], query_id, hop, salt).
 
     ``salt`` decorrelates independent uses within the same hop (sampler
     column draw vs. accept test vs. PPR stop draw vs. reservoir chunk).
+    ``epoch`` (per-task, optional) decorrelates successive occupants of a
+    reused query slot; epoch 0 (or None) reproduces the legacy 3-tuple
+    derivation exactly, so closed-batch walks are unchanged.
     """
     salt = jnp.asarray(salt, jnp.uint32)
-    def one(qid, h, s):
-        k = jax.random.fold_in(base_key, qid)
+    salt_b = jnp.broadcast_to(salt, query_id.shape).astype(jnp.uint32)
+    if epoch is None:
+        def one(qid, h, s):
+            k = jax.random.fold_in(base_key, qid)
+            k = jax.random.fold_in(k, h)
+            return jax.random.fold_in(k, s)
+        return jax.vmap(one)(query_id.astype(jnp.uint32),
+                             hop.astype(jnp.uint32), salt_b)
+
+    ep = jnp.broadcast_to(jnp.asarray(epoch, jnp.int32), query_id.shape)
+
+    def one(qid, h, s, e):
+        # Both branches are computed under vmap; fold_in is cheap and the
+        # select keeps epoch 0 identical to the no-epoch derivation.
+        salted = jax.random.fold_in(base_key, e.astype(jnp.uint32))
+        kb = jnp.where(e > 0, salted, base_key)
+        k = jax.random.fold_in(kb, qid)
         k = jax.random.fold_in(k, h)
         return jax.random.fold_in(k, s)
-    salt_b = jnp.broadcast_to(salt, query_id.shape).astype(jnp.uint32)
-    return jax.vmap(one)(query_id.astype(jnp.uint32), hop.astype(jnp.uint32), salt_b)
+
+    return jax.vmap(one)(query_id.astype(jnp.uint32), hop.astype(jnp.uint32),
+                         salt_b, ep)
+
+
+def stream_key(seed, epoch: int = 0) -> jax.Array:
+    """Base key reproducing epoch ``epoch`` of a stream rooted at ``seed``.
+
+    A closed-batch run (``Walker.run``) seeded with ``stream_key(seed, e)``
+    samples bit-identical paths to the ``(e, qid)`` occupants of a stream
+    rooted at ``seed`` — the reference the streaming soak tests pin.
+    Epoch 0 is the root key itself (closed batch == epoch 0).
+    """
+    base = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
+    return base if epoch == 0 else jax.random.fold_in(base, epoch)
 
 
 def task_uniforms(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
-                  num: int, salt=0) -> jnp.ndarray:
+                  num: int, salt=0, epoch=None) -> jnp.ndarray:
     """(W, num) iid U[0,1) draws, one row per task, derived statelessly."""
-    keys = task_fold(base_key, query_id, hop, salt)
+    keys = task_fold(base_key, query_id, hop, salt, epoch)
     return jax.vmap(lambda k: jax.random.uniform(k, (num,)))(keys)
 
 
 def task_bits(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
-              num: int, salt=0) -> jnp.ndarray:
+              num: int, salt=0, epoch=None) -> jnp.ndarray:
     """(W, num) uint32 random bits per task (for kernels that do their own
     fixed-point arithmetic, mirroring the paper's 64-bit pipeline words)."""
-    keys = task_fold(base_key, query_id, hop, salt)
+    keys = task_fold(base_key, query_id, hop, salt, epoch)
     return jax.vmap(lambda k: jax.random.bits(k, (num,), jnp.uint32))(keys)

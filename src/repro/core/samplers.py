@@ -108,14 +108,14 @@ def edge_exists(g, src: jnp.ndarray, dst: jnp.ndarray) -> jnp.ndarray:
 
 def sample_uniform(spec, g, addr, deg, slots, base_key):
     u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 1,
-                               SALT_COLUMN)[:, 0]
+                               SALT_COLUMN, epoch=slots.epoch)[:, 0]
     return _uniform_index(deg, u), deg > 0
 
 
 def sample_alias(spec, g, addr, deg, slots, base_key):
     """Walker alias sampling: O(1) per draw, two uniforms, two gathers."""
     u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 2,
-                               SALT_COLUMN)
+                               SALT_COLUMN, epoch=slots.epoch)
     k = _uniform_index(deg, u[:, 0])
     e = jnp.clip(addr + k, 0, g.col.shape[-1] - 1)
     accept = u[:, 1] < g.alias_prob[e]
@@ -145,7 +145,7 @@ def sample_rejection_n2v(spec, g, addr, deg, slots, base_key):
     K = spec.rejection_rounds
     w_max = max(1.0 / spec.p, 1.0, 1.0 / spec.q)
     u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 2 * K,
-                               SALT_COLUMN)
+                               SALT_COLUMN, epoch=slots.epoch)
     u_col = u[:, :K]
     u_acc = u[:, K:]
     props = _uniform_index(deg[:, None], u_col)              # (W, K)
@@ -200,7 +200,7 @@ def sample_reservoir_n2v(spec, g, addr, deg, slots, base_key):
     def chunk_body(c, carry):
         best_key, best_idx = carry
         u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, CH,
-                                   SALT_CHUNK0 + c)
+                                   SALT_CHUNK0 + c, epoch=slots.epoch)
         pos = c * CH + jnp.arange(CH, dtype=jnp.int32)[None, :]  # (1, CH)
         valid = pos < deg[:, None]
         e = jnp.clip(addr[:, None] + pos, 0, g.col.shape[-1] - 1)
@@ -228,7 +228,7 @@ def sample_metapath(spec, g, addr, deg, slots, base_key):
     base = g.type_offsets[v_safe, t]
     cnt = g.type_offsets[v_safe, t + 1] - base
     u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 1,
-                               SALT_COLUMN)[:, 0]
+                               SALT_COLUMN, epoch=slots.epoch)[:, 0]
     idx = base + _uniform_index(cnt, u)
     return idx, (cnt > 0) & (deg > 0)
 

@@ -102,7 +102,13 @@ class ServiceAnalysis:
 
     ``offered_load`` is λ in walks/superstep; ``utilization`` is the
     fraction of lane service capacity demanded, ρ = λ·E[L] / W (ρ ≥ 1 means
-    the system is overloaded and sojourn grows with the backlog)."""
+    the system is overloaded and sojourn grows with the backlog).
+
+    ``*_admission_wait`` isolates the *host-side* queueing component of the
+    sojourn: supersteps from submit to injection into the device slot ring.
+    Under the ring-buffer economy a request waits only while fewer free
+    slots exist than it needs, so admission wait is the backlog signal and
+    ``sojourn - admission_wait`` is pure device time."""
 
     offered_load: float
     utilization: float
@@ -116,6 +122,9 @@ class ServiceAnalysis:
     bubble_ratio: float
     starved_ratio: float
     msteps_per_s: float = float("nan")
+    p50_admission_wait: float = float("nan")  # supersteps, submit -> inject
+    p99_admission_wait: float = float("nan")
+    mean_admission_wait: float = float("nan")
 
 
 def sojourn_percentiles(sojourns, qs=(50.0, 99.0)):
@@ -130,14 +139,21 @@ def sojourn_percentiles(sojourns, qs=(50.0, 99.0)):
 def analyze_service(sojourns, stats: WalkStats, num_slots: int,
                     offered_load: float = float("nan"),
                     mean_walk_len: float = float("nan"),
-                    wall_time_s: float | None = None) -> ServiceAnalysis:
-    """Fold per-request sojourns + engine WalkStats into service metrics."""
+                    wall_time_s: float | None = None,
+                    admission_waits=None) -> ServiceAnalysis:
+    """Fold per-request sojourns (+ optional admission waits) and engine
+    WalkStats into service metrics."""
     import numpy as np
     base = analyze_run(stats, wall_time_s)
     s = np.asarray(list(sojourns), float)
     p50, p99 = sojourn_percentiles(s)
     mean = float(s.mean()) if s.size else float("nan")
     util = offered_load * mean_walk_len / max(num_slots, 1)
+    aw50 = aw99 = aw_mean = float("nan")
+    if admission_waits is not None:
+        aw = np.asarray(list(admission_waits), float)
+        aw50, aw99 = sojourn_percentiles(aw)
+        aw_mean = float(aw.mean()) if aw.size else float("nan")
     return ServiceAnalysis(
         offered_load=offered_load,
         utilization=util,
@@ -151,6 +167,9 @@ def analyze_service(sojourns, stats: WalkStats, num_slots: int,
         bubble_ratio=base.bubble_ratio,
         starved_ratio=base.starved_ratio,
         msteps_per_s=base.msteps_per_s,
+        p50_admission_wait=aw50,
+        p99_admission_wait=aw99,
+        mean_admission_wait=aw_mean,
     )
 
 

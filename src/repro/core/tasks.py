@@ -10,10 +10,18 @@ exists (paper §VI).
 ``v_prev`` carries the one extra vertex of history needed by second-order
 walks (Node2Vec) — exactly the paper's "or two vertices for higher-order
 walks" extension of the task tuple.
+
+``epoch`` extends the task identity for the open system's ring-buffer slot
+economy: query ids are *reused* once a query completes and is harvested,
+and the occupant's epoch salts its RNG derivation
+(``rng.task_fold(..., epoch=...)``) so successive occupants of one slot
+sample independent walks.  Closed-batch runs carry epoch 0 everywhere,
+which derives bit-identically to the classic ``(seed, query_id, hop)``
+tuple.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -27,6 +35,7 @@ class WalkerSlots(NamedTuple):
     query_id: jnp.ndarray  # int32 — unique query id (result tracking); -1 = free
     hop: jnp.ndarray      # int32 — hop count x
     active: jnp.ndarray   # bool  — lane holds a live task
+    epoch: Optional[jnp.ndarray] = None  # int32 — slot-reuse epoch (RNG salt)
 
     @property
     def width(self) -> int:
@@ -40,6 +49,7 @@ def empty_slots(width: int) -> WalkerSlots:
         query_id=jnp.full((width,), -1, jnp.int32),
         hop=jnp.zeros((width,), jnp.int32),
         active=jnp.zeros((width,), bool),
+        epoch=jnp.zeros((width,), jnp.int32),
     )
 
 
@@ -57,6 +67,7 @@ class N2VSlots(NamedTuple):
     active: jnp.ndarray    # (S,) bool
     phase: jnp.ndarray     # (S,) int32: 0 = propose (A), 1 = verify (B)
     cand: jnp.ndarray      # (S, K) int32 — proposals carried A -> B
+    epoch: Optional[jnp.ndarray] = None  # (S,) int32 — slot-reuse epoch
 
 
 def empty_n2v_slots(width: int, k: int) -> N2VSlots:
@@ -68,6 +79,7 @@ def empty_n2v_slots(width: int, k: int) -> N2VSlots:
         active=jnp.zeros((width,), bool),
         phase=jnp.zeros((width,), jnp.int32),
         cand=jnp.full((width, k), -1, jnp.int32),
+        epoch=jnp.zeros((width,), jnp.int32),
     )
 
 
@@ -90,6 +102,9 @@ class ReservoirSlots(NamedTuple):
     cand_w: jnp.ndarray    # (S, CH) float32 — candidate edge weights
     best_key: jnp.ndarray  # (S,) float32 — running E-S reservoir key
     best_idx: jnp.ndarray  # (S,) int32 — running argmax neighbor offset
+    last_chunk: Optional[jnp.ndarray] = None  # (S,) bool — scored chunk was
+                           # the final one deg(v_curr) needs (early finalize)
+    epoch: Optional[jnp.ndarray] = None       # (S,) int32 — slot-reuse epoch
 
 
 def empty_reservoir_slots(width: int, chunk: int) -> ReservoirSlots:
@@ -104,29 +119,41 @@ def empty_reservoir_slots(width: int, chunk: int) -> ReservoirSlots:
         cand_w=jnp.zeros((width, chunk), jnp.float32),
         best_key=jnp.full((width,), -jnp.inf, jnp.float32),
         best_idx=jnp.zeros((width,), jnp.int32),
+        last_chunk=jnp.zeros((width,), bool),
+        epoch=jnp.zeros((width,), jnp.int32),
     )
 
 
 class QueryQueue(NamedTuple):
-    """Device-resident pending-query buffer (the Theorem VI.1 queue).
+    """Device-resident pending-query ring (the Theorem VI.1 queue).
 
-    ``head`` is the next query to issue; ``staged`` is the injection
-    watermark — queries with index >= staged have not yet "arrived" from the
-    host (models the C-cycle observation/injection delay of §VI-A).  The
+    ``head`` is the next arrival to issue; ``staged`` is the injection
+    watermark — arrivals with sequence >= staged have not yet "arrived" from
+    the host (models the C-cycle observation/injection delay of §VI-A).  The
     feedback controller advances ``staged``; refill may only consume
     ``head < staged``.
 
-    ``tail`` decouples the *buffer size* (``capacity``, a static shape) from
-    the *queries that actually exist* (a traced scalar): in the closed system
-    the two coincide, while the open-system streaming engine appends arrivals
-    at ``tail`` between superstep chunks.  Invariant:
-    ``head <= staged <= tail <= capacity``.
+    ``head``/``staged``/``tail`` are *monotone arrival counters* (they never
+    wrap); the buffers they index are rings of ``capacity`` slots addressed
+    mod capacity.  ``order[i % capacity]`` is the query id assigned to the
+    i-th arrival — in the closed system it is the identity permutation (query
+    i occupies slot i), while the open system's ring-buffer slot economy
+    re-issues reclaimed slots to later arrivals, so arrival order and slot
+    id decouple.  ``start_vertex[qid]`` / ``epoch[qid]`` are indexed by slot
+    id and describe the slot's *current occupant*; ``epoch`` salts the
+    occupant's RNG derivation so successive occupants sample independently.
+
+    Invariants: ``head <= staged <= tail`` and ``tail - head <= capacity``
+    (an arrival only exists while its slot is live, and at most ``capacity``
+    slots are live).
     """
 
-    start_vertex: jnp.ndarray  # (Q,) int32
-    head: jnp.ndarray          # scalar int32
-    staged: jnp.ndarray        # scalar int32
-    tail: jnp.ndarray          # scalar int32 — arrivals so far
+    start_vertex: jnp.ndarray  # (Q,) int32 — start vertex by slot id
+    head: jnp.ndarray          # scalar int32 — monotone issue counter
+    staged: jnp.ndarray        # scalar int32 — monotone staging watermark
+    tail: jnp.ndarray          # scalar int32 — monotone arrival counter
+    order: jnp.ndarray         # (Q,) int32 — slot id by arrival seq (mod Q)
+    epoch: jnp.ndarray         # (Q,) int32 — occupant epoch by slot id
 
     @property
     def capacity(self) -> int:
@@ -153,16 +180,21 @@ def make_queue(start_vertices, staged: int | None = None,
         head=jnp.zeros((), jnp.int32),
         staged=jnp.asarray(staged, jnp.int32),
         tail=jnp.asarray(tail, jnp.int32),
+        order=jnp.arange(q, dtype=jnp.int32),
+        epoch=jnp.zeros((q,), jnp.int32),
     )
 
 
 def empty_queue(capacity: int) -> QueryQueue:
-    """Open-system buffer: room for ``capacity`` queries, none arrived yet."""
+    """Open-system ring: room for ``capacity`` live queries, none arrived
+    yet; slot ids are handed out by the host's free ring at injection."""
     return QueryQueue(
         start_vertex=jnp.zeros((capacity,), jnp.int32),
         head=jnp.zeros((), jnp.int32),
         staged=jnp.zeros((), jnp.int32),
         tail=jnp.zeros((), jnp.int32),
+        order=jnp.arange(capacity, dtype=jnp.int32),
+        epoch=jnp.zeros((capacity,), jnp.int32),
     )
 
 

@@ -37,13 +37,29 @@ The engine exposes two execution styles over one superstep function:
     without recompiling.  ``k`` and the arrival count are traced scalars;
     only the buffer shapes are static.
 
+Ring-buffer slot economy (continuous operation)
+-----------------------------------------------
+The open system never drains: query-id slots are a *ring*.  When a query
+completes and its paths are harvested, the host returns its slot to a free
+ring and re-issues it to the next arrival with ``epoch + 1``; the RNG
+derivation is salted with ``(epoch, qid, hop)`` (`rng.task_fold`), so
+successive occupants of one slot sample independent walks and an unbounded
+request stream is served with a bounded device buffer — no generation
+rotation, no drain barrier.  ``inject_queries`` scatters arrivals into
+host-assigned slots and appends them to the arrival-order ring
+(``QueryQueue.order``) that refill consumes; epoch 0 derives bit-identically
+to the classic ``(seed, query_id, hop)`` tuple, so a closed batch is simply
+epoch 0 of a stream.
+
 `repro.walker` is the front-end over both (``compile(program).run()`` /
 ``.stream()`` / ``.serve()``); the deprecated ``make_engine`` /
 ``run_walks`` names survive as warning shims.
 
-Because path content depends only on ``(seed, query_id, hop)``, chunked
-execution is bit-identical to one-shot execution for the same seed — the
-property `tests/test_streaming.py` pins down.
+Because path content depends only on ``(seed, epoch, query_id, hop)``,
+chunked execution is bit-identical to one-shot execution for the same seed,
+and epoch ``e`` of a stream is bit-identical to a closed batch run under
+``rng.stream_key(seed, e)`` — the properties `tests/test_streaming.py`
+pins down.
 """
 from __future__ import annotations
 
@@ -158,30 +174,77 @@ def init_stream_state(cfg: EngineConfig, capacity: int) -> StreamState:
     )
 
 
-@jax.jit
-def inject_queries(state: StreamState, new_starts: jnp.ndarray,
-                   n_valid) -> StreamState:
-    """Append arrivals at the queue tail (host→device injection).
+def inject_queries(state: StreamState, qids, new_starts=None, epochs=None,
+                   n_valid=None) -> StreamState:
+    """Admit arrivals into ring slots (host→device injection).
 
-    ``new_starts`` may be padded to a fixed block size to bound the number
-    of compiled shapes; only the first ``n_valid`` entries become real
-    queries (``tail`` advances by ``n_valid``; padded entries sit beyond
-    ``tail`` and are overwritten by the next injection).  The caller must
-    ensure ``tail + len(new_starts) <= capacity`` — `serve.WalkService`
-    tracks a host mirror of ``tail`` for exactly this admission check.
+    ``qids`` are the slot ids the host popped from its free ring (a slot is
+    free initially or once its previous occupant was harvested and
+    released); ``epochs`` are the occupant epochs salting each slot's RNG
+    stream.  All three arrays may be padded to a fixed block size to bound
+    the number of compiled shapes; only the first ``n_valid`` entries
+    become real queries.  The arrival sequence ``tail`` advances by
+    ``n_valid`` and the new occupants are appended to the arrival-order
+    ring that refill consumes.  Recycled slots' ``done`` bits and recorded
+    path rows are cleared here, so stale epochs can never leak into a
+    harvest.  The host must only hand out free slots — `WalkStream` /
+    `serve.WalkService` own that free-ring bookkeeping.
+
+    The pre-ring form ``inject_queries(state, new_starts, n_valid)``
+    (append fresh queries at sequential slots from the tail) survives as a
+    deprecated shim.
     """
+    if epochs is None:  # legacy 3-arg form: (state, new_starts, n_valid)
+        warnings.warn(
+            "inject_queries(state, starts, n_valid) is deprecated; the ring "
+            "engine takes (state, qids, starts, epochs, n_valid) — or use "
+            "repro.walker.compile(program).stream(graph), which owns the "
+            "slot-ring bookkeeping", DeprecationWarning, stacklevel=2)
+        starts = jnp.asarray(qids, jnp.int32)
+        n_valid = jnp.asarray(new_starts, jnp.int32)
+        # Sequential fresh slots at the tail, epoch 0 — exactly the old
+        # append semantics (pad entries beyond n_valid stay inert).
+        qids = state.queue.tail + jnp.arange(starts.shape[0], dtype=jnp.int32)
+        new_starts = starts
+        epochs = jnp.zeros((starts.shape[0],), jnp.int32)
+    return _inject_queries(state, qids, new_starts, epochs, n_valid)
+
+
+@jax.jit
+def _inject_queries(state: StreamState, qids: jnp.ndarray,
+                    new_starts: jnp.ndarray, epochs: jnp.ndarray,
+                    n_valid) -> StreamState:
     q = state.queue
-    sv = jax.lax.dynamic_update_slice(
-        q.start_vertex, jnp.asarray(new_starts, jnp.int32), (q.tail,))
-    tail = q.tail + jnp.asarray(n_valid, jnp.int32)
-    return state._replace(queue=q._replace(start_vertex=sv, tail=tail))
+    cap = q.capacity
+    n = jnp.asarray(n_valid, jnp.int32)
+    qids = jnp.asarray(qids, jnp.int32)
+    idx = jnp.arange(qids.shape[0], dtype=jnp.int32)
+    valid = idx < n
+    slot = jnp.where(valid, qids, cap)                       # cap = OOB drop
+    sv = q.start_vertex.at[slot].set(
+        jnp.asarray(new_starts, jnp.int32), mode="drop")
+    ep = q.epoch.at[slot].set(jnp.asarray(epochs, jnp.int32), mode="drop")
+    pos = jnp.where(valid, (q.tail + idx) % cap, cap)
+    order = q.order.at[pos].set(qids, mode="drop")
+    done = state.done.at[slot].set(False, mode="drop")
+    paths, lengths = state.paths, state.lengths
+    if paths.shape[0] == state.done.shape[0]:  # recording paths
+        paths = paths.at[slot].set(-1, mode="drop")
+        lengths = lengths.at[slot].set(0, mode="drop")
+    return state._replace(
+        queue=q._replace(start_vertex=sv, epoch=ep, order=order,
+                         tail=q.tail + n),
+        done=done, paths=paths, lengths=lengths)
 
 
 def _refill(slots: WalkerSlots, queue: QueryQueue, paths, lengths,
             cfg: EngineConfig, terminated: jnp.ndarray):
     """Zero-bubble compaction + refill: freed lanes pull the next staged
-    queries via a prefix-sum ranking (the butterfly balancer's O(1)-per-task
-    dispatch, §VI-C, realized as a vectorized scan)."""
+    arrivals via a prefix-sum ranking (the butterfly balancer's O(1)-per-task
+    dispatch, §VI-C, realized as a vectorized scan).  Arrivals are consumed
+    from the order ring — the slot id, start vertex, and epoch of occupant
+    ``head + rank`` all come from the ring, so reclaimed slots are re-issued
+    transparently."""
     free = (~slots.active) | terminated
     if cfg.mode == "static":
         # Bulk-synchronous: only reload when the whole batch drained.
@@ -190,10 +253,11 @@ def _refill(slots: WalkerSlots, queue: QueryQueue, paths, lengths,
     avail = jnp.maximum(queue.staged - queue.head, 0)
     rank = jnp.cumsum(free.astype(jnp.int32)) - 1           # rank among free lanes
     take = free & (rank < avail)
-    qid = queue.head + rank
     nq = queue.capacity
-    qid_safe = jnp.clip(qid, 0, nq - 1)
-    start = queue.start_vertex[qid_safe]
+    pos = (queue.head + jnp.maximum(rank, 0)) % nq          # arrival seq -> ring
+    qid = queue.order[pos]
+    start = queue.start_vertex[qid]
+    ep = queue.epoch[qid]
 
     new_slots = WalkerSlots(
         v_curr=jnp.where(take, start, slots.v_curr),
@@ -201,6 +265,7 @@ def _refill(slots: WalkerSlots, queue: QueryQueue, paths, lengths,
         query_id=jnp.where(take, qid, jnp.where(terminated, -1, slots.query_id)),
         hop=jnp.where(take, 0, slots.hop),
         active=jnp.where(take, True, slots.active & ~terminated),
+        epoch=jnp.where(take, ep, slots.epoch),
     )
     n_taken = jnp.sum(take.astype(jnp.int32))
     new_queue = queue._replace(head=queue.head + n_taken)
@@ -237,7 +302,7 @@ def _process(graph: CSRGraph, spec: SamplerSpec, cfg: EngineConfig, base_key,
     # PPR teleport/termination draw (before the hop; geometric walk length).
     if spec.stop_prob > 0.0:
         u_stop = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
-                                        1, SALT_STOP)[:, 0]
+                                        1, SALT_STOP, epoch=slots.epoch)[:, 0]
         stop = A & (u_stop < spec.stop_prob)
     else:
         stop = jnp.zeros_like(A)
@@ -247,12 +312,12 @@ def _process(graph: CSRGraph, spec: SamplerSpec, cfg: EngineConfig, base_key,
         from repro.kernels.walk_step import ops as walk_ops
         if spec.kind == "uniform":
             u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
-                                       1, 0)
+                                       1, 0, epoch=slots.epoch)
             v_next, deg = walk_ops.walk_step_uniform(
                 slots.v_curr, u[:, 0], graph.row_ptr, graph.col)
         else:
             u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
-                                       2, 0)
+                                       2, 0, epoch=slots.epoch)
             v_next, deg = walk_ops.walk_step_alias(
                 slots.v_curr, u[:, 0], u[:, 1], graph.row_ptr, graph.col,
                 graph.alias_prob, graph.alias_idx)
@@ -275,6 +340,7 @@ def _process(graph: CSRGraph, spec: SamplerSpec, cfg: EngineConfig, base_key,
         query_id=slots.query_id,
         hop=new_hop,
         active=slots.active,
+        epoch=slots.epoch,
     )
     if cfg.record_paths:
         nq = paths.shape[0]

@@ -1,5 +1,6 @@
-"""Open-system walk serving: continuous request arrival over the streaming
-engine (`core.walk_engine.make_superstep_runner`)."""
+"""Open-system walk serving: continuous request arrival over a persistent
+walk stream (`repro.walker.WalkStream` / `ShardedWalkStream` — ring-buffer
+slot reclamation, either backend)."""
 from repro.serve.service import WalkRequest, WalkService
 from repro.serve.workload import OpenLoad, run_open_load
 

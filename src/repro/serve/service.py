@@ -1,28 +1,36 @@
 """Open-system walk service on the streaming engine (ROADMAP north star).
 
-The closed-system engine (`core.walk_engine.make_engine`) drains a fixed
-query batch; a *service* faces continuous arrivals from many tenants.
-:class:`WalkService` keeps a persistent :class:`~repro.core.StreamState` on
-device and alternates two phases, never recompiling:
+The closed-system engine drains a fixed query batch; a *service* faces
+continuous arrivals from many tenants.  :class:`WalkService` wraps a
+persistent walk stream (:class:`repro.walker.WalkStream` on one device or
+:class:`repro.walker.ShardedWalkStream` on a device mesh — the service
+only speaks the shared stream interface) and alternates two phases, never
+recompiling:
 
-  admit   — append pending requests' start vertices at the queue tail
-            (``inject_queries``; each request owns a contiguous query-id
-            range, the multi-tenancy bookkeeping),
-  run     — advance the engine a *chunk* of ``k`` supersteps
-            (``run_supersteps``), then harvest: any request whose whole
-            query-id range flipped ``done`` gets its recorded paths sliced
-            out and its sojourn (submit→complete, in supersteps) logged.
+  admit   — pop free slots from the stream's ring and inject pending
+            requests' start vertices (each walk gets an ``(epoch, qid)``
+            identity: the slot id it occupies and that slot's reuse epoch
+            — the multi-tenancy bookkeeping),
+  run     — advance the engine a *chunk* of ``k`` supersteps, then
+            harvest: any request whose every ``(epoch, qid)`` flipped
+            ``done`` gets its recorded paths sliced out, its sojourn
+            (submit→complete) and admission wait (submit→inject) logged,
+            and its slots *released* back to the free ring with
+            ``epoch + 1``.
 
 The chunk size is the host-injection granularity: smaller chunks admit
 arrivals sooner (lower sojourn) at the cost of more host↔device syncs —
 the open-system analogue of the paper's §VI-A injection delay C.
 
-The device buffer holds ``capacity`` queries per *generation*.  When the
-buffer is exhausted and all in-flight walks have drained, the service
-rotates to a fresh state (generation += 1) with a distinct RNG seed, so an
-unbounded request stream is served with bounded device memory.  Query ids
-repeat across generations but ``(generation, qid)`` is unique — and walks
-in different generations use different seeds, keeping samples independent.
+Ring-buffer reclamation means the device buffer holds ``capacity`` *live*
+queries and completed slots go around again immediately — there is no
+drain barrier anywhere, so lanes stay busy across request boundaries
+exactly as Theorem VI.1 prescribes for the closed pool.  Query ids repeat
+across occupancies but ``(epoch, qid)`` is unique, and the RNG derivation
+is salted with the epoch (`core.rng.task_fold`), keeping samples
+independent: epoch ``e`` of slot ``qid`` samples exactly the walk a
+closed batch run would sample for query ``qid`` under
+``rng.stream_key(seed, e)``, on either backend.
 """
 from __future__ import annotations
 
@@ -31,14 +39,12 @@ import time
 from collections import deque
 from typing import Dict, List, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.samplers import SamplerSpec
 from repro.core.scheduler import ServiceAnalysis, analyze_service
 from repro.core.tasks import WalkStats
-from repro.core.walk_engine import (EngineConfig, init_stream_state,
-                                    inject_queries, make_superstep_runner)
+from repro.core.walk_engine import EngineConfig
 
 
 @dataclasses.dataclass
@@ -47,13 +53,13 @@ class WalkRequest:
 
     request_id: int
     num_walks: int
-    generation: int = -1
-    qid_lo: int = -1           # query-id range [qid_lo, qid_hi) in its generation
-    qid_hi: int = -1
+    qids: Optional[np.ndarray] = None    # slot id per walk, once admitted
+    epochs: Optional[np.ndarray] = None  # slot epoch per walk (RNG identity)
     submitted_at: int = -1     # service superstep clock at submit()
-    admitted_at: int = -1      # ... at injection into the device queue
+    admitted_at: int = -1      # ... at injection into the device slot ring
     completed_at: int = -1     # ... when the last walk terminated
     wall_submitted: float = 0.0
+    wall_admitted: float = 0.0
     wall_completed: float = 0.0
     paths: Optional[np.ndarray] = None    # (num_walks, max_hops+1) once done
     lengths: Optional[np.ndarray] = None  # (num_walks,) once done
@@ -68,23 +74,25 @@ class WalkRequest:
         return self.completed_at - self.submitted_at
 
     @property
+    def admission_wait(self) -> int:
+        """Supersteps from submission to slot-ring injection — the
+        host-side queueing component of the sojourn (waiting for free
+        slots); the rest is device time."""
+        return self.admitted_at - self.submitted_at
+
+    @property
     def wall_sojourn(self) -> float:
         return self.wall_completed - self.wall_submitted
 
-
-def _pad_block(n: int, floor: int = 16) -> int:
-    """Next power of two >= n (>= floor): bounds distinct inject shapes to
-    O(log capacity) jit specializations."""
-    b = floor
-    while b < n:
-        b <<= 1
-    return b
+    @property
+    def wall_admission_wait(self) -> float:
+        return self.wall_admitted - self.wall_submitted
 
 
 class WalkService:
-    """Multi-tenant streaming walk service over one graph + sampler spec.
+    """Multi-tenant streaming walk service over one graph + walk program.
 
-    Typical use (the walker front-end)::
+    Typical use (the walker front-end; either backend)::
 
         svc = walker.compile(WalkProgram.urw(80)).serve(graph)
         rid = svc.submit(start_vertices)        # non-blocking
@@ -92,47 +100,68 @@ class WalkService:
         req = svc.poll(rid)                     # WalkRequest or None
         reqs = svc.drain()                      # run until all complete
 
-    ``program`` may be a :class:`repro.walker.WalkProgram` (preferred;
-    machine knobs come from ``execution``) or a bare
-    :class:`~repro.core.SamplerSpec` with a legacy ``cfg``
-    :class:`~repro.core.EngineConfig`.
+    Construction forms:
+
+    * ``WalkService(stream=walker.stream(g, ...), chunk=16)`` — over a
+      prebuilt stream (what ``Walker.serve`` does; works for single and
+      sharded streams alike).
+    * ``WalkService(graph, program_or_spec, cfg, capacity, chunk, seed)`` —
+      legacy direct form; builds a single-device stream internally.
+      ``program_or_spec`` may be a :class:`repro.walker.WalkProgram`
+      (machine knobs from ``execution``) or a bare
+      :class:`~repro.core.SamplerSpec` with an ``cfg``
+      :class:`~repro.core.EngineConfig`.
     """
 
-    def __init__(self, graph, program, cfg: Optional[EngineConfig] = None,
+    def __init__(self, graph=None, program=None,
+                 cfg: Optional[EngineConfig] = None,
                  capacity: int = 4096, chunk: int = 16, seed: int = 0,
-                 execution=None):
-        if isinstance(program, SamplerSpec):
-            spec = program
-            cfg = cfg or EngineConfig()
-        else:  # WalkProgram
-            spec = program.spec
-            if cfg is None:
-                from repro.walker.execution import ExecutionConfig
-                cfg = (execution or ExecutionConfig()).engine_config(program)
-        if not cfg.record_paths:
-            # Harvesting slices recorded paths; recording is mandatory here.
-            cfg = dataclasses.replace(cfg, record_paths=True)
-        self.graph = graph
-        self.spec = spec
-        self.cfg = cfg
-        self.capacity = int(capacity)
+                 execution=None, stream=None):
+        if stream is None:
+            if graph is None or program is None:
+                raise ValueError(
+                    "WalkService needs either a prebuilt stream= or "
+                    "(graph, program) to build one")
+            from repro.walker.compile import WalkStream
+            from repro.walker.execution import ExecutionConfig
+            from repro.walker.program import WalkProgram
+            if isinstance(program, SamplerSpec):
+                execution = ExecutionConfig.from_engine_config(
+                    cfg or EngineConfig())
+                program = WalkProgram(spec=program,
+                                      max_hops=(cfg or EngineConfig()).max_hops)
+            elif execution is None:
+                execution = (ExecutionConfig() if cfg is None
+                             else ExecutionConfig.from_engine_config(cfg))
+            stream = WalkStream(program, execution, graph, capacity, seed)
+        self.stream = stream
+        self.graph = stream.graph if graph is None else graph
+        self.capacity = stream.capacity
         self.chunk = int(chunk)
-        self._base_seed = int(seed)
-        self._run = make_superstep_runner(spec, cfg)
-
-        self.generation = 0
-        self._state = init_stream_state(cfg, self.capacity)
-        self._tail = 0            # host mirror of queue.tail (admission check)
-        self._gen_supersteps = 0  # supersteps inside the current generation
-        self.clock = 0            # total supersteps across generations
+        self.clock = 0            # total supersteps advanced by this service
 
         self._pending: deque[WalkRequest] = deque()   # submitted, not admitted
         self._pending_starts: Dict[int, np.ndarray] = {}
         self._inflight: Dict[int, WalkRequest] = {}
         self._completed: Dict[int, WalkRequest] = {}
         self._next_rid = 0
-        # WalkStats accumulated from rotated-out generations (host ints).
-        self._stats_base = {f: 0 for f in WalkStats._fields}
+        self._resets = 0
+
+    # ------------------------------------------------------------ geometry
+
+    @property
+    def num_slots(self) -> int:
+        """Total walker lanes across devices (service rate capacity)."""
+        return self.stream.num_slots
+
+    @property
+    def max_hops(self) -> int:
+        return self.stream.max_hops
+
+    @property
+    def cfg(self):
+        """The stream's engine-layer config (EngineConfig or DistConfig)."""
+        return self.stream.cfg
 
     # ------------------------------------------------------------- admission
 
@@ -143,7 +172,7 @@ class WalkService:
             raise ValueError("empty request")
         if sv.size > self.capacity:
             raise ValueError(
-                f"request of {sv.size} walks exceeds buffer capacity "
+                f"request of {sv.size} walks exceeds slot-ring capacity "
                 f"{self.capacity}; split it or raise capacity")
         rid = self._next_rid
         self._next_rid += 1
@@ -154,82 +183,48 @@ class WalkService:
         self._pending_starts[rid] = sv
         return rid
 
-    def _seed(self) -> int:
-        return self._base_seed + self.generation
-
-    def _block_for(self, n: int) -> int:
-        """Injection block size: power of two, capped at the full buffer, so
-        `inject_queries` compiles O(log capacity) shapes — never the
-        arbitrary residual room at the end of a generation."""
-        return min(_pad_block(n), self.capacity)
-
     def _admit(self) -> int:
-        """FIFO-admit pending requests while buffer room remains."""
+        """FIFO-admit pending requests while free ring slots remain."""
         admitted = 0
         while self._pending:
             req = self._pending[0]
-            n = req.num_walks
-            block = self._block_for(n)
-            if self._tail + block > self.capacity:  # no room this generation
-                break
+            if req.num_walks > self.stream.num_free:
+                break  # head-of-line blocks until enough slots are released
             starts = self._pending_starts[req.request_id]
-            padded = np.zeros((block,), np.int32)
-            padded[:n] = starts
-            self._state = inject_queries(self._state, jnp.asarray(padded), n)
-            req.generation = self.generation
-            req.qid_lo, req.qid_hi = self._tail, self._tail + n
+            req.qids, req.epochs = self.stream.inject(starts)
             req.admitted_at = self.clock
-            self._tail += n
+            req.wall_admitted = time.perf_counter()
             self._pending.popleft()
             del self._pending_starts[req.request_id]
             self._inflight[req.request_id] = req
             admitted += 1
         return admitted
 
-    def _maybe_rotate(self) -> None:
-        """Start a fresh generation once the buffer is spent and drained."""
-        if self._inflight or not self._pending:
-            return
-        n = self._pending[0].num_walks
-        if self._tail + self._block_for(n) <= self.capacity:
-            return  # head request still fits — no rotation needed
-        for f in WalkStats._fields:
-            self._stats_base[f] += int(getattr(self._state.stats, f))
-        self.generation += 1
-        self._state = init_stream_state(self.cfg, self.capacity)
-        self._tail = 0
-        self._gen_supersteps = 0
-
     # ------------------------------------------------------------- execution
 
     def step(self, k: Optional[int] = None) -> int:
-        """Admit pending requests, run one chunk of at most ``k`` supersteps,
-        harvest completions.  Returns the number of supersteps executed."""
-        self._maybe_rotate()
+        """Admit pending requests, run one chunk of at most ``k``
+        supersteps, harvest completions (releasing their slots back to the
+        ring).  Returns the number of supersteps executed."""
         self._admit()
         if not self._inflight:
             return 0
-        k = self.chunk if k is None else int(k)
-        self._state = self._run(self.graph, self._state, self._seed(), k)
-        now = int(self._state.stats.supersteps)       # device→host sync point
-        ran = now - self._gen_supersteps
-        self._gen_supersteps = now
+        ran = self.stream.advance(self.chunk if k is None else int(k))
         self.clock += ran
         self._harvest()
         return ran
 
     def _harvest(self) -> None:
-        done = np.asarray(self._state.done)
+        done = self.stream.done_mask()
         finished: List[WalkRequest] = []
         for req in self._inflight.values():
-            if done[req.qid_lo:req.qid_hi].all():
+            if done[req.qids].all():
                 finished.append(req)
         for req in finished:
-            sl = slice(req.qid_lo, req.qid_hi)
-            req.paths = np.asarray(self._state.paths[sl])
-            req.lengths = np.asarray(self._state.lengths[sl])
+            req.paths, req.lengths = self.stream.harvest_ids(req.qids)
             req.completed_at = self.clock
             req.wall_completed = time.perf_counter()
+            self.stream.release(req.qids)   # slots go around again (epoch+1)
             del self._inflight[req.request_id]
             self._completed[req.request_id] = req
 
@@ -237,28 +232,25 @@ class WalkService:
         """Run until every submitted request has completed."""
         while self._pending or self._inflight:
             ran = self.step()
-            if ran == 0 and not self._pending and not self._inflight:
-                break
             if ran == 0 and not self._inflight and self._pending:
-                # Only possible if rotation+admission made no progress.
+                # Admission made no progress with nothing in flight: the
+                # ring is fully free, so the head request simply cannot fit.
                 raise RuntimeError("service stalled: pending request cannot "
                                    "be admitted")
         return sorted(self._completed.values(),
                       key=lambda r: r.request_id)
 
     def reset_metrics(self) -> None:
-        """Forget completed-request records and engine counters while keeping
-        the compiled superstep runner warm (benchmark sweeps time several
-        load points against one service without re-tracing XLA)."""
+        """Forget completed-request records and engine counters while
+        keeping the compiled superstep runner warm (benchmark sweeps time
+        several load points against one service without re-tracing XLA).
+        The stream is re-seeded so successive sweeps draw fresh walks."""
         if self._pending or self._inflight:
             raise RuntimeError("reset_metrics with requests outstanding")
-        self.generation += 1          # keep per-generation RNG streams fresh
-        self._state = init_stream_state(self.cfg, self.capacity)
-        self._tail = 0
-        self._gen_supersteps = 0
+        self._resets += 1
+        self.stream.reset(seed=self.stream.seed + 1)
         self.clock = 0
         self._completed.clear()
-        self._stats_base = {f: 0 for f in WalkStats._fields}
 
     # ------------------------------------------------------------ inspection
 
@@ -284,14 +276,19 @@ class WalkService:
     def num_inflight(self) -> int:
         return len(self._inflight)
 
+    @property
+    def num_free_slots(self) -> int:
+        return self.stream.num_free
+
     def walk_stats(self) -> WalkStats:
-        """Engine counters accumulated across all generations (host ints)."""
-        return WalkStats(**{
-            f: self._stats_base[f] + int(getattr(self._state.stats, f))
-            for f in WalkStats._fields})
+        """Engine counters since construction / reset (host ints)."""
+        return self.stream.walk_stats()
 
     def sojourns(self) -> List[int]:
         return [r.sojourn for r in self._completed.values()]
+
+    def admission_waits(self) -> List[int]:
+        return [r.admission_wait for r in self._completed.values()]
 
     def analyze(self, offered_load: float = float("nan"),
                 wall_time_s: Optional[float] = None) -> ServiceAnalysis:
@@ -299,6 +296,7 @@ class WalkService:
         mean_len = (float(np.mean([r.lengths.mean() for r in reqs]))
                     if reqs else float("nan"))
         return analyze_service(
-            self.sojourns(), self.walk_stats(), self.cfg.num_slots,
+            self.sojourns(), self.walk_stats(), self.num_slots,
             offered_load=offered_load, mean_walk_len=mean_len,
-            wall_time_s=wall_time_s)
+            wall_time_s=wall_time_s,
+            admission_waits=self.admission_waits())

@@ -26,11 +26,13 @@ class OpenLoad:
     num_requests: int = 64        # total requests to offer
     request_size: int = 16        # walks per request
     utilization: float = 0.5      # ρ — target fraction of lane capacity
-    mean_walk_len: Optional[float] = None  # E[L]; default cfg.max_hops
+    mean_walk_len: Optional[float] = None  # E[L]; default svc.max_hops
 
-    def walks_per_superstep(self, cfg) -> float:
-        mean_len = self.mean_walk_len or float(cfg.max_hops)
-        return self.utilization * cfg.num_slots / mean_len
+    def walks_per_superstep(self, svc) -> float:
+        """λ for target ρ; ``svc`` is a WalkService (or anything exposing
+        ``num_slots``/``max_hops`` — works across both backends)."""
+        mean_len = self.mean_walk_len or float(svc.max_hops)
+        return self.utilization * svc.num_slots / mean_len
 
 
 def run_open_load(svc: WalkService, load: OpenLoad,
@@ -45,7 +47,7 @@ def run_open_load(svc: WalkService, load: OpenLoad,
     measured sojourn — the honest cost of host-side injection.
     """
     rng = np.random.default_rng(seed)
-    lam = load.walks_per_superstep(svc.cfg)
+    lam = load.walks_per_superstep(svc)
     nv = svc.graph.num_vertices
 
     t0 = time.perf_counter()

@@ -5,16 +5,19 @@
 ``compile(program, backend=...)`` → a ``Walker`` exposing
 
   * ``.run(graph, starts)``  — closed batch, drained to completion;
-  * ``.stream(graph, ...)``  — open system with mid-flight injection;
+  * ``.stream(graph, ...)``  — continuous open system: ring-buffer slot
+    reclamation (inject / advance / harvest / release), no drain barrier;
   * ``.serve(graph, ...)``   — multi-tenant ``WalkService``;
 
-with ``backend="single"`` or ``"sharded"`` (vertex-partitioned
-``shard_map`` execution, bit-identical to single-device).
+each on ``backend="single"`` or ``"sharded"`` (vertex-partitioned
+``shard_map`` execution, bit-identical to single-device; ``.stream`` is a
+``WalkStream`` or ``ShardedWalkStream`` with one shared interface).
 
 The legacy surfaces (`core.walks`, `run_walks`, `make_engine`,
 `run_distributed`, `run_distributed_n2v`) remain as deprecated shims.
 """
-from repro.walker.compile import BACKENDS, Walker, WalkStream, compile
+from repro.walker.compile import (BACKENDS, ShardedWalkStream, Walker,
+                                  WalkStream, compile)
 from repro.walker.execution import ExecutionConfig
 from repro.walker.program import WalkProgram
 
@@ -24,5 +27,6 @@ __all__ = [
     "compile",
     "Walker",
     "WalkStream",
+    "ShardedWalkStream",
     "BACKENDS",
 ]

@@ -5,20 +5,26 @@ single superstep definition serves the closed batch system, the open
 streaming system, the multi-tenant service, and the ``shard_map``-
 partitioned multi-device system.  :func:`compile` binds a
 :class:`~repro.walker.WalkProgram` to a backend and returns a
-:class:`Walker` exposing all three execution styles:
+:class:`Walker` exposing all three execution styles on either backend:
 
-    walker = compile(WalkProgram.node2vec(p=2.0, q=0.5), backend="single")
+    walker = compile(WalkProgram.node2vec(p=2.0, q=0.5), backend="sharded")
     result = walker.run(graph, starts, seed=0)        # closed batch
     stream = walker.stream(graph, capacity=4096)      # open system
     service = walker.serve(graph)                     # multi-tenant
 
-Paths are bit-identical across backends for the same (seed, query_id,
-hop) — pinned by ``tests/test_walker_api.py``.
+Streams are *continuous*: query-id slots form a ring (a host-side free
+ring hands slots to arrivals; ``release`` reclaims them after harvest with
+``epoch + 1``), so an unbounded arrival stream runs in a bounded device
+buffer with no drain barrier.  Paths are bit-identical across backends
+for the same (seed, epoch, query_id, hop) — epoch ``e`` of any stream
+equals ``Walker.run`` under ``rng.stream_key(seed, e)`` — pinned by
+``tests/test_walker_api.py`` and ``tests/test_streaming.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
+from collections import deque
 from typing import Optional
 
 import jax
@@ -26,7 +32,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distributed import (DistLogs, assemble_paths,
-                                    make_distributed_engine, shard_starts)
+                                    init_dist_stream_state,
+                                    inject_stream_queries,
+                                    make_distributed_engine,
+                                    make_sharded_stream_engine, shard_starts)
 from repro.core.tasks import WalkResult, WalkStats
 from repro.core.walk_engine import (StreamState, build_engine,
                                     init_stream_state, inject_queries,
@@ -36,6 +45,15 @@ from repro.walker.execution import ExecutionConfig
 from repro.walker.program import WalkProgram
 
 BACKENDS = ("single", "sharded")
+
+
+def _pad_block(n: int, floor: int = 16) -> int:
+    """Next power of two >= n (>= floor): bounds distinct injection shapes
+    to O(log capacity) jit specializations."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
 
 
 def compile(program: WalkProgram, backend: str = "single",
@@ -110,8 +128,10 @@ class Walker:
     def run(self, graph, starts, seed: int = 0) -> WalkResult:
         """Closed system: drain the batch of ``starts`` to completion.
 
-        On the sharded backend ``graph`` may be a ``CSRGraph`` (partitioned
-        on the fly over the configured device count) or a pre-built
+        ``seed`` may be an int or a PRNG key (e.g. ``rng.stream_key(s, e)``
+        to reproduce epoch ``e`` of a stream as a closed batch).  On the
+        sharded backend ``graph`` may be a ``CSRGraph`` (partitioned on the
+        fly over the configured device count) or a pre-built
         ``PartitionedGraph``; the emission logs are assembled into the same
         ``WalkResult`` layout as the single-device engine, with per-device
         stats summed.
@@ -133,9 +153,10 @@ class Walker:
         run, cfg = self._dist_engine(pg)
         starts_np = np.asarray(starts, dtype=np.int32)
         starts_sh, qcount = shard_starts(starts_np, pg.num_devices)
+        base_key = (jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0
+                    else jnp.asarray(seed))
         log_q, log_h, log_v, cursor, stats = run(
-            pg, jnp.asarray(starts_sh), jnp.asarray(qcount),
-            jax.random.PRNGKey(seed))
+            pg, jnp.asarray(starts_sh), jnp.asarray(qcount), base_key)
         # Devices run the lockstep superstep loop the same number of times:
         # supersteps is a global clock (max), everything else is additive.
         total = WalkStats(*(
@@ -167,36 +188,171 @@ class Walker:
 
     # --------------------------------------------------------- open stream
 
-    def stream(self, graph, capacity: int = 4096, seed: int = 0) -> "WalkStream":
+    def stream(self, graph, capacity: int = 4096, seed: int = 0):
         """Open system: a persistent stream accepting injections between
-        superstep chunks (single-device backend; sharded streaming is a
-        ROADMAP item gated on this API)."""
-        if self.backend != "single":
-            raise NotImplementedError(
-                "streaming on the sharded backend is not implemented yet "
-                "(ROADMAP: shard serve.WalkService across devices); compile "
-                "with backend='single'")
-        self.program.requires(graph)
-        return WalkStream(self.program, self.execution, graph, capacity, seed)
+        superstep chunks, with ring-buffer slot reclamation (``release``)
+        for continuous operation.
+
+        On ``backend="single"`` returns a :class:`WalkStream`; on
+        ``backend="sharded"`` a :class:`ShardedWalkStream` over the
+        capability-dispatched distributed superstep.  Both expose the same
+        inject / advance / harvest_ids / release surface, so
+        `serve.WalkService` runs unchanged over either.
+        """
+        if self.backend == "single":
+            self.program.requires(graph)
+            return WalkStream(self.program, self.execution, graph, capacity,
+                              seed)
+        if not isinstance(graph, PartitionedGraph):
+            self.program.requires(graph)
+        pg = self._partition(graph)
+        cfg = self.execution.dist_config(self.program, pg.num_devices)
+        mesh = self._mesh
+        if mesh is None:
+            devs = np.array(jax.devices()[: pg.num_devices])
+            mesh = jax.sharding.Mesh(devs, (cfg.axis_name,))
+        return ShardedWalkStream(self.program, cfg, pg, mesh, capacity, seed)
 
     # ------------------------------------------------------------- service
 
     def serve(self, graph, capacity: int = 4096, chunk: int = 16,
               seed: int = 0):
-        """Multi-tenant request service over the streaming engine."""
-        if self.backend != "single":
-            raise NotImplementedError(
-                "serving on the sharded backend is not implemented yet "
-                "(ROADMAP: shard serve.WalkService across devices); compile "
-                "with backend='single'")
-        self.program.requires(graph)
+        """Multi-tenant request service over the streaming engine (either
+        backend — the service only speaks the stream interface)."""
         from repro.serve.service import WalkService
-        return WalkService(graph, self.program, execution=self.execution,
-                           capacity=capacity, chunk=chunk, seed=seed)
+        return WalkService(stream=self.stream(graph, capacity=capacity,
+                                              seed=seed),
+                           chunk=chunk)
 
 
-class WalkStream:
-    """Persistent open-system stream: inject → advance → harvest.
+class _StreamBase:
+    """Host-side ring economy shared by both stream backends.
+
+    The host owns the free ring: slot ids 0..capacity-1 start free, an
+    injection pops slots FIFO and assigns each arrival ``(epoch, qid)``,
+    and :meth:`release` returns harvested slots with ``epoch + 1`` so the
+    next occupant samples an independent walk (`rng.task_fold` salts the
+    derivation with the epoch).  The stream therefore never drains as a
+    whole — slots individually complete, are harvested, and go around
+    again.
+    """
+
+    capacity: int
+
+    def _init_ring(self) -> None:
+        self._free = deque(range(self.capacity))
+        self._epochs = np.zeros((self.capacity,), np.int32)
+        self._live = np.zeros((self.capacity,), bool)
+        self._injected = 0
+
+    # -- subclass hooks ----------------------------------------------------
+
+    def _device_inject(self, qids: np.ndarray, starts: np.ndarray,
+                       epochs: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def advance(self, k: int = 16) -> int:
+        raise NotImplementedError
+
+    def done_mask(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def harvest_ids(self, qids):
+        raise NotImplementedError
+
+    # -- ring economy ------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        """Slots available for injection right now."""
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        """Slots occupied by injected-but-not-released queries."""
+        return self.capacity - len(self._free)
+
+    @property
+    def num_injected(self) -> int:
+        """Total arrivals ever injected (monotone; exceeds capacity once
+        slots recycle)."""
+        return self._injected
+
+    def epoch_of(self, qids) -> np.ndarray:
+        """Current occupant epoch of each slot id."""
+        return self._epochs[np.asarray(qids, np.int64)]
+
+    def inject(self, starts, n_valid: Optional[int] = None):
+        """Admit arrivals into free ring slots.
+
+        Returns ``(qids, epochs)`` — the slot id and epoch assigned to each
+        arrival, the identity under which its walk is sampled and
+        harvested.  Raises if fewer than ``n_valid`` slots are free
+        (``release`` harvested queries to make room).
+        """
+        sv = np.asarray(starts, np.int32).reshape(-1)
+        n = int(sv.size if n_valid is None else n_valid)
+        if not 0 < n <= sv.size:
+            raise ValueError(
+                f"n_valid={n} must be within [1, {sv.size}] (the injected "
+                "block)")
+        if n > len(self._free):
+            raise ValueError(
+                f"injecting {n} queries overflows the slot ring "
+                f"({self.num_live}/{self.capacity} live, {len(self._free)} "
+                "free); release harvested queries or raise capacity "
+                "(WalkService does this bookkeeping for you)")
+        qids = np.asarray([self._free.popleft() for _ in range(n)], np.int32)
+        epochs = self._epochs[qids]
+        self._live[qids] = True
+        self._injected += n
+        self._device_inject(qids, sv[:n], epochs)
+        return qids, epochs
+
+    def release(self, qids) -> None:
+        """Return harvested slots to the free ring with ``epoch + 1``."""
+        qids = np.asarray(qids, np.int64).reshape(-1)
+        if np.unique(qids).size != qids.size:
+            # A duplicate would enter the free ring twice and hand the same
+            # (epoch, qid) identity to two future arrivals.
+            raise ValueError("release with duplicate slot ids")
+        if not self._live[qids].all():
+            raise ValueError("release of a slot that is not live")
+        done = self.done_mask()
+        if not done[qids].all():
+            raise ValueError(
+                "release of an unfinished query: harvest only completed "
+                "slots (done_mask) before recycling them")
+        self._live[qids] = False
+        self._epochs[qids] += 1
+        self._free.extend(int(q) for q in qids)
+
+    def done_live_mask(self) -> np.ndarray:
+        """(capacity,) bool — live slots whose query has terminated (the
+        harvestable set; released slots read False)."""
+        return self.done_mask() & self._live
+
+    def harvest(self, lo: int = 0, hi: Optional[int] = None):
+        """Recorded (paths, lengths) for the contiguous slot range
+        [lo, hi) as numpy.  Before any slot recycles, slots are handed out
+        FIFO, so this matches injection order; under reuse prefer
+        :meth:`harvest_ids` with the ids :meth:`inject` returned."""
+        hi = min(self._injected, self.capacity) if hi is None else hi
+        return self.harvest_ids(np.arange(lo, hi))
+
+    def drain(self, chunk: int = 64, max_chunks: int = 100_000) -> None:
+        """Advance until every live (injected, unreleased) query is done."""
+        for _ in range(max_chunks):
+            live = self._live
+            if not live.any() or bool(self.done_mask()[live].all()):
+                return
+            self.advance(chunk)
+        raise RuntimeError("stream did not drain (engine stalled?)")
+
+
+class WalkStream(_StreamBase):
+    """Persistent single-device open-system stream: inject → advance →
+    harvest → release.
 
     Thin stateful handle over the jitted superstep runner; all device
     state lives in a :class:`~repro.core.StreamState` whose shapes are
@@ -218,30 +374,29 @@ class WalkStream:
             execution.engine_config(program), record_paths=True)
         self._runner = make_superstep_runner(program.spec, self._cfg)
         self.state: StreamState = init_stream_state(self._cfg, self.capacity)
-        self._tail = 0  # host mirror of queue.tail (admission bookkeeping)
+        self._init_ring()
 
-    def inject(self, starts, n_valid: Optional[int] = None) -> None:
-        """Append arrivals at the queue tail.  ``starts`` may be padded;
-        only the first ``n_valid`` entries become real queries."""
-        sv = np.asarray(starts, np.int32).reshape(-1)
-        n = int(sv.size if n_valid is None else n_valid)
-        if not 0 <= n <= sv.size:
-            raise ValueError(
-                f"n_valid={n} must be within [0, {sv.size}] (the injected "
-                "block); a negative/oversized count would corrupt the "
-                "queue tail")
-        # The WHOLE padded block must fit: inject_queries writes all of
-        # ``starts`` at the tail, and dynamic_update_slice clamps
-        # out-of-bounds starts — a too-large pad would silently overwrite
-        # already-admitted queries.
-        if self._tail + max(n, sv.size) > self.capacity:
-            raise ValueError(
-                f"injecting {n} queries (padded to {sv.size}) overflows the "
-                f"stream buffer ({self._tail}/{self.capacity} used); "
-                "harvest + rebuild the stream, or raise capacity "
-                "(WalkService rotates generations for you)")
-        self.state = inject_queries(self.state, jnp.asarray(sv), n)
-        self._tail += n
+    @property
+    def num_slots(self) -> int:
+        return self._cfg.num_slots
+
+    @property
+    def max_hops(self) -> int:
+        return self.program.max_hops
+
+    @property
+    def cfg(self):
+        return self._cfg
+
+    def _device_inject(self, qids, starts, epochs) -> None:
+        n = qids.shape[0]
+        b = min(_pad_block(n), self.capacity)
+        qb = np.full((b,), self.capacity, np.int32)  # capacity = inert pad
+        sb = np.zeros((b,), np.int32)
+        eb = np.zeros((b,), np.int32)
+        qb[:n], sb[:n], eb[:n] = qids, starts, epochs
+        self.state = inject_queries(self.state, jnp.asarray(qb),
+                                    jnp.asarray(sb), jnp.asarray(eb), n)
 
     def advance(self, k: int = 16) -> int:
         """Run at most ``k`` supersteps; returns how many executed."""
@@ -249,24 +404,133 @@ class WalkStream:
         self.state = self._runner(self.graph, self.state, self.seed, k)
         return int(self.state.stats.supersteps) - before
 
-    @property
-    def num_injected(self) -> int:
-        return self._tail
-
     def done_mask(self) -> np.ndarray:
-        """(capacity,) bool — True where that query id has terminated."""
+        """(capacity,) bool — True where that slot's query terminated."""
         return np.asarray(self.state.done)
 
-    def harvest(self, lo: int = 0, hi: Optional[int] = None):
-        """Recorded (paths, lengths) for query ids [lo, hi) as numpy."""
-        hi = self._tail if hi is None else hi
-        return (np.asarray(self.state.paths[lo:hi]),
-                np.asarray(self.state.lengths[lo:hi]))
+    def harvest_ids(self, qids):
+        """Recorded (paths, lengths) rows for the given slot ids."""
+        idx = jnp.asarray(np.asarray(qids, np.int32))
+        return (np.asarray(self.state.paths[idx]),
+                np.asarray(self.state.lengths[idx]))
 
-    def drain(self, chunk: int = 64, max_chunks: int = 100_000) -> None:
-        """Advance until every injected query is done."""
-        for _ in range(max_chunks):
-            if bool(self.done_mask()[: self._tail].all()):
-                return
-            self.advance(chunk)
-        raise RuntimeError("stream did not drain (engine stalled?)")
+    def walk_stats(self) -> WalkStats:
+        """Engine counters since construction/reset (host ints)."""
+        return WalkStats(*(int(getattr(self.state.stats, f))
+                           for f in WalkStats._fields))
+
+    def reset(self, seed: Optional[int] = None) -> None:
+        """Fresh state and ring (keeps the compiled runner warm); pass a
+        new ``seed`` to decorrelate from previous runs."""
+        if self._live.any():
+            raise RuntimeError("reset with live queries outstanding")
+        if seed is not None:
+            self.seed = seed
+        self.state = init_stream_state(self._cfg, self.capacity)
+        self._init_ring()
+
+
+class ShardedWalkStream(_StreamBase):
+    """Persistent sharded open-system stream (``backend="sharded"``).
+
+    Same interface and same ring economy as :class:`WalkStream`, running
+    over the capability-dispatched distributed superstep: arrivals are
+    staged round-robin onto per-device arrival rings and the butterfly
+    router carries each new task to owner(start_vertex); the psum
+    flow-control admits injections only while global live tasks stay
+    ≤ N·W_loc, so the closed engine's losslessness (drops == 0) carries
+    over to the open system.  Harvest max-folds the per-device path
+    windows (each hop is recorded by exactly the device that executed it).
+
+    Bit-identity: the ``(epoch, qid)`` occupant samples exactly the walk
+    ``Walker.run`` samples for query ``qid`` under
+    ``rng.stream_key(seed, epoch)`` — identical across backends.
+    """
+
+    def __init__(self, program: WalkProgram, cfg, pg: PartitionedGraph,
+                 mesh, capacity: int, seed: int):
+        if capacity <= 0:
+            raise ValueError(f"stream capacity must be positive, got "
+                             f"{capacity}")
+        self.program = program
+        self.graph = pg
+        self.seed = seed
+        self.capacity = int(capacity)
+        self._cfg = cfg
+        self._mesh = mesh
+        self._runner = make_sharded_stream_engine(pg, program.spec, cfg,
+                                                  mesh, self.capacity)
+        self.state = init_dist_stream_state(pg, program.spec, cfg,
+                                            self.capacity)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._next_dev = 0  # round-robin staging cursor
+        self._init_ring()
+
+    @property
+    def num_slots(self) -> int:
+        return self.graph.num_devices * self._cfg.slots_per_device
+
+    @property
+    def max_hops(self) -> int:
+        return self.program.max_hops
+
+    @property
+    def cfg(self):
+        return self._cfg
+
+    def _device_inject(self, qids, starts, epochs) -> None:
+        n = qids.shape[0]
+        N = self.graph.num_devices
+        per_dev = -(-n // N)
+        b = min(_pad_block(per_dev), self.capacity)
+        qb = np.zeros((N, b), np.int32)
+        sb = np.zeros((N, b), np.int32)
+        eb = np.zeros((N, b), np.int32)
+        cnt = np.zeros((N,), np.int32)
+        for i in range(n):
+            r = (self._next_dev + i) % N
+            qb[r, cnt[r]] = qids[i]
+            sb[r, cnt[r]] = starts[i]
+            eb[r, cnt[r]] = epochs[i]
+            cnt[r] += 1
+        self._next_dev = (self._next_dev + n) % N
+        self.state = inject_stream_queries(
+            self.state, jnp.asarray(sb), jnp.asarray(qb), jnp.asarray(eb),
+            jnp.asarray(cnt))
+
+    def advance(self, k: int = 16) -> int:
+        """Run at most ``k`` supersteps; returns how many executed."""
+        before = int(jnp.max(self.state.stats.supersteps))
+        self.state = self._runner(self.graph, self.state, self._base_key, k)
+        return int(jnp.max(self.state.stats.supersteps)) - before
+
+    def done_mask(self) -> np.ndarray:
+        """(capacity,) bool — a slot is done once any device terminated
+        its occupant's walk."""
+        return np.asarray(jnp.any(self.state.done, axis=0))
+
+    def harvest_ids(self, qids):
+        """Max-fold the per-device path windows for the given slot ids."""
+        idx = jnp.asarray(np.asarray(qids, np.int32))
+        paths = np.asarray(jnp.max(self.state.paths[:, idx, :], axis=0))
+        lengths = np.asarray(jnp.max(self.state.lengths[:, idx], axis=0))
+        return paths, lengths
+
+    def walk_stats(self) -> WalkStats:
+        """Engine counters summed across devices (supersteps is the global
+        lockstep clock: max)."""
+        return WalkStats(*(
+            int(jnp.max(v)) if name == "supersteps" else int(jnp.sum(v))
+            for name, v in zip(WalkStats._fields, self.state.stats)))
+
+    def reset(self, seed: Optional[int] = None) -> None:
+        """Fresh state and ring (keeps the compiled runner warm)."""
+        if self._live.any():
+            raise RuntimeError("reset with live queries outstanding")
+        if seed is not None:
+            self.seed = seed
+            self._base_key = jax.random.PRNGKey(seed)
+        self.state = init_dist_stream_state(self.graph, self.program.spec,
+                                            self._cfg, self.capacity)
+        self._next_dev = 0
+        self._init_ring()

@@ -32,12 +32,16 @@ def hypothesis_or_stubs():
     return given, settings, st
 
 
-def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600):
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600,
+                      extra_path: str | None = None):
     """Run a python snippet with N forced host devices (device count is
-    locked at first jax init, so multi-device tests need a fresh process)."""
+    locked at first jax init, so multi-device tests need a fresh process).
+    ``extra_path`` adds a directory to the subprocess PYTHONPATH (e.g. a
+    tmp dir holding a generated helper module)."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC
+    env["PYTHONPATH"] = SRC if extra_path is None else os.pathsep.join(
+        [SRC, extra_path])
     r = subprocess.run([sys.executable, "-c", code], env=env,
                        capture_output=True, text=True, timeout=timeout)
     if r.returncode != 0:

@@ -90,7 +90,8 @@ slots = WalkerSlots(
     v_prev=jnp.full((S,), -1, jnp.int32),
     query_id=jnp.asarray(np.arange(S), jnp.int32),
     hop=jnp.zeros((S,), jnp.int32),
-    active=jnp.asarray(rng.random(S) < 0.8))
+    active=jnp.asarray(rng.random(S) < 0.8),
+    epoch=jnp.zeros((S,), jnp.int32))
 dest = jnp.asarray(rng.integers(0, N, S), jnp.int32)
 prio = jnp.ones((S,), jnp.int32)
 rr = router.pack_buckets(slots, dest, prio, N, K, R)

@@ -1,12 +1,15 @@
 """Streaming (open-system) engine + WalkService: chunked/one-shot parity,
-mid-stream injection, multi-tenant harvesting, generation rotation."""
+mid-stream injection, multi-tenant harvesting, and the ring-buffer slot
+economy (continuous reclamation, epoch-salted RNG, no drain barrier)."""
 import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import EngineConfig
+from conftest import run_in_subprocess
+from repro import walker
+from repro.core import EngineConfig, rng as task_rng
 from repro.core.samplers import SamplerSpec
 from repro.core.walk_engine import (init_stream_state, inject_queries,
                                     make_superstep_runner, run_walks)
@@ -27,6 +30,15 @@ def _drain_stream(runner, graph, state, seed, chunk):
     raise AssertionError("stream did not drain")
 
 
+def _inject_fresh(state, starts, qid0=0):
+    """Engine-level injection of fresh (epoch 0) queries into sequential
+    slots — the closed-batch special case of the ring economy."""
+    n = len(starts)
+    qids = jnp.arange(qid0, qid0 + n, dtype=jnp.int32)
+    return inject_queries(state, qids, jnp.asarray(starts, jnp.int32),
+                          jnp.zeros((n,), jnp.int32), n)
+
+
 @pytest.mark.parametrize("algo", sorted(SPECS))
 def test_chunked_matches_oneshot(algo, small_graph, rng):
     """Parity: chunked run_supersteps == one-shot engine, bit-identical."""
@@ -37,7 +49,7 @@ def test_chunked_matches_oneshot(algo, small_graph, rng):
 
     runner = make_superstep_runner(spec, CFG)
     state = init_stream_state(CFG, capacity=300)
-    state = inject_queries(state, jnp.asarray(starts), 300)
+    state = _inject_fresh(state, starts)
     state = _drain_stream(runner, small_graph, state, seed=3, chunk=7)
     assert np.array_equal(p1, np.asarray(state.paths))
     assert np.array_equal(l1, np.asarray(state.lengths))
@@ -53,10 +65,10 @@ def test_midstream_injection_preserves_paths(small_graph, rng):
 
     runner = make_superstep_runner(spec, CFG)
     state = init_stream_state(CFG, capacity=200)
-    state = inject_queries(state, jnp.asarray(starts[:80]), 80)
+    state = _inject_fresh(state, starts[:80])
     state = runner(small_graph, state, 5, 4)
     assert not bool(np.asarray(state.done).all())
-    state = inject_queries(state, jnp.asarray(starts[80:]), 120)
+    state = _inject_fresh(state, starts[80:], qid0=80)
     state = _drain_stream(runner, small_graph, state, seed=5, chunk=6)
     assert np.array_equal(p1, np.asarray(state.paths))
     assert np.array_equal(l1, np.asarray(state.lengths))
@@ -64,22 +76,39 @@ def test_midstream_injection_preserves_paths(small_graph, rng):
 
 def test_inject_padding_is_inert(small_graph, rng):
     """Padded injection (fixed block shapes) must not create phantom
-    queries: tail advances by n_valid only and padding is overwritten."""
+    queries: tail advances by n_valid only, pad entries are dropped."""
     spec = SPECS["uniform"]
     starts = rng.integers(0, small_graph.num_vertices, 48).astype(np.int32)
     p1, l1 = run_walks(small_graph, starts, spec, CFG, seed=2).as_numpy()
 
     runner = make_superstep_runner(spec, CFG)
     state = init_stream_state(CFG, capacity=48)
-    pad1 = np.zeros((32,), np.int32)
-    pad1[:20] = starts[:20]
-    state = inject_queries(state, jnp.asarray(pad1), 20)
+    pad_q = np.full((32,), 48, np.int32)       # 48 = capacity = inert pad
+    pad_s = np.zeros((32,), np.int32)
+    pad_q[:20] = np.arange(20)
+    pad_s[:20] = starts[:20]
+    state = inject_queries(state, jnp.asarray(pad_q), jnp.asarray(pad_s),
+                           jnp.zeros((32,), jnp.int32), 20)
     assert int(state.queue.tail) == 20
-    pad2 = np.zeros((28,), np.int32)
-    pad2[:28] = starts[20:]
-    state = inject_queries(state, jnp.asarray(pad2), 28)
+    state = _inject_fresh(state, starts[20:], qid0=20)
     assert int(state.queue.tail) == 48
     state = _drain_stream(runner, small_graph, state, seed=2, chunk=5)
+    assert np.array_equal(p1, np.asarray(state.paths))
+    assert np.array_equal(l1, np.asarray(state.lengths))
+
+
+def test_legacy_inject_shim_warns_and_matches(small_graph, rng):
+    """The pre-ring inject_queries(state, starts, n_valid) form survives
+    as a deprecated shim with identical append-at-tail semantics."""
+    spec = SPECS["uniform"]
+    starts = rng.integers(0, small_graph.num_vertices, 40).astype(np.int32)
+    p1, l1 = run_walks(small_graph, starts, spec, CFG, seed=6).as_numpy()
+    runner = make_superstep_runner(spec, CFG)
+    state = init_stream_state(CFG, capacity=40)
+    with pytest.deprecated_call():
+        state = inject_queries(state, jnp.asarray(starts), 40)
+    assert int(state.queue.tail) == 40
+    state = _drain_stream(runner, small_graph, state, seed=6, chunk=5)
     assert np.array_equal(p1, np.asarray(state.paths))
     assert np.array_equal(l1, np.asarray(state.lengths))
 
@@ -90,7 +119,7 @@ def test_staged_watermark_tracks_arrivals(small_graph):
     spec = SPECS["uniform"]
     runner = make_superstep_runner(spec, CFG)
     state = init_stream_state(CFG, capacity=512)
-    state = inject_queries(state, jnp.zeros((16,), jnp.int32), 16)
+    state = _inject_fresh(state, np.zeros((16,), np.int32))
     state = runner(small_graph, state, 0, 3)
     assert int(state.queue.staged) <= int(state.queue.tail) == 16
     assert int(state.queue.head) <= int(state.queue.staged)
@@ -117,7 +146,7 @@ def test_service_two_waves(small_graph, rng):
     done = svc.drain()
     assert len(done) == 5 and svc.num_pending == svc.num_inflight == 0
 
-    ranges = []
+    seen = set()
     for rid, starts in zip(rids, waves):
         r = svc.poll(rid)
         assert r is not None and r.done
@@ -125,11 +154,13 @@ def test_service_two_waves(small_graph, rng):
         assert np.array_equal(r.paths[:, 0], starts)
         assert (r.lengths >= 1).all() and (r.lengths <= cfg.max_hops + 1).all()
         assert r.sojourn >= 1
-        ranges.append((r.generation, r.qid_lo, r.qid_hi))
-    # per-generation qid ranges are disjoint (multi-tenant isolation)
-    for i, (g1, lo1, hi1) in enumerate(ranges):
-        for g2, lo2, hi2 in ranges[i + 1:]:
-            assert g1 != g2 or hi1 <= lo2 or hi2 <= lo1
+        assert r.admission_wait >= 0
+        assert r.sojourn >= r.admission_wait
+        # (epoch, qid) identities are disjoint across tenants
+        ids = {(int(e), int(q)) for e, q in zip(r.epochs, r.qids)}
+        assert len(ids) == r.num_walks
+        assert not (ids & seen)
+        seen |= ids
 
     # harvested paths are real walks on the graph
     rp, col = np.asarray(small_graph.row_ptr), np.asarray(small_graph.col)
@@ -140,9 +171,10 @@ def test_service_two_waves(small_graph, rng):
             assert v in col[rp[u]:rp[u + 1]]
 
 
-def test_service_rotation_bounded_buffer(small_graph, rng):
+def test_service_ring_reclamation_bounded_buffer(small_graph, rng):
     """An unbounded request stream is served with a bounded device buffer
-    via generation rotation; all requests still complete."""
+    via ring-buffer slot reclamation (no rotation, no drain barrier): all
+    requests complete and recycled slots carry bumped epochs."""
     svc = WalkService(small_graph, SPECS["uniform"],
                       dataclasses.replace(CFG, max_hops=6),
                       capacity=64, chunk=4, seed=2)
@@ -150,9 +182,18 @@ def test_service_rotation_bounded_buffer(small_graph, rng):
             for _ in range(6)]
     done = svc.drain()
     assert len(done) == 6
-    assert svc.generation >= 2
     assert all(svc.poll(rid).done for rid in rids)
     assert int(svc.walk_stats().terminations) == 6 * 32
+    # 6 x 32 = 192 walks through 64 slots: slots recycled at least twice
+    assert max(int(r.epochs.max()) for r in done) >= 2
+    # a recycled slot's occupants have strictly increasing epochs
+    by_slot = {}
+    for r in done:
+        for e, q in zip(r.epochs, r.qids):
+            by_slot.setdefault(int(q), []).append(int(e))
+    assert any(len(v) > 1 for v in by_slot.values())
+    for q, epochs in by_slot.items():
+        assert len(set(epochs)) == len(epochs), f"slot {q} epoch reused"
 
 
 def test_open_load_below_saturation_completes(small_graph):
@@ -166,4 +207,124 @@ def test_open_load_below_saturation_completes(small_graph):
     assert a.requests == 20
     assert a.walks == 20 * 8
     assert a.p50_sojourn <= a.p99_sojourn < float("inf")
+    assert a.p50_admission_wait <= a.p99_admission_wait < float("inf")
     assert 0.0 <= a.bubble_ratio <= 1.0
+
+
+# ------------------------------------------------------- streaming soak
+
+
+def _soak_stream(stream, make_reference, graph, capacity, total, rng,
+                 inject_wave=8, chunk=5):
+    """Push ``total`` (> capacity) queries through a small slot ring,
+    asserting the ring-economy invariants:
+
+      * every (epoch, qid) identity is harvested exactly once,
+      * each slot's occupant epochs strictly increase,
+      * per epoch, harvested paths are bit-identical to a closed-batch
+        ``Walker.run`` under ``rng.stream_key(seed, epoch)``.
+    """
+    pending = [rng.integers(0, graph.num_vertices, 1).astype(np.int32)[0]
+               for _ in range(total)]
+    harvested = {}          # (epoch, qid) -> (start, path, length)
+    live = {}               # qid -> (epoch, start)
+    max_epoch_seen = np.full((capacity,), -1, np.int64)
+    while pending or live:
+        n = min(inject_wave, stream.num_free, len(pending))
+        if n:
+            wave = np.asarray(pending[:n], np.int32)
+            del pending[:n]
+            qids, epochs = stream.inject(wave)
+            for q, e, s in zip(qids, epochs, wave):
+                assert int(e) > max_epoch_seen[q], "epoch must increase"
+                max_epoch_seen[q] = int(e)
+                live[int(q)] = (int(e), int(s))
+        stream.advance(chunk)
+        done = stream.done_live_mask()
+        ready = [q for q in live if done[q]]
+        if ready:
+            paths, lengths = stream.harvest_ids(ready)
+            for i, q in enumerate(ready):
+                e, s = live.pop(q)
+                key = (e, q)
+                assert key not in harvested, f"{key} harvested twice"
+                harvested[key] = (s, paths[i].copy(), int(lengths[i]))
+            stream.release(ready)
+
+    assert len(harvested) == total
+    assert int(stream.walk_stats().drops) == 0
+
+    # per-epoch closed-batch reference under the epoch-salted key
+    by_epoch = {}
+    for (e, q), rec in harvested.items():
+        by_epoch.setdefault(e, {})[q] = rec
+    assert len(by_epoch) >= 2, "soak must actually recycle slots"
+    for e, rows in by_epoch.items():
+        starts_e = np.zeros((capacity,), np.int32)
+        for q, (s, _, _) in rows.items():
+            starts_e[q] = s
+        ref = make_reference(starts_e, task_rng.stream_key(stream.seed, e))
+        ep, el = ref.as_numpy()
+        for q, (_, path, length) in rows.items():
+            assert np.array_equal(ep[q], path), (e, q)
+            assert el[q] == length, (e, q)
+
+
+@pytest.mark.parametrize("algo", sorted(SPECS))
+def test_soak_single_device_ring(algo, small_graph, rng):
+    """≥3× capacity queries through a 32-slot single-device ring."""
+    program = walker.WalkProgram(spec=SPECS[algo], max_hops=8)
+    w = walker.compile(program,
+                       execution=walker.ExecutionConfig(num_slots=16))
+    stream = w.stream(small_graph, capacity=32, seed=11)
+    _soak_stream(stream, lambda s, k: w.run(small_graph, s, seed=k),
+                 small_graph, capacity=32, total=100, rng=rng)
+
+
+SHARDED_SOAK = r"""
+import numpy as np
+from repro import walker
+from repro.graph import make_dataset, partition_graph
+from tests_soak import soak
+
+g = make_dataset("WG", scale_override=9)
+pg = partition_graph(g, 2)
+for algo in ("urw", "node2vec"):
+    if algo == "urw":
+        program = walker.WalkProgram.urw(8)
+    else:
+        program = walker.WalkProgram.node2vec(2.0, 0.5, 8)
+    sharded = walker.compile(
+        program, backend="sharded",
+        execution=walker.ExecutionConfig(slots_per_device=8))
+    single = walker.compile(
+        program, execution=walker.ExecutionConfig(num_slots=16))
+    stream = sharded.stream(pg, capacity=32, seed=11)
+    soak(stream, lambda s, k: single.run(g, s, seed=k), g,
+         capacity=32, total=100)
+print("SHARDED_SOAK_OK")
+"""
+
+
+@pytest.mark.slow
+def test_soak_sharded_ring_two_devices(tmp_path):
+    """≥3× capacity queries through a 2-device sharded ring; per-epoch
+    paths bit-identical to the single-device closed batch."""
+    import inspect
+    import os
+    import textwrap
+
+    # Ship the soak harness to the subprocess as a module so both soak
+    # tests share one implementation.
+    src = (
+        "import numpy as np\n"
+        "from repro.core import rng as task_rng\n"
+        + textwrap.dedent(inspect.getsource(_soak_stream)).replace(
+            "_soak_stream", "_soak_impl")
+        + "\ndef soak(stream, ref, graph, capacity, total):\n"
+        "    _soak_impl(stream, ref, graph, capacity, total,\n"
+        "               np.random.default_rng(0))\n")
+    (tmp_path / "tests_soak.py").write_text(src)
+    out = run_in_subprocess(SHARDED_SOAK, devices=2,
+                            extra_path=os.fspath(tmp_path))
+    assert "SHARDED_SOAK_OK" in out

@@ -109,6 +109,16 @@ for name, program, kwargs in cases:
     dp, dl = res.as_numpy()
     assert (dp == rp).all() and (dl == rl).all(), name
     assert int(np.asarray(res.stats.drops)) == 0, name
+
+    # sharded *streaming* (ring substrate): same walks, mid-flight inject
+    stream = sharded.stream(pg, capacity=160, seed=4)
+    stream.inject(starts[:70])
+    stream.advance(3)
+    stream.inject(starts[70:])
+    stream.drain(chunk=7)
+    sp, sl = stream.harvest()
+    assert (sp == rp).all() and (sl == rl).all(), name
+    assert int(stream.walk_stats().drops) == 0, name
 print("SHARDED_PARITY_OK")
 """
 
@@ -116,7 +126,8 @@ print("SHARDED_PARITY_OK")
 @pytest.mark.slow
 def test_sharded_parity_two_devices():
     """Every distributable algorithm, 2-device sharded backend ==
-    single-device reference, through compile(program, backend='sharded')."""
+    single-device reference, through compile(program, backend='sharded') —
+    closed batch AND open stream over the same ring substrate."""
     out = run_in_subprocess(SHARDED_PARITY, devices=2)
     assert "SHARDED_PARITY_OK" in out
 
@@ -197,20 +208,27 @@ def test_stream_admission_overflow(rich_graph, rng):
         stream.inject(rng.integers(0, rich_graph.num_vertices, 1))
 
 
-def test_stream_padded_inject_respects_buffer(rich_graph, rng):
-    """A padded injection whose PAD (not just its valid prefix) would spill
-    past the buffer must be rejected: dynamic_update_slice clamps OOB
-    writes and would silently overwrite admitted queries."""
+def test_stream_release_recycles_slots(rich_graph, rng):
+    """Ring economy: released slots are re-issued FIFO with epoch + 1;
+    releasing an unfinished or non-live slot is rejected."""
     stream = walker.compile(walker.WalkProgram.urw(4)).stream(
         rich_graph, capacity=8)
-    first = rng.integers(0, rich_graph.num_vertices, 6).astype(np.int32)
-    stream.inject(first)
-    padded = np.zeros(4, np.int32)  # 2 valid + 2 pad: pad spills past 8
-    with pytest.raises(ValueError, match="padded"):
-        stream.inject(padded, n_valid=2)
-    # the admitted queries were not clobbered
-    assert np.array_equal(
-        np.asarray(stream.state.queue.start_vertex[:6]), first)
+    starts = rng.integers(0, rich_graph.num_vertices, 8).astype(np.int32)
+    qids, epochs = stream.inject(starts)
+    assert np.array_equal(qids, np.arange(8)) and (epochs == 0).all()
+    assert stream.num_free == 0
+    with pytest.raises(ValueError, match="unfinished"):
+        stream.release(qids[:2])
+    stream.drain(chunk=4)
+    with pytest.raises(ValueError, match="duplicate"):
+        stream.release([qids[0], qids[0]])
+    stream.release(qids[:3])
+    assert stream.num_free == 3
+    with pytest.raises(ValueError, match="not live"):
+        stream.release(qids[:1])           # double release
+    q2, e2 = stream.inject(starts[:3])
+    assert np.array_equal(q2, qids[:3]) and (e2 == 1).all()
+    assert stream.num_injected == 11
 
 
 # ---------------------------------------------------- API snapshot + shims
@@ -225,11 +243,17 @@ def test_public_api_snapshot():
         "compile",
         "Walker",
         "WalkStream",
+        "ShardedWalkStream",
         "BACKENDS",
     ]
     assert walker.BACKENDS == ("single", "sharded")
     for name in walker.__all__:
         assert getattr(walker, name) is not None
+    # the two stream backends expose one interface (WalkService contract)
+    for method in ("inject", "advance", "done_mask", "harvest_ids",
+                   "release", "walk_stats", "reset", "drain"):
+        assert callable(getattr(walker.WalkStream, method))
+        assert callable(getattr(walker.ShardedWalkStream, method))
 
 
 def test_deprecated_names_importable():
