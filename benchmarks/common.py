@@ -44,5 +44,11 @@ def bench_walk(g, starts, program: WalkProgram,
     return dt, analyze_run(out.stats, dt)
 
 
+# Rows emitted by every suite, in order — `run.py --json` slices this per
+# suite into the machine-readable {suite: {name: {us_per_call, derived}}}.
+RECORDS: list[tuple[str, float, str]] = []
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    RECORDS.append((name, float(us_per_call), str(derived)))

@@ -24,6 +24,7 @@ MODES = {
     "+scheduler": dict(mode="zero_bubble", step_impl="jnp"),
     "+async": dict(mode="static", step_impl="pallas"),
     "full": dict(mode="zero_bubble", step_impl="pallas"),
+    "+fused": dict(mode="zero_bubble", step_impl="fused"),
 }
 
 
@@ -38,7 +39,8 @@ def run(quick: bool = False):
         starts = np.random.default_rng(3).integers(0, g.num_vertices, queries)
         base_ss = None
         for label, kw in MODES.items():
-            if quick and kw["step_impl"] == "pallas":
+            if quick and kw["step_impl"] != "jnp":
+                # kernel impls run interpreted off-TPU — full mode only
                 continue
             ex = dataclasses.replace(
                 ExecutionConfig(num_slots=slots, record_paths=False), **kw)

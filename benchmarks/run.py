@@ -1,18 +1,24 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness (deliverable d): one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run            # quick suite
-  PYTHONPATH=src python -m benchmarks.run --full     # full sizes
+  PYTHONPATH=src python -m benchmarks.run                     # quick suite
+  PYTHONPATH=src python -m benchmarks.run --full              # full sizes
+  PYTHONPATH=src python -m benchmarks.run --json BENCH.json   # + machine-
+      readable {suite: {name: {us_per_call, derived}}} with a per-
+      algorithm walks/sec summary across step_impl ∈ {jnp, pallas, fused}
 
 Fig. 8  — vs statically-scheduled FPGA-baseline analogue
 Fig. 9  — per-algorithm throughput across datasets
-Fig. 10 — RMAT balanced vs Graph500 skew robustness
+Fig. 10 — RMAT balanced vs Graph500 skew robustness (+ degree-adaptive
+          reservoir scan for weighted Node2Vec)
 Fig. 11 — scheduler/async ablation breakdown
 Table III — channel (device) scaling of the distributed engine
 Table IV  — per-kernel on-chip budgets (TPU analogue of LUT/BRAM)
 Roofline  — dry-run derived compute/memory/collective terms (§Roofline)
+step_impl — walks/sec across the jnp / pallas / fused superstep impls
 """
 import argparse
+import json
 import sys
 import time
 
@@ -21,12 +27,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON to PATH")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from benchmarks import (fig8_fpga_baselines, fig9_throughput,
+    from benchmarks import (common, fig8_fpga_baselines, fig9_throughput,
                             fig10_rmat_skew, fig11_ablation, roofline,
-                            serve_walks, table3_scaling, table4_kernels)
+                            serve_walks, step_impl_matrix, table3_scaling,
+                            table4_kernels)
     suites = {
         "fig8": fig8_fpga_baselines.run,
         "fig9": fig9_throughput.run,
@@ -36,18 +45,42 @@ def main() -> None:
         "table4": table4_kernels.run,
         "roofline": roofline.run,
         "serve": serve_walks.run,
+        "step_impl": step_impl_matrix.run,
     }
     print("name,us_per_call,derived")
+    payload = {}
+    failed = []
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
         t0 = time.time()
+        start = len(common.RECORDS)
         try:
-            fn(quick=quick)
+            ret = fn(quick=quick)
         except Exception as e:  # a failing suite must not hide the others
-            print(f"{name}_SUITE_ERROR,0.0,{type(e).__name__}:{e}",
-                  flush=True)
+            ret = None
+            failed.append(name)
+            common.emit(f"{name}_SUITE_ERROR", 0.0,
+                        f"{type(e).__name__}:{e}")
+        payload[name] = {
+            row_name: {"us_per_call": us, "derived": derived}
+            for row_name, us, derived in common.RECORDS[start:]
+        }
+        if name == "step_impl" and isinstance(ret, dict):
+            # per-algorithm walks/sec summary across the three impls
+            payload["walks_per_sec"] = ret
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
+    if failed:
+        # every suite ran (errors never hide the others), but the harness
+        # itself must fail CI when any suite crashed
+        print(f"# FAILED suites: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,57 @@
+"""Per-algorithm walks/sec across ``step_impl`` ∈ {jnp, pallas, fused}.
+
+The three implementations sample bit-identical walks (pinned by
+``tests/test_fused_step.py``); this suite tracks what each one *costs*:
+
+  * ``jnp``    — vectorized XLA superstep, one dispatch per hop.
+  * ``pallas`` — one-hop fused walk-step kernel inside the jnp superstep.
+  * ``fused``  — device-resident multi-hop superstep kernel
+                 (``hops_per_launch`` supersteps per launch).
+
+Off-TPU the Pallas kernels run in interpret mode, so the pallas/fused
+rows measure the interpreter, not the hardware — the suite pins the
+harness and the BENCH.json schema either way, and becomes the fused-
+pipeline headline number on a real TPU.  ``walks_per_s`` is completed
+queries per wall-second of the closed-batch drain.
+"""
+import numpy as np
+
+from benchmarks.common import bench_walk, emit
+from repro.graph import make_dataset
+from repro.walker import ExecutionConfig, WalkProgram
+
+IMPLS = ("jnp", "pallas", "fused")
+
+
+def _algos(hops):
+    return {
+        "urw": WalkProgram.urw(hops),
+        "ppr": WalkProgram.ppr(0.15, hops),
+        "deepwalk": WalkProgram.deepwalk(hops),
+    }
+
+
+def run(quick: bool = False):
+    scale = 9 if quick else 11
+    queries = 192 if quick else 1024
+    hops = 12 if quick else 40
+    slots = 64 if quick else 256
+    g = make_dataset("WG", scale_override=scale, weighted=True,
+                     with_alias=True)
+    starts = np.random.default_rng(1).integers(0, g.num_vertices, queries)
+    out = {}
+    for algo, program in _algos(hops).items():
+        for impl in IMPLS:
+            ex = ExecutionConfig(num_slots=slots, record_paths=False,
+                                 step_impl=impl, hops_per_launch=8)
+            dt, a = bench_walk(g, starts, program, ex, repeats=2)
+            wps = queries / dt
+            emit(f"impl_{algo}_{impl}", dt * 1e6,
+                 f"walks_per_s={wps:.1f};msteps={a.msteps_per_s:.3f};"
+                 f"supersteps_per_launch={a.supersteps_per_launch:.1f}")
+            out.setdefault(algo, {})[impl] = wps
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -22,6 +22,12 @@ ap.add_argument("--scale", type=int, default=12, help="RMAT scale")
 ap.add_argument("--queries", type=int, default=2000)
 ap.add_argument("--max-hops", type=int, default=80)
 ap.add_argument("--slots", type=int, default=512)
+ap.add_argument("--step-impl", default="jnp",
+                choices=["jnp", "pallas", "fused"],
+                help="superstep implementation (fused = device-resident "
+                     "multi-hop kernel; off-TPU it runs interpreted)")
+ap.add_argument("--hops-per-launch", type=int, default=16,
+                help="fused only: supersteps per kernel launch")
 args = ap.parse_args()
 
 # Graph500-skewed RMAT stand-in for web-Google (paper Table II).
@@ -32,7 +38,9 @@ print(f"graph: |V|={g.num_vertices} |E|={g.num_edges} "
 
 starts = np.random.default_rng(0).integers(0, g.num_vertices, args.queries)
 H = args.max_hops
-execution = walker.ExecutionConfig(num_slots=args.slots)
+execution = walker.ExecutionConfig(num_slots=args.slots,
+                                   step_impl=args.step_impl,
+                                   hops_per_launch=args.hops_per_launch)
 
 programs = [
     ("URW", walker.WalkProgram.urw(H)),
@@ -47,7 +55,8 @@ for name, program in programs:
     a = analyze_run(res.stats)
     paths, lengths = res.as_numpy()
     print(f"{name:16s} steps={a.steps:7d} supersteps={a.supersteps:5d} "
-          f"occupancy={a.occupancy:.2f} mean_len={lengths.mean():.1f}")
+          f"occupancy={a.occupancy:.2f} mean_len={lengths.mean():.1f} "
+          f"supersteps/launch={a.supersteps_per_launch:.1f}")
 
 paths, lengths = res.as_numpy()
 print("\nfirst MetaPath walk:", paths[0][: lengths[0]])

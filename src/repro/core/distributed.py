@@ -173,10 +173,13 @@ def _local_edge_exists(view: LocalView, src, dst_mat, N, v_per_dev):
 
 
 class _FirstOrderCap:
-    """Whole hop at owner(v_curr): Row Access → Sampling → Column Access."""
+    """Whole hop at owner(v_curr): Row Access → Sampling → Column Access.
+
+    ``hop0_inline`` is part of the shared capability constructor protocol
+    (hop 0 is an ordinary hop here, so it is accepted and ignored)."""
 
     def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
-                 v_per_dev: int, max_degree: int):
+                 v_per_dev: int, max_degree: int, hop0_inline: bool = True):
         self.spec, self.cfg = spec, cfg
         self.N, self.v_per_dev = num_devices, v_per_dev
 
@@ -229,10 +232,12 @@ class _TwoPhaseN2VCap:
     winner — same bounded-round semantics and same (seed, qid, hop)-derived
     uniforms as the single-device sampler ⇒ bit-identical walks.  Hop 0
     has no v_prev (bias ≡ 1) and verifies locally in phase A, which also
-    avoids an owner(-1) thundering-herd hotspot on device 0."""
+    avoids an owner(-1) thundering-herd hotspot on device 0.
+    ``hop0_inline`` (constructor protocol) is accepted and ignored: hop 0
+    verifies locally in phase A either way."""
 
     def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
-                 v_per_dev: int, max_degree: int):
+                 v_per_dev: int, max_degree: int, hop0_inline: bool = True):
         self.spec, self.cfg = spec, cfg
         self.N, self.v_per_dev = num_devices, v_per_dev
 
@@ -332,14 +337,26 @@ class _ChunkedReservoirCap:
     keys (every candidate masked invalid), so the scanned maximum — and
     bit-identity with the single-device sampler, which folds those same
     -inf chunks — is unchanged; only the superstep count drops, from
-    2·ceil(max_degree/chunk)+1 per hop to 2·ceil(deg(v_curr)/chunk)+1."""
+    2·ceil(max_degree/chunk)+1 per hop to 2·ceil(deg(v_curr)/chunk)+1.
+
+    Hop-0 prescan (``hop0_inline=False``, the closed engine): hop 0 is
+    the one hop whose whole scan is local (bias ≡ 1 without v_prev), so
+    the closed engine batches it *once* before the superstep loop
+    (:meth:`prescan_hop0`) instead of tracing the full chunked scan into
+    every superstep — refilled tasks enter the pool already at hop 1.
+    Draws still derive from ``(seed, qid, hop=0, chunk)``, so paths are
+    bit-identical; both the per-superstep critical path and the superstep
+    count shrink.  The streaming engine keeps the inline hop-0 path
+    (arrivals land mid-run)."""
 
     def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
-                 v_per_dev: int, max_degree: int):
+                 v_per_dev: int, max_degree: int, hop0_inline: bool = True):
         self.spec, self.cfg = spec, cfg
         self.N, self.v_per_dev = num_devices, v_per_dev
         self.CH = spec.reservoir_chunk
         self.n_chunks = es_num_chunks(max_degree, self.CH)
+        self.hop0_inline = hop0_inline
+        self.prescan = not hop0_inline
 
     def empty_pool(self, size: int) -> ReservoirSlots:
         return empty_reservoir_slots(size, self.CH)
@@ -360,6 +377,39 @@ class _ChunkedReservoirCap:
             best_idx=jnp.where(take, 0, slots.best_idx),
             last_chunk=jnp.where(take, False, slots.last_chunk),
         )
+
+    def prescan_hop0(self, view: LocalView, starts, qids, own, base_key):
+        """Batched hop-0 scan for the queries this device owns data for.
+
+        One vectorized E-S reservoir scan over all owned start vertices
+        (bias ≡ 1: no v_prev yet), with the exact (seed, qid, hop=0,
+        chunk) uniforms and the hop-0 stop draw the inline path uses —
+        bit-identical outcomes, evaluated once instead of inside every
+        superstep.  Returns ``(v1, adv0, term0, enter)``: the sampled
+        hop-1 vertex, whether the query advanced (a path record exists),
+        whether it terminated at the prescan, and whether it should enter
+        the slot pool (advanced and hop budget left).
+        """
+        spec, cfg = self.spec, self.cfg
+        zeros = jnp.zeros_like(qids)
+        addr, deg = _local_row_access(view, starts, self.N, self.v_per_dev)
+        if spec.stop_prob > 0.0:
+            u = task_rng.task_uniforms(base_key, qids, zeros, 1, SALT_STOP,
+                                       epoch=zeros)[:, 0]
+            stop = own & (u < spec.stop_prob)
+        else:
+            stop = jnp.zeros_like(own)
+        dead = own & ~stop & (deg == 0)
+        adv0 = own & ~stop & ~dead
+        scan_slots = WalkerSlots(
+            v_curr=starts, v_prev=jnp.full_like(starts, -1), query_id=qids,
+            hop=zeros, active=adv0, epoch=zeros)
+        idx0, _ = sample_reservoir_n2v(spec, view, addr, deg, scan_slots,
+                                       base_key)
+        v1 = view.col[jnp.clip(addr + idx0, 0, view.col.shape[-1] - 1)]
+        reached = adv0 & (1 >= cfg.max_hops)
+        term0 = stop | dead | reached
+        return v1, adv0, term0, adv0 & ~reached
 
     def step(self, view: LocalView, slots, mine, base_key) -> StepOut:
         spec, cfg = self.spec, self.cfg
@@ -385,9 +435,14 @@ class _ChunkedReservoirCap:
         dead = at_hop_start & ~stop & (deg == 0)
 
         # ---- hop 0: all-local scan (bias ≡ 1 without v_prev) ------------
-        hop0 = at_hop_start & ~stop & (slots.v_prev < 0) & (deg > 0)
-        idx0, _ = sample_reservoir_n2v(spec, view, addr, deg, slots, base_key)
-        v0 = view.col[jnp.clip(addr + idx0, 0, view.col.shape[-1] - 1)]
+        if self.hop0_inline:
+            hop0 = at_hop_start & ~stop & (slots.v_prev < 0) & (deg > 0)
+            idx0, _ = sample_reservoir_n2v(spec, view, addr, deg, slots,
+                                           base_key)
+            v0 = view.col[jnp.clip(addr + idx0, 0, view.col.shape[-1] - 1)]
+        else:  # closed engine: hop 0 was batched by prescan_hop0
+            hop0 = jnp.zeros_like(mine)
+            v0 = slots.v_curr
 
         # ---- gather: stage chunk c of (candidate, edge weight) ----------
         do_gather = is_gather & ~stop & ~dead & ~hop0
@@ -458,15 +513,22 @@ _CAPABILITIES = {
 
 
 def get_capability(spec: SamplerSpec, cfg: DistConfig, num_devices: int,
-                   v_per_dev: int, max_degree: int):
-    """Resolve the sampler's declared capability to an engine adapter."""
+                   v_per_dev: int, max_degree: int,
+                   hop0_inline: bool = True):
+    """Resolve the sampler's declared capability to an engine adapter.
+
+    ``hop0_inline=False`` (closed engine) lets capabilities that support
+    it (chunked reservoir) batch their hop-0 work into a one-time prescan
+    instead of the per-superstep critical path.
+    """
     name = spec.capability
     if name is None:
         raise NotImplementedError(
             f"sampler kind {spec.kind!r} declares no distributed "
             "capability (metapath type_offsets are not partitioned yet — "
             "see ROADMAP); run it on the single-device backend")
-    return _CAPABILITIES[name](spec, cfg, num_devices, v_per_dev, max_degree)
+    return _CAPABILITIES[name](spec, cfg, num_devices, v_per_dev, max_degree,
+                               hop0_inline=hop0_inline)
 
 
 # --------------------------------------------------------------------------
@@ -476,7 +538,7 @@ def get_capability(spec: SamplerSpec, cfg: DistConfig, num_devices: int,
 
 
 def _superstep_dist(cap, cfg: DistConfig, N: int, base_key, view,
-                    starts_loc, qcount, rank, carry):
+                    starts_loc, qcount, rank, seeds, carry):
     (slots, head, log_q, log_h, log_v, cursor, stats, done, t) = carry
     W_loc = cfg.slots_per_device
     K = cfg.bucket_cap(N)
@@ -524,15 +586,20 @@ def _superstep_dist(cap, cfg: DistConfig, N: int, base_key, view,
     take = free & (rank_free < avail)
     k_local = head + rank_free
     k_safe = jnp.clip(k_local, 0, starts_loc.shape[0] - 1)
+    # Refill seeds: the plain engine admits hop-0 tasks at the start
+    # vertex; a hop-0 prescan capability seeds hop-1 tasks (v_prev = the
+    # start) and skips queries the prescan already terminated (`enter`).
+    seed_vc, seed_vp, seed_hop, seed_enter = seeds
+    adm = take & seed_enter[k_safe]  # admitted to the pool
     slots = slots._replace(
-        v_curr=jnp.where(take, starts_loc[k_safe], slots.v_curr),
-        v_prev=jnp.where(take, -1, slots.v_prev),
-        query_id=jnp.where(take, k_local * N + rank, slots.query_id),
-        hop=jnp.where(take, 0, slots.hop),
-        active=slots.active | take,
-        epoch=jnp.where(take, 0, slots.epoch),  # closed batch == epoch 0
+        v_curr=jnp.where(adm, seed_vc[k_safe], slots.v_curr),
+        v_prev=jnp.where(adm, seed_vp[k_safe], slots.v_prev),
+        query_id=jnp.where(adm, k_local * N + rank, slots.query_id),
+        hop=jnp.where(adm, seed_hop[k_safe], slots.hop),
+        active=slots.active | adm,
+        epoch=jnp.where(adm, 0, slots.epoch),  # closed batch == epoch 0
     )
-    slots = cap.reset_extras(slots, take)
+    slots = cap.reset_extras(slots, adm)
     head = head + jnp.sum(take.astype(jnp.int32))
 
     # ---- route: butterfly all_to_all to each task's next home -----------
@@ -557,11 +624,67 @@ def _superstep_dist(cap, cfg: DistConfig, N: int, base_key, view,
         supersteps=stats.supersteps + 1,
         route_waits=stats.route_waits + rr.waits,
         drops=stats.drops + rr.drops + log_drop,
+        launches=stats.launches + 1,
     )
     n_live = jnp.sum(slots.active.astype(jnp.int32))
     remaining = jnp.maximum(qcount - head, 0)
     done = jax.lax.psum(n_live + remaining, cfg.axis_name) == 0
     return (slots, head, log_q, log_h, log_v, cursor, stats, done, t + 1)
+
+
+def _run_hop0_prescan(cap, cfg: DistConfig, N: int, rank, view: LocalView,
+                      starts_l, qcount_l, base_key, log_q, log_h, log_v):
+    """One-time batched hop-0 pass for prescan capabilities (closed engine).
+
+    All devices gather the global query list once; each device runs the
+    capability's vectorized hop-0 scan for the start vertices *it* owns,
+    logs the resulting hop-1 records locally, and a psum distributes the
+    hop-1 refill seeds back to the device staging each query.  Runs before
+    the superstep loop — O(Q) work once instead of a full reservoir scan
+    traced into every superstep.
+    """
+    q_loc = starts_l.shape[0]
+    starts_all = jax.lax.all_gather(starts_l, cfg.axis_name)   # (N, q_loc)
+    qcount_all = jax.lax.all_gather(qcount_l, cfg.axis_name)   # (N,)
+    ks = jnp.arange(q_loc, dtype=jnp.int32)
+    ranks = jnp.arange(N, dtype=jnp.int32)
+    qid_all = (ks[None, :] * N + ranks[:, None]).reshape(-1)
+    valid = (ks[None, :] < qcount_all[:, None]).reshape(-1)
+    sflat = starts_all.reshape(-1)
+    own = valid & (owner_of(sflat, N) == rank)
+    v1, adv0, term0, enter = cap.prescan_hop0(view, sflat, qid_all, own,
+                                              base_key)
+
+    # The owner that computed each hop-1 vertex logs its (qid, 1, v1)
+    # record — same emission-log discipline as the superstep.
+    log_drop = jnp.zeros((), jnp.int32)
+    cursor = jnp.zeros((), jnp.int32)
+    if cfg.record_paths:
+        cap_log = log_q.shape[0]
+        pos = jnp.cumsum(adv0.astype(jnp.int32)) - 1
+        keep = adv0 & (pos < cap_log)
+        p_safe = jnp.where(keep, pos, cap_log)
+        log_q = log_q.at[p_safe].set(jnp.where(adv0, qid_all, -1),
+                                     mode="drop")
+        log_h = log_h.at[p_safe].set(1, mode="drop")
+        log_v = log_v.at[p_safe].set(v1, mode="drop")
+        log_drop = jnp.sum((adv0 & ~keep).astype(jnp.int32))
+        cursor = jnp.minimum(jnp.sum(adv0.astype(jnp.int32)), cap_log)
+
+    stats0 = zero_stats()._replace(
+        steps=jnp.sum(adv0.astype(jnp.int32)),
+        terminations=jnp.sum(term0.astype(jnp.int32)),
+        drops=log_drop,
+    )
+
+    # Hand every device the hop-1 seeds for the queries IT stages: each
+    # query has exactly one owner, so a psum of owner-masked values is a
+    # broadcast of that owner's result.
+    v1_all = jax.lax.psum(jnp.where(enter, v1, 0), cfg.axis_name)
+    enter_all = jax.lax.psum(enter.astype(jnp.int32), cfg.axis_name) > 0
+    seeds = (v1_all.reshape(N, q_loc)[rank], starts_l,
+             jnp.ones_like(starts_l), enter_all.reshape(N, q_loc)[rank])
+    return seeds, log_q, log_h, log_v, cursor, stats0
 
 
 def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
@@ -574,7 +697,8 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
     N = pg.num_devices
     assert mesh.devices.size == N, (mesh.devices.size, N)
     v_per_dev = pg.vertices_per_device
-    cap = get_capability(spec, cfg, N, v_per_dev, pg.max_degree)
+    cap = get_capability(spec, cfg, N, v_per_dev, pg.max_degree,
+                         hop0_inline=False)
     P = jax.sharding.PartitionSpec
 
     has_w = pg.weights is not None
@@ -593,14 +717,26 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
         qcount_l = qcount[0, 0]
         S = cfg.pool_size(N)
         cap_log = cfg.log_capacity if cfg.record_paths else 1
+        log_q = jnp.full((cap_log,), -1, jnp.int32)
+        log_h = jnp.full((cap_log,), -1, jnp.int32)
+        log_v = jnp.full((cap_log,), -1, jnp.int32)
+        cursor = jnp.zeros((), jnp.int32)
+        stats0 = zero_stats()
+        # Default refill seeds: hop-0 tasks at the start vertex.
+        seeds = (starts_l, jnp.full_like(starts_l, -1),
+                 jnp.zeros_like(starts_l),
+                 jnp.ones(starts_l.shape, bool))
+        if getattr(cap, "prescan", False):
+            # ---- one-time batched hop-0 local scan (out of the
+            # per-superstep critical path; see _ChunkedReservoirCap) ----
+            seeds, log_q, log_h, log_v, cursor, stats0 = _run_hop0_prescan(
+                cap, cfg, N, rank, view, starts_l, qcount_l, base_key,
+                log_q, log_h, log_v)
         carry = (
             cap.empty_pool(S),
             jnp.zeros((), jnp.int32),
-            jnp.full((cap_log,), -1, jnp.int32),
-            jnp.full((cap_log,), -1, jnp.int32),
-            jnp.full((cap_log,), -1, jnp.int32),
-            jnp.zeros((), jnp.int32),
-            zero_stats(),
+            log_q, log_h, log_v, cursor,
+            stats0,
             jnp.asarray(False),
             jnp.zeros((), jnp.int32),
         )
@@ -609,7 +745,7 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
             return (~c[7]) & (c[8] < cfg.max_supersteps)
 
         step = partial(_superstep_dist, cap, cfg, N, base_key, view,
-                       starts_l, qcount_l, rank)
+                       starts_l, qcount_l, rank, seeds)
         carry = jax.lax.while_loop(cond, step, carry)
         _, head, log_q, log_h, log_v, cursor, stats, _, _ = carry
         return (log_q[None], log_h[None], log_v[None], cursor[None],
@@ -826,6 +962,7 @@ def _superstep_dist_stream(cap, cfg: DistConfig, N: int, capacity: int,
         supersteps=st.stats.supersteps + 1,
         route_waits=st.stats.route_waits + rr.waits,
         drops=st.stats.drops + rr.drops,
+        launches=st.stats.launches + 1,
     )
     n_live = jnp.sum(slots.active.astype(jnp.int32))
     pending = jnp.maximum(st.tail - head, 0)

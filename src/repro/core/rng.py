@@ -21,11 +21,117 @@ extra, so it is bit-for-bit the classic ``(seed, query_id, hop)``
 derivation — a closed-batch run *is* epoch 0 of a stream, and epoch ``e``
 of any stream equals a closed-batch run under :func:`stream_key`'s
 epoch-salted base key.
+
+Shared Threefry core
+--------------------
+:func:`threefry2x32` is an explicit, shape-agnostic implementation of the
+Threefry-2x32 block cipher that is bit-equal to ``jax.random``'s
+(``tests/test_fused_step.py`` pins the equality).  It exists so the *same*
+derivation runs in two places:
+
+  * the vectorized jnp superstep (``task_uniforms`` below — now direct
+    uint32 vector math instead of a ``vmap`` of ``jax.random.fold_in``),
+  * inside the fused Pallas superstep kernel
+    (`repro.kernels.fused_superstep`), where per-lane draws are computed
+    on SMEM scalars with zero HBM traffic — the literal ThundeRiNG
+    analogue.
+
+Both paths therefore sample identical walks for identical
+``(seed, epoch, query_id, hop, salt)`` tuples, which is what makes
+``step_impl="fused"`` bit-identical to ``step_impl="jnp"``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# Threefry-2x32 key-schedule parity constant (Salmon et al., SC'11).
+_THREEFRY_PARITY = np.uint32(0x1BD11BDA)
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """One Threefry-2x32 block: encrypt counter ``(x0, x1)`` under key
+    ``(k0, k1)``; returns the two output words.
+
+    Shape-agnostic uint32 math (scalars inside a Pallas kernel, (W,) or
+    (W, P) arrays in the jnp path) — bit-equal to the ``threefry2x32``
+    primitive ``jax.random`` lowers to, pinned by tests.
+    """
+    k0 = jnp.asarray(k0, jnp.uint32)
+    k1 = jnp.asarray(k1, jnp.uint32)
+    x0 = jnp.asarray(x0, jnp.uint32)
+    x1 = jnp.asarray(x1, jnp.uint32)
+    ks = (k0, k1, k0 ^ k1 ^ _THREEFRY_PARITY)
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for i in range(5):
+        for r in _ROTATIONS[i % 2]:
+            x0 = x0 + x1
+            x1 = (x1 << r) | (x1 >> (32 - r))
+            x1 = x0 ^ x1
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + np.uint32(i + 1)
+    return x0, x1
+
+
+def fold_in_pair(k0, k1, data):
+    """``jax.random.fold_in`` on an explicit (k0, k1) key pair: the data
+    word is encrypted as the counter ``(0, data)`` (a 32-bit datum's high
+    word is zero), yielding the folded key pair."""
+    data = jnp.asarray(data, jnp.uint32)
+    return threefry2x32(k0, k1, jnp.zeros_like(data), data)
+
+
+def task_key_pair(k0, k1, query_id, hop, salt, epoch=None):
+    """Per-task key pair from (seed[, epoch], query_id, hop, salt) — the
+    fold chain of :func:`task_fold` on explicit uint32 words (usable on
+    SMEM scalars inside a kernel).  ``epoch`` 0 / None reproduces the
+    legacy 3-tuple derivation bit-exactly."""
+    qid = jnp.asarray(query_id, jnp.uint32)
+    if epoch is not None:
+        e = jnp.asarray(epoch, jnp.int32)
+        s0, s1 = fold_in_pair(k0, k1, e.astype(jnp.uint32))
+        use_salted = e > 0
+        k0 = jnp.where(use_salted, s0, jnp.broadcast_to(
+            jnp.asarray(k0, jnp.uint32), s0.shape))
+        k1 = jnp.where(use_salted, s1, jnp.broadcast_to(
+            jnp.asarray(k1, jnp.uint32), s1.shape))
+    k0, k1 = fold_in_pair(k0, k1, qid)
+    k0, k1 = fold_in_pair(k0, k1, jnp.asarray(hop, jnp.uint32))
+    return fold_in_pair(k0, k1, jnp.asarray(salt, jnp.uint32))
+
+
+def bits_to_uniform(bits):
+    """uint32 random bits -> U[0, 1) float32, exactly as
+    ``jax.random.uniform``: keep the top 23 bits as the mantissa of a
+    float in [1, 2), subtract 1."""
+    f = jax.lax.bitcast_convert_type(
+        (jnp.asarray(bits, jnp.uint32) >> np.uint32(9))
+        | np.uint32(0x3F800000), jnp.float32)
+    return jnp.maximum(f - 1.0, 0.0)
+
+
+def _counter_pairs(num: int):
+    """Counter words for ``num`` 32-bit draws, split exactly as
+    ``jax.random``'s ``threefry_2x32`` does (odd sizes pad one zero)."""
+    pairs = (num + 1) // 2
+    x0 = np.arange(pairs, dtype=np.uint32)
+    x1 = np.where(np.arange(pairs) + pairs < num,
+                  np.arange(pairs) + pairs, 0).astype(np.uint32)
+    return x0, x1
+
+
+def key_bits(k0, k1, num: int):
+    """``num`` uint32 words from a key pair — bit-equal to
+    ``jax.random.bits(key, (num,), jnp.uint32)``.  ``k0``/``k1`` may carry
+    leading batch dims; the draw axis is appended last."""
+    x0, x1 = _counter_pairs(num)
+    k0 = jnp.asarray(k0, jnp.uint32)[..., None]
+    k1 = jnp.asarray(k1, jnp.uint32)[..., None]
+    y0, y1 = threefry2x32(k0, k1, x0[None, :], x1[None, :])
+    return jnp.concatenate([y0, y1], axis=-1)[..., :num]
 
 
 def task_fold(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
@@ -37,30 +143,16 @@ def task_fold(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
     ``epoch`` (per-task, optional) decorrelates successive occupants of a
     reused query slot; epoch 0 (or None) reproduces the legacy 3-tuple
     derivation exactly, so closed-batch walks are unchanged.
+
+    Returns a (W, 2) uint32 key array, bit-equal to the historical
+    ``vmap(fold_in∘fold_in∘fold_in)`` derivation.
     """
-    salt = jnp.asarray(salt, jnp.uint32)
-    salt_b = jnp.broadcast_to(salt, query_id.shape).astype(jnp.uint32)
-    if epoch is None:
-        def one(qid, h, s):
-            k = jax.random.fold_in(base_key, qid)
-            k = jax.random.fold_in(k, h)
-            return jax.random.fold_in(k, s)
-        return jax.vmap(one)(query_id.astype(jnp.uint32),
-                             hop.astype(jnp.uint32), salt_b)
-
-    ep = jnp.broadcast_to(jnp.asarray(epoch, jnp.int32), query_id.shape)
-
-    def one(qid, h, s, e):
-        # Both branches are computed under vmap; fold_in is cheap and the
-        # select keeps epoch 0 identical to the no-epoch derivation.
-        salted = jax.random.fold_in(base_key, e.astype(jnp.uint32))
-        kb = jnp.where(e > 0, salted, base_key)
-        k = jax.random.fold_in(kb, qid)
-        k = jax.random.fold_in(k, h)
-        return jax.random.fold_in(k, s)
-
-    return jax.vmap(one)(query_id.astype(jnp.uint32), hop.astype(jnp.uint32),
-                         salt_b, ep)
+    base = jnp.asarray(base_key, jnp.uint32)
+    salt_b = jnp.broadcast_to(jnp.asarray(salt, jnp.uint32),
+                              query_id.shape).astype(jnp.uint32)
+    k0, k1 = task_key_pair(base[..., 0], base[..., 1], query_id, hop, salt_b,
+                           epoch)
+    return jnp.stack([k0, k1], axis=-1)
 
 
 def stream_key(seed, epoch: int = 0) -> jax.Array:
@@ -79,7 +171,7 @@ def task_uniforms(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
                   num: int, salt=0, epoch=None) -> jnp.ndarray:
     """(W, num) iid U[0,1) draws, one row per task, derived statelessly."""
     keys = task_fold(base_key, query_id, hop, salt, epoch)
-    return jax.vmap(lambda k: jax.random.uniform(k, (num,)))(keys)
+    return bits_to_uniform(key_bits(keys[..., 0], keys[..., 1], num))
 
 
 def task_bits(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
@@ -87,4 +179,4 @@ def task_bits(base_key: jax.Array, query_id: jnp.ndarray, hop: jnp.ndarray,
     """(W, num) uint32 random bits per task (for kernels that do their own
     fixed-point arithmetic, mirroring the paper's 64-bit pipeline words)."""
     keys = task_fold(base_key, query_id, hop, salt, epoch)
-    return jax.vmap(lambda k: jax.random.bits(k, (num,), jnp.uint32))(keys)
+    return key_bits(keys[..., 0], keys[..., 1], num)

@@ -70,6 +70,8 @@ class RunAnalysis:
     route_waits: int
     drops: int
     msteps_per_s: float = float("nan")
+    launches: int = 0
+    supersteps_per_launch: float = float("nan")
 
     @property
     def zero_bubble(self) -> bool:
@@ -91,6 +93,8 @@ def analyze_run(stats: WalkStats, wall_time_s: float | None = None) -> RunAnalys
         bubble_ratio=ratio, starved_ratio=sratio, occupancy=1.0 - ratio,
         terminations=s["terminations"], route_waits=s["route_waits"],
         drops=s["drops"], msteps_per_s=msteps,
+        launches=s.get("launches", 0),
+        supersteps_per_launch=s["supersteps"] / max(s.get("launches", 0), 1),
     )
 
 

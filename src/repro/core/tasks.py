@@ -211,6 +211,12 @@ class WalkStats(NamedTuple):
     supersteps: jnp.ndarray   # wall supersteps executed
     route_waits: jnp.ndarray  # tasks that waited a superstep for routing capacity
     drops: jnp.ndarray        # tasks lost to capacity overflow (must be 0)
+    launches: jnp.ndarray     # kernel/superstep dispatches: the per-hop jnp
+                              # and pallas impls pay one launch per superstep
+                              # (launches == supersteps); the fused
+                              # device-resident kernel amortizes many
+                              # supersteps per launch, so
+                              # supersteps / launches is the fusion factor
 
     def bubble_ratio(self):
         return self.bubbles / jnp.maximum(self.slot_steps, 1)
@@ -218,9 +224,13 @@ class WalkStats(NamedTuple):
     def occupancy(self):
         return 1.0 - self.bubble_ratio()
 
+    def supersteps_per_launch(self):
+        return self.supersteps / jnp.maximum(self.launches, 1)
+
 
 def zero_stats() -> WalkStats:
-    return WalkStats(*(jnp.zeros((), jnp.int32) for _ in range(8)))
+    return WalkStats(*(jnp.zeros((), jnp.int32)
+                       for _ in range(len(WalkStats._fields))))
 
 
 class WalkResult(NamedTuple):

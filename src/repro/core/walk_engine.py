@@ -81,7 +81,7 @@ from repro.graph.csr import CSRGraph, column_access, row_access
 # Allowed scheduling modes / step implementations — shared with
 # ExecutionConfig so the two validation layers cannot drift.
 MODES = ("zero_bubble", "static")
-STEP_IMPLS = ("jnp", "pallas")
+STEP_IMPLS = ("jnp", "pallas", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,7 +93,11 @@ class EngineConfig:
     injection_delay: int = 0       # C supersteps of host->device latency
     queue_depth_factor: float = 1.0  # × Theorem VI.1 depth D
     max_supersteps: int = 1 << 20  # safety bound for the while loop
-    step_impl: str = "jnp"         # jnp | pallas (fused walk-step kernel)
+    step_impl: str = "jnp"         # jnp | pallas (one-hop kernel) | fused
+                                   # (device-resident multi-hop kernel)
+    hops_per_launch: int = 16      # fused only: supersteps per kernel launch
+                                   # (the k of the O(k·state) -> O(state)
+                                   # host-traffic reduction)
 
     def __post_init__(self):
         if self.num_slots <= 0:
@@ -123,6 +127,10 @@ class EngineConfig:
         if self.max_supersteps <= 0:
             raise ValueError(
                 f"max_supersteps must be positive, got {self.max_supersteps}")
+        if self.hops_per_launch <= 0:
+            raise ValueError(
+                f"hops_per_launch must be a positive superstep count per "
+                f"fused-kernel launch, got {self.hops_per_launch}")
 
 
 class StreamState(NamedTuple):
@@ -375,6 +383,9 @@ def _superstep(graph, spec, cfg, base_key, depth,
         terminations=stats.terminations
         + jnp.sum((terminated & slots.active).astype(jnp.int32)),
         supersteps=stats.supersteps + 1,
+        # The per-hop impls dispatch one device program per superstep; the
+        # fused kernel instead counts one launch per k supersteps.
+        launches=stats.launches + 1,
     )
 
     queue, head_hist = _advance_controller(queue, head_hist, cfg, depth)
@@ -387,6 +398,21 @@ def _work_left(state: StreamState):
     return (state.queue.head < state.queue.tail) | jnp.any(state.slots.active)
 
 
+def _effective_impl(spec: SamplerSpec, cfg: EngineConfig) -> str:
+    """Resolve ``cfg.step_impl``, falling back to ``jnp`` (with a warning)
+    for sampler kinds the fused kernel does not cover — the fallback is
+    bit-identical, only the launch cadence differs."""
+    if cfg.step_impl == "fused":
+        from repro.kernels.fused_superstep.ops import FUSED_KINDS
+        if spec.kind not in FUSED_KINDS:
+            warnings.warn(
+                f"step_impl='fused' covers samplers {FUSED_KINDS}; falling "
+                f"back to the bit-identical 'jnp' superstep for "
+                f"{spec.kind!r}", RuntimeWarning, stacklevel=3)
+            return "jnp"
+    return cfg.step_impl
+
+
 def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
     """Build a jitted ``run_supersteps(graph, state, seed, k) -> StreamState``.
 
@@ -394,8 +420,40 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
     work remains (no staged queries and no live lanes).  ``k`` is a traced
     scalar, so chunk sizes can vary call-to-call without recompilation; the
     host injects arrivals between chunks with :func:`inject_queries`.
+
+    With ``cfg.step_impl == "fused"`` the chunk is executed as
+    ``ceil(k / hops_per_launch)`` launches of the device-resident fused
+    kernel instead of ``k`` superstep bounces — same state protocol, same
+    bit-exact paths, O(state) host traffic per launch instead of per hop.
     """
     depth = _stage_depth(cfg)
+    impl = _effective_impl(spec, cfg)
+
+    if impl == "fused":
+        from repro.kernels.fused_superstep import build_fused_launch
+        launch = build_fused_launch(spec, cfg, depth)
+
+        @jax.jit
+        def run_supersteps(graph: CSRGraph, state: StreamState, seed,
+                           k) -> StreamState:
+            base_key = (jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0
+                        else seed)
+            k = jnp.asarray(k, jnp.int32)
+
+            def cond(carry):
+                i, st = carry
+                return (i < k) & _work_left(st)
+
+            def body(carry):
+                i, st = carry
+                kc = jnp.minimum(cfg.hops_per_launch, k - i)
+                return i + kc, launch(graph, st, base_key, kc)
+
+            _, state = jax.lax.while_loop(
+                cond, body, (jnp.zeros((), jnp.int32), state))
+            return state
+
+        return run_supersteps
 
     @jax.jit
     def run_supersteps(graph: CSRGraph, state: StreamState, seed,
@@ -424,7 +482,17 @@ def build_engine(spec: SamplerSpec, cfg: EngineConfig):
 
     Engine-layer builder used by `repro.walker.compile`; prefer the
     `Walker` front-end unless you are extending the engine itself.
+
+    ``step_impl="fused"`` drains the batch as a ``while_loop`` over
+    device-resident fused-kernel launches (``hops_per_launch`` supersteps
+    each) instead of per-hop superstep bounces — bit-identical paths,
+    O(state) host traffic per launch.
     """
+    impl = _effective_impl(spec, cfg)
+    fused_launch = None
+    if impl == "fused":
+        from repro.kernels.fused_superstep import build_fused_launch
+        fused_launch = build_fused_launch(spec, cfg, _stage_depth(cfg))
 
     @partial(jax.jit, static_argnames=("num_queries",))
     def run(graph: CSRGraph, start_vertices: jnp.ndarray, seed,
@@ -454,8 +522,16 @@ def build_engine(spec: SamplerSpec, cfg: EngineConfig):
         def cond(st):
             return _work_left(st) & (st.stats.supersteps < cfg.max_supersteps)
 
-        step = partial(_superstep, graph, spec, cfg, base_key, depth)
-        state = jax.lax.while_loop(cond, step, state)
+        if impl == "fused":
+            def body(st):
+                kc = jnp.minimum(cfg.hops_per_launch,
+                                 cfg.max_supersteps - st.stats.supersteps)
+                return fused_launch(graph, st, base_key, kc)
+
+            state = jax.lax.while_loop(cond, body, state)
+        else:
+            step = partial(_superstep, graph, spec, cfg, base_key, depth)
+            state = jax.lax.while_loop(cond, step, state)
         return WalkResult(paths=state.paths, lengths=state.lengths,
                           stats=state.stats)
 

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the perf-critical random-access hot spots.
 
-Validated in interpret mode on CPU; targeted at TPU (BlockSpec VMEM/SMEM
-tiling + async-copy DMA pipelining).  Each kernel ships with ``ops.py``
-(jitted wrapper) and ``ref.py`` (pure-jnp oracle).
+Validated in interpret mode on CPU; compiled on TPU (``interpret``
+defaults to ``jax.default_backend() != "tpu"`` — see `common.py`).  Each
+kernel ships with ``ops.py`` (jitted wrapper) and ``ref.py`` /
+engine-level oracle.
 """
+from repro.kernels.common import default_interpret
 from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.segment_sum import SegmentSumOp, segment_sum
 from repro.kernels.walk_step import walk_step_alias, walk_step_uniform

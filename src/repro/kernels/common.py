@@ -1,0 +1,17 @@
+"""Shared kernel-wrapper plumbing."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """Resolve a wrapper's per-call ``interpret`` override.
+
+    ``None`` (the default everywhere) means: compile the Pallas kernel on
+    a TPU backend, interpret its body elsewhere — so the same call sites
+    exercise the real kernels on hardware while CPU CI keeps validating
+    them in interpret mode.  Pass an explicit bool to force either.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -12,9 +12,11 @@ from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
 @partial(jax.jit, static_argnames=("tile_b", "interpret", "use_kernel"))
 def embedding_bag(indices, table, weights=None, tile_b: int = 128,
-                  interpret: bool = True, use_kernel: bool = True):
+                  interpret: bool | None = None, use_kernel: bool = True):
     """EmbeddingBag: (B, H) int32 indices (pad -1), (R, D) table ->
-    (B, D) weighted bag sums."""
+    (B, D) weighted bag sums.  ``interpret=None`` → interpret off-TPU."""
+    from repro.kernels.common import default_interpret
+    interpret = default_interpret(interpret)
     B, H = indices.shape
     if weights is None:
         weights = jnp.ones((B, H), table.dtype)

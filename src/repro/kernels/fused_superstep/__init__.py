@@ -1,0 +1,3 @@
+from repro.kernels.fused_superstep.ops import build_fused_launch
+
+__all__ = ["build_fused_launch"]

@@ -1,0 +1,329 @@
+"""Device-resident fused superstep — the paper's *perfectly pipelined*
+walker as ONE Pallas kernel (§V–VI), ``step_impl="fused"``.
+
+The per-hop impls (``jnp`` / ``pallas``) fuse at most one pipeline pass
+(Row Access → Sampling → Column Access) and bounce the entire lane pool,
+RNG key folds, stop draws, termination, path scatter, and refill through
+an XLA superstep on every hop — the launch-and-drain pattern
+statically-scheduled designs (FastRW/LightRW) suffer from.  This kernel
+instead keeps the whole machine resident on the device across ``k``
+supersteps per launch:
+
+  * **WalkerSlots + queue counters + stats stay in SMEM** for the entire
+    launch (the paper's single-pipeline-word task tuples, §V-A); the
+    staged query ring (order / start / epoch by slot id) is SMEM-resident
+    too, so zero-bubble refill is pure scalar work.
+  * **In-kernel ThundeRiNG analogue**: per-task uniforms are derived on
+    SMEM scalars via the shared :func:`repro.core.rng.threefry2x32` —
+    the same fold chain as the jnp path, so draws are bit-identical and
+    no random bits ever touch HBM (§VII).
+  * **Graph gathers stay asynchronous**: row access / column access /
+    alias-table probes issue the same double-buffered one-and-two-element
+    DMAs as `kernels/walk_step`, overlapping lane *i+1*'s fetch with lane
+    *i*'s sampling arithmetic (§V-B).
+  * **Async write-back**: only the per-hop path records stream out to the
+    HBM-resident path buffer (one-element DMA per advanced lane — the
+    paper's §IV-B streaming-window write-back); ``done``/``lengths`` ride
+    home once per launch with the SMEM state.
+  * **In-kernel termination + zero-bubble refill**: the PPR stop draw,
+    hop budget, dead-end detection, prefix-sum lane compaction, and the
+    Theorem VI.1 staging controller all run between hops without leaving
+    the kernel.
+
+Host↔device traffic per launch therefore drops from O(k · state) (per-hop
+superstep bouncing) to one state round-trip, and ``stats.launches`` counts
+1 per ``k`` supersteps instead of 1 per superstep — the fusion factor
+``supersteps / launches`` that `WalkStats.supersteps_per_launch` reports.
+
+Semantics are pinned bit-identical to the jnp superstep
+(`core/walk_engine.py`) for uniform and alias samplers, including PPR
+stop draws, both scheduling modes, and the open-system ring economy —
+``tests/test_fused_step.py``.  Layout note: slot state is (W,) and the
+query ring (Q,) in SMEM, which assumes the modest W/Q of a single core's
+lane pool; the HBM-resident buffers (graph CSR, alias tables, paths) are
+unbounded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import rng
+from repro.core.samplers import SALT_COLUMN, SALT_STOP, _uniform_index
+from repro.core.tasks import WalkStats
+from repro.kernels.walk_step.walk_step import gather1_loop, row_access_loop
+
+# WalkStats slot indices inside the SMEM stats vector.
+STAT = {f: i for i, f in enumerate(WalkStats._fields)}
+NUM_STATS = len(WalkStats._fields)
+
+
+def fused_superstep_kernel(
+        # ---- static configuration (bound via functools.partial) ----
+        num_vertices, num_edges, W, Q, max_hops, depth, delay,
+        stop_prob, alias, static_mode, record_paths,
+        # ---- inputs ----
+        key_ref, ctl_ref,
+        vcur_in, vprev_in, qid_in, hop_in, act_in, ep_in,
+        qctr_in, hist_in, stats_in, done_in, len_in,
+        qstart_ref, qorder_ref, qepoch_ref,
+        rp_ref, col_ref, prob_ref, alias_ref, paths_in,
+        # ---- outputs ----
+        vcur, vprev, qid_o, hop_o, act, ep_o,
+        qctr, hist, stats, done, len_o, paths,
+        # ---- scratch ----
+        stop_scr, u0_scr, u1_scr, addr_scr, deg_scr, idx_scr, vnext_scr,
+        term_scr,
+        rpbuf, rpsem, colbuf, colsem, probbuf, probsem, aliasbuf, aliassem,
+        wbuf, wsem, wmeta, wcnt):
+    del paths_in  # aliased with `paths` (input_output_aliases)
+    k0 = key_ref[0]
+    k1 = key_ref[1]
+    wcnt[0] = 0
+
+    def path_write(q, h, v):
+        """Async double-buffered single-record path write-back: start the
+        HBM store for this record and only wait when its staging slot is
+        needed again two writes later — lane i+1's sampling overlaps lane
+        i's store, like the row/column gathers."""
+        c = wcnt[0]
+        slot = jax.lax.rem(c, 2)
+
+        @pl.when(c >= 2)
+        def _():  # reclaim the slot: drain its in-flight store
+            pltpu.make_async_copy(
+                wbuf.at[slot],
+                paths.at[wmeta[slot, 0], pl.ds(wmeta[slot, 1], 1)],
+                wsem.at[slot]).wait()
+
+        wbuf[slot, 0] = v
+        wmeta[slot, 0] = q
+        wmeta[slot, 1] = h
+        pltpu.make_async_copy(wbuf.at[slot], paths.at[q, pl.ds(h, 1)],
+                              wsem.at[slot]).start()
+        wcnt[0] = c + 1
+
+    # ---- bring the launch-resident state into the output refs ----------
+    def cp_w(i, _):
+        vcur[i] = vcur_in[i]
+        vprev[i] = vprev_in[i]
+        qid_o[i] = qid_in[i]
+        hop_o[i] = hop_in[i]
+        act[i] = act_in[i]
+        ep_o[i] = ep_in[i]
+        return 0
+
+    jax.lax.fori_loop(0, W, cp_w, 0)
+
+    def cp_q(i, _):
+        done[i] = done_in[i]
+        if record_paths:
+            len_o[i] = len_in[i]
+        return 0
+
+    jax.lax.fori_loop(0, Q, cp_q, 0)
+    if not record_paths:
+        len_o[0] = len_in[0]
+    for i in range(3):
+        qctr[i] = qctr_in[i]
+    for i in range(delay + 1):
+        hist[i] = hist_in[i]
+    for i in range(NUM_STATS):
+        stats[i] = stats_in[i]
+    stats[STAT["launches"]] = stats[STAT["launches"]] + 1
+
+    # ---- one superstep (bit-identical to walk_engine._superstep) -------
+    def superstep(_s, carry):
+        head = qctr[0]
+        tail = qctr[2]
+        n_active = jax.lax.fori_loop(0, W, lambda i, a: a + act[i],
+                                     jnp.int32(0))
+        work = (head < tail) | (n_active > 0)
+
+        @pl.when(work)
+        def _():
+            # -- per-lane stop draw + sampling uniforms (in-kernel RNG) --
+            def lane_rng(i, _):
+                q = qid_o[i]
+                h = hop_o[i]
+                e = ep_o[i]
+                if stop_prob > 0.0:
+                    s0, s1 = rng.task_key_pair(k0, k1, q, h, SALT_STOP, e)
+                    b0, _b1 = rng.threefry2x32(s0, s1, jnp.uint32(0),
+                                               jnp.uint32(0))
+                    u = rng.bits_to_uniform(b0)
+                    stop_scr[i] = ((act[i] == 1)
+                                   & (u < stop_prob)).astype(jnp.int32)
+                else:
+                    stop_scr[i] = 0
+                c0, c1 = rng.task_key_pair(k0, k1, q, h, SALT_COLUMN, e)
+                if alias:
+                    y0, y1 = rng.threefry2x32(c0, c1, jnp.uint32(0),
+                                              jnp.uint32(1))
+                    u0_scr[i] = rng.bits_to_uniform(y0)
+                    u1_scr[i] = rng.bits_to_uniform(y1)
+                else:
+                    y0, _y1 = rng.threefry2x32(c0, c1, jnp.uint32(0),
+                                               jnp.uint32(0))
+                    u0_scr[i] = rng.bits_to_uniform(y0)
+                return 0
+
+            jax.lax.fori_loop(0, W, lane_rng, 0)
+
+            # -- Row Access: packed (addr, deg) DMA per lane -------------
+            def on_row(i, addr, deg):
+                v = vcur[i]
+                addr_scr[i] = addr
+                deg_scr[i] = jnp.where((v >= 0) & (v < num_vertices), deg, 0)
+
+            row_access_loop(W, lambda i: vcur[i], rp_ref, rpbuf, rpsem,
+                            num_vertices, on_row)
+
+            # -- Sampling: column draw (+ alias accept probes) -----------
+            def pick(i):
+                return jnp.clip(
+                    addr_scr[i] + _uniform_index(deg_scr[i], u0_scr[i]),
+                    0, num_edges - 1)
+
+            if alias:
+                def on_prob(i, p):
+                    # accept -> keep draw; reject -> resolved by alias probe
+                    idx_scr[i] = jnp.where(u1_scr[i] < p, 0, -1)
+
+                gather1_loop(W, pick, prob_ref, probbuf, probsem,
+                             num_edges, on_prob)
+
+                def on_alias(i, a):
+                    deg = deg_scr[i]
+                    kdraw = _uniform_index(deg, u0_scr[i])
+                    j = jnp.where(idx_scr[i] < 0, a, kdraw)
+                    j = jnp.clip(j, 0, jnp.maximum(deg - 1, 0))
+                    idx_scr[i] = jnp.clip(addr_scr[i] + j, 0, num_edges - 1)
+
+                gather1_loop(W, pick, alias_ref, aliasbuf, aliassem,
+                             num_edges, on_alias)
+            else:
+                def set_idx(i, _):
+                    idx_scr[i] = pick(i)
+                    return 0
+
+                jax.lax.fori_loop(0, W, set_idx, 0)
+
+            # -- Column Access -------------------------------------------
+            def on_col(i, v):
+                vnext_scr[i] = v
+
+            gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
+                         num_edges, on_col)
+
+            # -- terminate + advance + async path/done write-back --------
+            def lane_update(i, acc):
+                steps_acc, term_acc = acc
+                A = act[i] == 1
+                stop = stop_scr[i] == 1
+                ok = deg_scr[i] > 0
+                adv = A & (~stop) & ok
+                dead = A & (~stop) & (~ok)
+                nh = jnp.where(adv, hop_o[i] + 1, hop_o[i])
+                term = stop | dead | (adv & (nh >= max_hops))
+                term_scr[i] = term.astype(jnp.int32)
+                q = qid_o[i]
+                vprev[i] = jnp.where(adv, vcur[i], vprev[i])
+                vcur[i] = jnp.where(adv, vnext_scr[i], vcur[i])
+                hop_o[i] = nh
+
+                if record_paths:
+                    @pl.when(adv)
+                    def _():
+                        len_o[q] = nh + 1
+                        path_write(q, nh, vnext_scr[i])
+
+                @pl.when(term & A)
+                def _():
+                    done[q] = 1
+
+                return (steps_acc + adv.astype(jnp.int32),
+                        term_acc + (term & A).astype(jnp.int32))
+
+            n_steps, n_term = jax.lax.fori_loop(
+                0, W, lane_update, (jnp.int32(0), jnp.int32(0)))
+
+            # -- stats (same accounting as the jnp superstep) ------------
+            idle = W - n_active
+            upstream = (head < tail).astype(jnp.int32)
+            stats[STAT["steps"]] = stats[STAT["steps"]] + n_steps
+            stats[STAT["slot_steps"]] = stats[STAT["slot_steps"]] + W
+            stats[STAT["bubbles"]] = stats[STAT["bubbles"]] + idle
+            stats[STAT["starved"]] = stats[STAT["starved"]] + idle * upstream
+            stats[STAT["terminations"]] = (stats[STAT["terminations"]]
+                                           + n_term)
+            stats[STAT["supersteps"]] = stats[STAT["supersteps"]] + 1
+
+            # -- staging controller (Theorem VI.1, delayed observation) --
+            for j in range(delay):
+                hist[j] = hist[j + 1]
+            hist[delay] = head
+            staged = jnp.maximum(qctr[1],
+                                 jnp.minimum(hist[0] + depth, tail))
+            qctr[1] = staged
+
+            # -- zero-bubble prefix-sum refill from the order ring -------
+            if static_mode:
+                all_free = jax.lax.fori_loop(
+                    0, W,
+                    lambda i, a: a & ((act[i] == 0) | (term_scr[i] == 1)),
+                    True)
+            avail = jnp.maximum(staged - head, 0)
+
+            def lane_refill(i, acc):
+                rank, taken = acc
+                free = (act[i] == 0) | (term_scr[i] == 1)
+                if static_mode:
+                    free = free & all_free
+                take = free & (rank < avail)
+
+                @pl.when(take)
+                def _():
+                    pos = jax.lax.rem(head + rank, Q)
+                    nq = qorder_ref[pos]
+                    start = qstart_ref[nq]
+                    vcur[i] = start
+                    vprev[i] = -1
+                    qid_o[i] = nq
+                    hop_o[i] = 0
+                    act[i] = 1
+                    ep_o[i] = qepoch_ref[nq]
+                    if record_paths:
+                        len_o[nq] = 1
+                        path_write(nq, 0, start)
+
+                @pl.when((~take) & (term_scr[i] == 1))
+                def _():
+                    qid_o[i] = -1
+                    act[i] = 0
+
+                return (rank + free.astype(jnp.int32),
+                        taken + take.astype(jnp.int32))
+
+            _, n_taken = jax.lax.fori_loop(
+                0, W, lane_refill, (jnp.int32(0), jnp.int32(0)))
+            qctr[0] = head + n_taken
+
+        return carry
+
+    jax.lax.fori_loop(0, ctl_ref[0], superstep, 0)
+
+    if record_paths:
+        # Drain the (at most two) in-flight path stores before the launch
+        # returns its state.
+        c = wcnt[0]
+        for back in (2, 1):
+            @pl.when(c >= back)
+            def _(back=back):
+                slot = jax.lax.rem(c - back, 2)
+                pltpu.make_async_copy(
+                    wbuf.at[slot],
+                    paths.at[wmeta[slot, 0], pl.ds(wmeta[slot, 1], 1)],
+                    wsem.at[slot]).wait()

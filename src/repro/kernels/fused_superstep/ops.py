@@ -1,0 +1,125 @@
+"""Jitted public wrapper for the fused device-resident superstep kernel.
+
+``build_fused_launch(spec, cfg, depth)`` returns a jitted
+``launch(graph, state, base_key, k) -> StreamState`` that advances the
+open-system :class:`~repro.core.walk_engine.StreamState` by at most ``k``
+supersteps inside ONE Pallas launch (``k`` is traced — the host picks the
+``hops_per_launch`` cadence without recompiling).  The engine-level
+runners (`core/walk_engine.py`) drain a closed batch or chunk a stream by
+looping launches; everything between launches is exactly the jnp engine's
+host protocol (``inject_queries``, harvesting), so the two impls are
+interchangeable mid-stream.
+
+``interpret`` defaults to interpreting the kernel body off-TPU (CPU CI)
+and compiling on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tasks import WalkStats
+from repro.kernels.fused_superstep import fused_superstep as _k
+
+# Sampler kinds the fused kernel covers; the engine falls back to the jnp
+# superstep (with a RuntimeWarning) for everything else.
+FUSED_KINDS = ("uniform", "alias")
+
+
+def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
+    """Build the jitted single-launch runner for ``spec`` × ``cfg``."""
+    from repro.kernels.common import default_interpret
+    assert spec.kind in FUSED_KINDS, spec.kind
+    alias = spec.kind == "alias"
+    interpret = default_interpret(interpret)
+    W = cfg.num_slots
+    H = cfg.max_hops
+    C = cfg.injection_delay
+    record_paths = cfg.record_paths
+    stop_prob = float(spec.stop_prob)
+    static_mode = cfg.mode == "static"
+
+    @jax.jit
+    def launch(graph, state, base_key, k):
+        Q = state.done.shape[0]
+        nv = graph.row_ptr.shape[0] - 1
+        ne = graph.col.shape[0]
+        QL = Q if record_paths else 1
+        kernel = functools.partial(
+            _k.fused_superstep_kernel, nv, ne, W, Q, H, depth, C,
+            stop_prob, alias, static_mode, record_paths)
+        smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+        hbm = pl.BlockSpec(memory_space=pl.ANY)
+        s = state.slots
+        q = state.queue
+        stats_vec = jnp.stack(
+            [jnp.asarray(v, jnp.int32) for v in state.stats])
+        qctr = jnp.stack([q.head, q.staged, q.tail]).astype(jnp.int32)
+        if alias:
+            prob, ali = graph.alias_prob, graph.alias_idx
+        else:  # inert placeholders so the operand list is shape-stable
+            prob = jnp.zeros((1,), jnp.float32)
+            ali = jnp.zeros((1,), jnp.int32)
+        inputs = [
+            jnp.asarray(base_key, jnp.uint32),
+            jnp.asarray(k, jnp.int32).reshape(1),
+            s.v_curr, s.v_prev, s.query_id, s.hop,
+            s.active.astype(jnp.int32), s.epoch,
+            qctr, state.head_hist.astype(jnp.int32), stats_vec,
+            state.done.astype(jnp.int32), state.lengths,
+            q.start_vertex, q.order, q.epoch,
+            graph.row_ptr, graph.col, prob, ali, state.paths,
+        ]
+        outs = pl.pallas_call(
+            kernel,
+            in_specs=[smem] * 16 + [hbm] * 5,
+            out_specs=[smem] * 11 + [hbm],
+            out_shape=[jax.ShapeDtypeStruct((W,), jnp.int32)] * 6 + [
+                jax.ShapeDtypeStruct((3,), jnp.int32),
+                jax.ShapeDtypeStruct((C + 1,), jnp.int32),
+                jax.ShapeDtypeStruct((_k.NUM_STATS,), jnp.int32),
+                jax.ShapeDtypeStruct((Q,), jnp.int32),
+                jax.ShapeDtypeStruct((QL,), jnp.int32),
+                jax.ShapeDtypeStruct(state.paths.shape, jnp.int32),
+            ],
+            scratch_shapes=[
+                pltpu.SMEM((W,), jnp.int32),    # stop flags
+                pltpu.SMEM((W,), jnp.float32),  # u0 (column draw)
+                pltpu.SMEM((W,), jnp.float32),  # u1 (alias accept)
+                pltpu.SMEM((W,), jnp.int32),    # addr
+                pltpu.SMEM((W,), jnp.int32),    # deg
+                pltpu.SMEM((W,), jnp.int32),    # edge index
+                pltpu.SMEM((W,), jnp.int32),    # v_next
+                pltpu.SMEM((W,), jnp.int32),    # terminated
+                pltpu.SMEM((2, 2), jnp.int32),   # row-access DMA buf
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SMEM((2, 1), jnp.int32),   # column DMA buf
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SMEM((2, 1), jnp.float32),  # alias-prob DMA buf
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SMEM((2, 1), jnp.int32),   # alias-idx DMA buf
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SMEM((2, 1), jnp.int32),   # path write staging (x2)
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SMEM((2, 2), jnp.int32),   # in-flight write (q, h)
+                pltpu.SMEM((1,), jnp.int32),     # write counter
+            ],
+            input_output_aliases={len(inputs) - 1: 11},
+            interpret=interpret,
+        )(*inputs)
+        (vcur, vprev, qid, hop, act, ep, qctr_o, hist_o, stats_o,
+         done_o, len_o, paths_o) = outs
+        return state._replace(
+            slots=s._replace(v_curr=vcur, v_prev=vprev, query_id=qid,
+                             hop=hop, active=act != 0, epoch=ep),
+            queue=q._replace(head=qctr_o[0], staged=qctr_o[1],
+                             tail=qctr_o[2]),
+            paths=paths_o, lengths=len_o, done=done_o != 0,
+            stats=WalkStats(*(stats_o[i] for i in range(_k.NUM_STATS))),
+            head_hist=hist_o)
+
+    return launch

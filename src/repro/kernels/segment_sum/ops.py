@@ -17,13 +17,14 @@ class SegmentSumOp:
 
     def __init__(self, segment_ids: np.ndarray, num_segments: int,
                  tile_e: int = 256, row_block: int = 128,
-                 interpret: bool = True, use_kernel: bool = True):
+                 interpret: bool | None = None, use_kernel: bool = True):
+        from repro.kernels.common import default_interpret
         seg = np.asarray(segment_ids)
         assert (np.diff(seg) >= 0).all(), "segment_ids must be sorted"
         self.num_segments = int(num_segments)
         self.tile_e = tile_e
         self.row_block = row_block
-        self.interpret = interpret
+        self.interpret = default_interpret(interpret)
         self.use_kernel = use_kernel
         self.seg = jnp.asarray(seg, jnp.int32)
         self.plan = _k.plan_tiles(seg, self.num_segments, tile_e, row_block)
@@ -38,7 +39,7 @@ class SegmentSumOp:
 
 
 def segment_sum(data, segment_ids, num_segments: int, *, tile_e: int = 256,
-                row_block: int = 128, interpret: bool = True):
+                row_block: int = 128, interpret: bool | None = None):
     """One-shot convenience API (sorts edges if unsorted)."""
     seg = np.asarray(segment_ids)
     order = None

@@ -1,8 +1,10 @@
 """Jitted public wrappers for the fused walk-step kernel.
 
-Pads the lane count to a tile multiple, dispatches to the Pallas kernel
-(TPU target; ``interpret=True`` executes the kernel body on CPU for
-validation), and exposes a jnp fallback for platforms without Pallas.
+Pads the lane count to a tile multiple, dispatches to the Pallas kernel,
+and exposes a jnp fallback for platforms without Pallas.  ``interpret``
+defaults to ``jax.default_backend() != "tpu"``: the kernel compiles on a
+real TPU and interprets its body elsewhere (CPU CI) — override per call
+to force either.
 """
 from __future__ import annotations
 
@@ -11,6 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from repro.kernels.walk_step import ref as _ref, walk_step as _k
 
 
@@ -23,7 +26,8 @@ def _pad_to(x, n, fill):
 
 @partial(jax.jit, static_argnames=("tile", "interpret", "use_kernel"))
 def walk_step_uniform(v_curr, u_col, row_ptr, col, tile: int = 256,
-                      interpret: bool = True, use_kernel: bool = True):
+                      interpret: bool | None = None, use_kernel: bool = True):
+    interpret = default_interpret(interpret)
     if not use_kernel:
         return _ref.walk_step_uniform_ref(v_curr, u_col, row_ptr, col)
     W = v_curr.shape[0]
@@ -37,8 +41,9 @@ def walk_step_uniform(v_curr, u_col, row_ptr, col, tile: int = 256,
 
 @partial(jax.jit, static_argnames=("tile", "interpret", "use_kernel"))
 def walk_step_alias(v_curr, u_col, u_acc, row_ptr, col, alias_prob, alias_idx,
-                    tile: int = 256, interpret: bool = True,
+                    tile: int = 256, interpret: bool | None = None,
                     use_kernel: bool = True):
+    interpret = default_interpret(interpret)
     if not use_kernel:
         return _ref.walk_step_alias_ref(v_curr, u_col, u_acc, row_ptr, col,
                                         alias_prob, alias_idx)

@@ -28,13 +28,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _row_access_loop(n, v_ref, rp_ref, rpbuf, rpsem, num_vertices,
-                     on_result):
+def row_access_loop(n, v_fn, rp_ref, rpbuf, rpsem, num_vertices, on_result):
     """Double-buffered 2-element DMA loop over lanes: rpbuf[slot] gets
-    (row_ptr[v], row_ptr[v+1]). Calls on_result(i, addr, deg)."""
+    (row_ptr[v], row_ptr[v+1]) for v = v_fn(i) — the paper's packed
+    RP_entry, with lane i+1's fetch in flight while lane i is consumed.
+    Calls on_result(i, addr, deg).  Shared with the fused superstep
+    kernel (`kernels/fused_superstep`)."""
 
     def copy(i, slot):
-        vv = jnp.clip(v_ref[i], 0, num_vertices - 1)
+        vv = jnp.clip(v_fn(i), 0, num_vertices - 1)
         return pltpu.make_async_copy(rp_ref.at[pl.ds(vv, 2)],
                                      rpbuf.at[slot], rpsem.at[slot])
 
@@ -55,11 +57,12 @@ def _row_access_loop(n, v_ref, rp_ref, rpbuf, rpsem, num_vertices,
     jax.lax.fori_loop(0, n, body, 0, unroll=False)
 
 
-def _gather1_loop(n, e_ref, src_ref, buf, sem, num_entries, on_result):
-    """Double-buffered 1-element DMA gather: buf[slot] = src[e_ref[i]]."""
+def gather1_loop(n, e_fn, src_ref, buf, sem, num_entries, on_result):
+    """Double-buffered 1-element DMA gather: buf[slot] = src[e_fn(i)].
+    Shared with the fused superstep kernel."""
 
     def copy(i, slot):
-        e = jnp.clip(e_ref[i], 0, num_entries - 1)
+        e = jnp.clip(e_fn(i), 0, num_entries - 1)
         return pltpu.make_async_copy(src_ref.at[pl.ds(e, 1)],
                                      buf.at[slot], sem.at[slot])
 
@@ -96,12 +99,13 @@ def walk_step_uniform_kernel(num_vertices, num_edges,
         deg_ref[i] = deg
         idx_scr[i] = addr + _uniform_index(deg, ucol_ref[i])
 
-    _row_access_loop(n, v_ref, rp_ref, rpbuf, rpsem, num_vertices, on_row)
+    row_access_loop(n, lambda i: v_ref[i], rp_ref, rpbuf, rpsem,
+                    num_vertices, on_row)
 
     def on_col(i, v):
         vnext_ref[i] = jnp.where(deg_ref[i] > 0, v, -1)
 
-    _gather1_loop(n, idx_scr, col_ref, colbuf, colsem, num_edges, on_col)
+    gather1_loop(n, lambda i: idx_scr[i], col_ref, colbuf, colsem, num_edges, on_col)
 
 
 def walk_step_alias_kernel(num_vertices, num_edges,
@@ -120,25 +124,26 @@ def walk_step_alias_kernel(num_vertices, num_edges,
         deg_ref[i] = deg
         k_scr[i] = addr + _uniform_index(deg, ucol_ref[i])
 
-    _row_access_loop(n, v_ref, rp_ref, rpbuf, rpsem, num_vertices, on_row)
+    row_access_loop(n, lambda i: v_ref[i], rp_ref, rpbuf, rpsem,
+                    num_vertices, on_row)
 
     def on_prob(i, p):
         # accept -> keep k; reject -> need alias[addr+k] (resolved below)
         idx_scr[i] = jnp.where(uacc_ref[i] < p, k_scr[i], -1)
 
-    _gather1_loop(n, k_scr, prob_ref, probbuf, probsem, num_edges, on_prob)
+    gather1_loop(n, lambda i: k_scr[i], prob_ref, probbuf, probsem, num_edges, on_prob)
 
     def on_alias(i, a):
         addr = addr_scr[i]
         take_alias = idx_scr[i] < 0
         idx_scr[i] = jnp.where(take_alias, addr + a, idx_scr[i])
 
-    _gather1_loop(n, k_scr, alias_ref, aliasbuf, aliassem, num_edges, on_alias)
+    gather1_loop(n, lambda i: k_scr[i], alias_ref, aliasbuf, aliassem, num_edges, on_alias)
 
     def on_col(i, v):
         vnext_ref[i] = jnp.where(deg_ref[i] > 0, v, -1)
 
-    _gather1_loop(n, idx_scr, col_ref, colbuf, colsem, num_edges, on_col)
+    gather1_loop(n, lambda i: idx_scr[i], col_ref, colbuf, colsem, num_edges, on_col)
 
 
 def _smem_tile(tile):

@@ -30,7 +30,10 @@ def main():
     ap.add_argument("--max-hops", type=int, default=QUERY_LENGTH)
     ap.add_argument("--mode", default="zero_bubble",
                     choices=["zero_bubble", "static"])
-    ap.add_argument("--step-impl", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--step-impl", default="jnp",
+                    choices=["jnp", "pallas", "fused"])
+    ap.add_argument("--hops-per-launch", type=int, default=16,
+                    help="fused only: supersteps per kernel launch")
     ap.add_argument("--backend", default="single",
                     choices=list(walker.BACKENDS))
     ap.add_argument("--distributed", action="store_true",
@@ -63,7 +66,8 @@ def main():
     else:
         execution = walker.ExecutionConfig(
             num_slots=args.slots, record_paths=args.record_paths,
-            mode=args.mode, step_impl=args.step_impl)
+            mode=args.mode, step_impl=args.step_impl,
+            hops_per_launch=args.hops_per_launch)
     w = walker.compile(program, backend=backend, execution=execution)
     t0 = time.time()
     res = w.run(g, starts, seed=args.seed)

@@ -158,9 +158,9 @@ class Walker:
         log_q, log_h, log_v, cursor, stats = run(
             pg, jnp.asarray(starts_sh), jnp.asarray(qcount), base_key)
         # Devices run the lockstep superstep loop the same number of times:
-        # supersteps is a global clock (max), everything else is additive.
+        # supersteps/launches are global clocks (max), the rest is additive.
         total = WalkStats(*(
-            jnp.max(v) if name == "supersteps" else jnp.sum(v)
+            jnp.max(v) if name in ("supersteps", "launches") else jnp.sum(v)
             for name, v in zip(WalkStats._fields, stats)))
         if int(total.supersteps) >= cfg.max_supersteps:
             warnings.warn(
@@ -517,10 +517,11 @@ class ShardedWalkStream(_StreamBase):
         return paths, lengths
 
     def walk_stats(self) -> WalkStats:
-        """Engine counters summed across devices (supersteps is the global
-        lockstep clock: max)."""
+        """Engine counters summed across devices (supersteps/launches are
+        the global lockstep clock: max)."""
         return WalkStats(*(
-            int(jnp.max(v)) if name == "supersteps" else int(jnp.sum(v))
+            int(jnp.max(v)) if name in ("supersteps", "launches")
+            else int(jnp.sum(v))
             for name, v in zip(WalkStats._fields, self.state.stats)))
 
     def reset(self, seed: Optional[int] = None) -> None:

@@ -35,7 +35,15 @@ class ExecutionConfig:
       injection_delay:  C — host→device staging latency in supersteps.
       queue_depth_factor: × the Theorem VI.1 stage-ahead depth D.
       max_supersteps:   safety bound for the drain loop.
-      step_impl:        ``jnp`` or ``pallas`` (fused walk-step kernel).
+      step_impl:        ``jnp`` (vectorized superstep), ``pallas`` (one-hop
+                        fused walk-step kernel), or ``fused`` (device-
+                        resident multi-hop superstep kernel; uniform and
+                        alias samplers, others fall back to ``jnp`` with a
+                        warning).
+      hops_per_launch:  ``fused`` only — supersteps executed per kernel
+                        launch (the k of the O(k·state) → O(state) host-
+                        traffic reduction; ``stats.launches`` exposes the
+                        realized fusion factor).
       num_devices:      sharded backend only — mesh size (default: all
                         visible devices).
       slots_per_device: sharded backend only — W_loc override (default
@@ -55,6 +63,7 @@ class ExecutionConfig:
     queue_depth_factor: float = 1.0
     max_supersteps: int = 1 << 20
     step_impl: str = "jnp"
+    hops_per_launch: int = 16
     # ---- sharded backend ----
     num_devices: Optional[int] = None
     slots_per_device: Optional[int] = None
@@ -85,6 +94,9 @@ class ExecutionConfig:
         if self.max_supersteps <= 0:
             raise ValueError(f"max_supersteps must be positive, got "
                              f"{self.max_supersteps}")
+        if self.hops_per_launch <= 0:
+            raise ValueError(f"hops_per_launch must be positive, got "
+                             f"{self.hops_per_launch}")
         if self.num_devices is not None and self.num_devices <= 0:
             raise ValueError(f"num_devices must be positive, got "
                              f"{self.num_devices}")
@@ -112,6 +124,7 @@ class ExecutionConfig:
             queue_depth_factor=self.queue_depth_factor,
             max_supersteps=self.max_supersteps,
             step_impl=self.step_impl,
+            hops_per_launch=self.hops_per_launch,
         )
 
     def dist_config(self, program, num_devices: int) -> DistConfig:
@@ -146,5 +159,6 @@ class ExecutionConfig:
             queue_depth_factor=cfg.queue_depth_factor,
             max_supersteps=cfg.max_supersteps,
             step_impl=cfg.step_impl,
+            hops_per_launch=cfg.hops_per_launch,
             **kw,
         )

@@ -180,6 +180,9 @@ res = walker.compile(
 dp, dl = res.as_numpy()
 assert (dp == rp).all() and (dl == rl).all()
 assert int(np.asarray(res.stats.drops)) == 0
+# Hop-0 prescan: the one-time batched local scan replaces the per-query
+# hop-0 superstep (was 141 at PR 2, 91 after per-lane early finalize).
+assert int(res.stats.supersteps) < 91, int(res.stats.supersteps)
 print("W_N2V_OK")
 """
 
@@ -188,6 +191,7 @@ def test_distributed_weighted_node2vec_reservoir():
     """Weighted Node2Vec (Efraimidis–Spirakis reservoir) on 2 devices,
     through compile(program, backend="sharded"): the chunked scan
     ping-pongs between owner(v_curr) and owner(v_prev) and the sampled
-    walks are bit-identical to the single-device reference."""
+    walks are bit-identical to the single-device reference.  The hop-0
+    local scan is batched out of the superstep loop (supersteps < 91)."""
     out = run_in_subprocess(W_N2V_DIST, devices=2)
     assert "W_N2V_OK" in out

@@ -1,0 +1,265 @@
+"""Fused device-resident superstep (`step_impl="fused"`) + shared Threefry
+RNG: bit-equality of the rng refactor against the jax.random derivation,
+and bit-identity of the fused kernel against the jnp superstep over
+{uniform, alias} × {zero_bubble, static} × {closed batch, chunked stream}.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, rng as task_rng
+from repro.core.samplers import SamplerSpec
+from repro.core.walk_engine import (_run_walks, init_stream_state,
+                                    inject_queries, make_superstep_runner)
+
+CFG = EngineConfig(num_slots=32, max_hops=10)
+SPECS = {
+    "uniform": SamplerSpec(kind="uniform"),
+    "ppr": SamplerSpec(kind="uniform", stop_prob=0.15),
+    "alias": SamplerSpec(kind="alias"),
+}
+
+
+def _fused(cfg, hops_per_launch=4, **kw):
+    return dataclasses.replace(cfg, step_impl="fused",
+                               hops_per_launch=hops_per_launch, **kw)
+
+
+def _assert_same_run(r1, r2):
+    p1, l1 = r1.as_numpy()
+    p2, l2 = r2.as_numpy()
+    assert np.array_equal(p1, p2)
+    assert np.array_equal(l1, l2)
+    # launches is the one knob that differs by design (fusion factor).
+    for f in r1.stats._fields:
+        if f == "launches":
+            continue
+        assert int(getattr(r1.stats, f)) == int(getattr(r2.stats, f)), f
+
+
+# ------------------------------------------------------------ shared RNG
+
+
+def _jaxrandom_task_uniforms(base_key, qid, hop, num, salt=0, epoch=None):
+    """The historical jax.random-based derivation, kept here verbatim as
+    the reference the refactored `rng` module must match bit-for-bit."""
+    salt_b = jnp.broadcast_to(jnp.asarray(salt, jnp.uint32),
+                              qid.shape).astype(jnp.uint32)
+    if epoch is None:
+        def one(q, h, s):
+            k = jax.random.fold_in(base_key, q)
+            k = jax.random.fold_in(k, h)
+            return jax.random.fold_in(k, s)
+
+        keys = jax.vmap(one)(qid.astype(jnp.uint32), hop.astype(jnp.uint32),
+                             salt_b)
+    else:
+        ep = jnp.broadcast_to(jnp.asarray(epoch, jnp.int32), qid.shape)
+
+        def one(q, h, s, e):
+            salted = jax.random.fold_in(base_key, e.astype(jnp.uint32))
+            kb = jnp.where(e > 0, salted, base_key)
+            k = jax.random.fold_in(kb, q)
+            k = jax.random.fold_in(k, h)
+            return jax.random.fold_in(k, s)
+
+        keys = jax.vmap(one)(qid.astype(jnp.uint32), hop.astype(jnp.uint32),
+                             salt_b, ep)
+    return jax.vmap(lambda k: jax.random.uniform(k, (num,)))(keys)
+
+
+@pytest.mark.parametrize("epoch_kind", ["none", "zero", "mixed"])
+@pytest.mark.parametrize("salt", [0, 2, 8, 17])
+def test_rng_bit_equal_to_jax_random(epoch_kind, salt, rng):
+    """`rng.threefry2x32`-based task_uniforms == the jax.random fold chain,
+    across epochs, salts, and odd/even draw counts."""
+    key = jax.random.PRNGKey(123)
+    qid = jnp.asarray(rng.integers(0, 5000, 64), jnp.int32)
+    hop = jnp.asarray(rng.integers(0, 80, 64), jnp.int32)
+    epoch = {"none": None, "zero": 0,
+             "mixed": jnp.asarray(rng.integers(0, 9, 64), jnp.int32)}[
+        epoch_kind]
+    for num in (1, 2, 5, 24):
+        ref = _jaxrandom_task_uniforms(key, qid, hop, num, salt, epoch)
+        got = task_rng.task_uniforms(key, qid, hop, num, salt, epoch)
+        assert np.array_equal(np.asarray(ref), np.asarray(got)), num
+
+
+def test_threefry_primitive_bit_equal():
+    """The shared block cipher itself matches jax.random.bits."""
+    key = jax.random.PRNGKey(7)
+    folded = jax.random.fold_in(key, 42)
+    y0, y1 = task_rng.threefry2x32(key[0], key[1], jnp.uint32(0),
+                                   jnp.uint32(42))
+    assert np.array_equal(np.asarray(folded), np.asarray([y0, y1]))
+    for num in (1, 2, 3, 8, 9):
+        ref = jax.random.bits(folded, (num,), jnp.uint32)
+        got = task_rng.key_bits(folded[0], folded[1], num)
+        assert np.array_equal(np.asarray(ref), np.asarray(got).reshape(-1))
+
+
+def test_epoch_zero_matches_legacy_tuple(rng):
+    """Epoch 0 must keep deriving exactly like the 3-tuple (the contract
+    that makes a closed batch epoch 0 of a stream)."""
+    key = jax.random.PRNGKey(5)
+    qid = jnp.asarray(rng.integers(0, 999, 32), jnp.int32)
+    hop = jnp.asarray(rng.integers(0, 30, 32), jnp.int32)
+    a = task_rng.task_uniforms(key, qid, hop, 3, 1, epoch=None)
+    b = task_rng.task_uniforms(key, qid, hop, 3, 1,
+                               epoch=jnp.zeros((32,), jnp.int32))
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- fused vs jnp, closed
+
+
+@pytest.mark.parametrize("algo", sorted(SPECS))
+@pytest.mark.parametrize("mode", ["zero_bubble", "static"])
+def test_fused_closed_batch_bit_identical(algo, mode, weighted_graph, rng):
+    """Closed batch: fused kernel == jnp superstep — paths, lengths, and
+    every stat except the launch count."""
+    spec = SPECS[algo]
+    cfg = dataclasses.replace(CFG, mode=mode)
+    starts = rng.integers(0, weighted_graph.num_vertices, 80).astype(np.int32)
+    r_jnp = _run_walks(weighted_graph, starts, spec, cfg, seed=9)
+    r_fused = _run_walks(weighted_graph, starts, spec, _fused(cfg), seed=9)
+    _assert_same_run(r_jnp, r_fused)
+    assert int(r_fused.stats.launches) < int(r_fused.stats.supersteps)
+    assert int(r_jnp.stats.launches) == int(r_jnp.stats.supersteps)
+
+
+def test_fused_hops_per_launch_invariance(small_graph, rng):
+    """The launch cadence is a pure machine knob: any hops_per_launch
+    samples identical paths, and the launch count shrinks as k grows."""
+    starts = rng.integers(0, small_graph.num_vertices, 60).astype(np.int32)
+    spec = SPECS["ppr"]
+    ref = _run_walks(small_graph, starts, spec, CFG, seed=4)
+    launches = []
+    for k in (1, 3, 16):
+        r = _run_walks(small_graph, starts, spec, _fused(CFG, k), seed=4)
+        _assert_same_run(ref, r)
+        launches.append(int(r.stats.launches))
+    assert launches[0] > launches[1] > launches[2] >= 1
+    # supersteps-per-launch is surfaced in the stats
+    assert float(ref.stats.supersteps_per_launch()) == pytest.approx(1.0)
+    assert float(r.stats.supersteps_per_launch()) > 1.0
+
+
+def test_fused_injection_delay_and_depth(small_graph, rng):
+    """The Theorem VI.1 staging controller runs in-kernel: delayed head
+    observations behave identically to the jnp superstep."""
+    starts = rng.integers(0, small_graph.num_vertices, 100).astype(np.int32)
+    for C in (1, 3):
+        cfg = dataclasses.replace(CFG, injection_delay=C)
+        r1 = _run_walks(small_graph, starts, SPECS["uniform"], cfg, seed=2)
+        r2 = _run_walks(small_graph, starts, SPECS["uniform"], _fused(cfg),
+                        seed=2)
+        _assert_same_run(r1, r2)
+
+
+def test_fused_no_record_paths(small_graph, rng):
+    """record_paths=False (throughput mode): stats still match."""
+    starts = rng.integers(0, small_graph.num_vertices, 64).astype(np.int32)
+    cfg = dataclasses.replace(CFG, record_paths=False)
+    r1 = _run_walks(small_graph, starts, SPECS["ppr"], cfg, seed=6)
+    r2 = _run_walks(small_graph, starts, SPECS["ppr"], _fused(cfg), seed=6)
+    for f in r1.stats._fields:
+        if f != "launches":
+            assert int(getattr(r1.stats, f)) == int(getattr(r2.stats, f)), f
+
+
+def test_fused_fallback_warns_and_matches(small_graph, rng):
+    """Samplers the kernel doesn't cover fall back to the jnp superstep
+    with a warning — bit-identical output."""
+    spec = SamplerSpec(kind="rejection_n2v", p=2.0, q=0.5)
+    starts = rng.integers(0, small_graph.num_vertices, 40).astype(np.int32)
+    ref = _run_walks(small_graph, starts, spec, CFG, seed=1)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        got = _run_walks(small_graph, starts, spec, _fused(CFG), seed=1)
+    _assert_same_run(ref, got)
+
+
+# ------------------------------------------------- fused vs jnp, stream
+
+
+def _stream_drain(runner, graph, state, seed, chunk):
+    for _ in range(10_000):
+        if bool(np.asarray(state.done).all()):
+            return state
+        state = runner(graph, state, seed, chunk)
+    raise AssertionError("stream did not drain")
+
+
+@pytest.mark.parametrize("algo", sorted(SPECS))
+def test_fused_chunked_stream_bit_identical(algo, weighted_graph, rng):
+    """Open system: mid-stream injection + odd chunk sizes, fused vs jnp —
+    identical paths/lengths/done and identical stream stats."""
+    spec = SPECS[algo]
+    starts = rng.integers(0, weighted_graph.num_vertices, 90).astype(np.int32)
+    cfg = dataclasses.replace(CFG, num_slots=16)
+
+    def run(c):
+        runner = make_superstep_runner(spec, c)
+        st = init_stream_state(c, capacity=90)
+        st = inject_queries(st, jnp.arange(50, dtype=jnp.int32),
+                            jnp.asarray(starts[:50]),
+                            jnp.zeros((50,), jnp.int32), 50)
+        st = runner(weighted_graph, st, 8, 5)   # mid-flight...
+        st = inject_queries(st, jnp.arange(50, 90, dtype=jnp.int32),
+                            jnp.asarray(starts[50:]),
+                            jnp.zeros((40,), jnp.int32), 40)
+        return _stream_drain(runner, weighted_graph, st, 8, 7)
+
+    s1 = run(cfg)
+    s2 = run(_fused(cfg, hops_per_launch=3))
+    assert np.array_equal(np.asarray(s1.paths), np.asarray(s2.paths))
+    assert np.array_equal(np.asarray(s1.lengths), np.asarray(s2.lengths))
+    assert np.array_equal(np.asarray(s1.done), np.asarray(s2.done))
+    for f in s1.stats._fields:
+        if f != "launches":
+            assert int(getattr(s1.stats, f)) == int(getattr(s2.stats, f)), f
+
+
+def test_fused_ring_reclamation_stream(small_graph, rng):
+    """The ring economy (epoch-salted slot reuse) runs unchanged over the
+    fused runner: Walker.stream with step_impl='fused' harvests the same
+    walks as the jnp stream under identical inject/release schedules."""
+    from repro import walker
+
+    program = walker.WalkProgram(spec=SPECS["ppr"], max_hops=8)
+    arrivals = rng.integers(0, small_graph.num_vertices, 60).astype(np.int32)
+
+    def soak(execution):
+        w = walker.compile(program, execution=execution)
+        stream = w.stream(small_graph, capacity=24, seed=11)
+        pending = arrivals.tolist()
+        out = {}
+        live = {}
+        while pending or live:
+            n = min(8, stream.num_free, len(pending))
+            if n:
+                wave = np.asarray(pending[:n], np.int32)
+                del pending[:n]
+                qids, epochs = stream.inject(wave)
+                for q, e in zip(qids, epochs):
+                    live[int(q)] = int(e)
+            stream.advance(5)
+            done = stream.done_live_mask()
+            ready = [q for q in live if done[q]]
+            if ready:
+                paths, lengths = stream.harvest_ids(ready)
+                for i, q in enumerate(ready):
+                    out[(live.pop(q), q)] = (paths[i].copy(), int(lengths[i]))
+                stream.release(ready)
+        return out
+
+    ex = walker.ExecutionConfig(num_slots=8)
+    a = soak(ex)
+    b = soak(dataclasses.replace(ex, step_impl="fused", hops_per_launch=4))
+    assert a.keys() == b.keys()
+    for k in a:
+        assert np.array_equal(a[k][0], b[k][0]), k
+        assert a[k][1] == b[k][1], k

@@ -132,3 +132,29 @@ def test_stateless_rng_reproducible():
     np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
     assert np.array_equal(np.asarray(u1[0]), np.asarray(u1[1]))
     assert not np.array_equal(np.asarray(u1[0]), np.asarray(u1[2]))
+
+
+def test_reservoir_adaptive_chunks_bit_identical(rng):
+    """Degree-adaptive E-S scan (dynamic chunk bound at the live lanes'
+    max degree) samples exactly the same walks as the full
+    ceil(max_degree/chunk) scan — the skipped chunks only ever held -inf
+    reservoir keys."""
+    import dataclasses
+
+    from repro.core import EngineConfig
+    from repro.core.walk_engine import _run_walks
+    from repro.graph import make_dataset
+
+    g = make_dataset("WG", scale_override=9, weighted=True)
+    starts = rng.integers(0, g.num_vertices, 150).astype(np.int32)
+    spec = SamplerSpec(kind="reservoir_n2v", p=2.0, q=0.5,
+                       reservoir_chunk=16)
+    assert spec.adaptive_chunks  # the default
+    cfg = EngineConfig(num_slots=32, max_hops=8)
+    fixed = dataclasses.replace(spec, adaptive_chunks=False)
+    r_ad = _run_walks(g, starts, spec, cfg, seed=3)
+    r_fx = _run_walks(g, starts, fixed, cfg, seed=3)
+    pa, la = r_ad.as_numpy()
+    pf, lf = r_fx.as_numpy()
+    assert np.array_equal(pa, pf)
+    assert np.array_equal(la, lf)
