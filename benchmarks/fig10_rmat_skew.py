@@ -25,7 +25,7 @@ from repro.walker import ExecutionConfig, WalkProgram, compile as compile_walker
 def _bench_n2vw_adaptive(scale: int, queries: int, emitname: str):
     """Weighted Node2Vec on the Graph500-skewed RMAT: degree-adaptive vs
     fixed-bound reservoir scan (bit-identical paths; see
-    samplers.sample_reservoir_n2v)."""
+    phase_program.reservoir_scan)."""
     edges, n = rmat_edges(scale, 8, GRAPH500, seed=0)
     wts = np.random.default_rng(3).random(edges.shape[0]).astype(
         np.float32) + 0.1

@@ -28,6 +28,11 @@ def _algos(hops):
         "urw": WalkProgram.urw(hops),
         "ppr": WalkProgram.ppr(0.15, hops),
         "deepwalk": WalkProgram.deepwalk(hops),
+        # PR-5 fused coverage: the rejection verify phase and the typed
+        # metapath gather now run inside the device-resident kernel.
+        "rejection_n2v": WalkProgram.node2vec(2.0, 0.5, hops,
+                                              rejection_rounds=8),
+        "metapath": WalkProgram.metapath([0, 1, 2], hops),
     }
 
 
@@ -37,7 +42,7 @@ def run(quick: bool = False):
     hops = 12 if quick else 40
     slots = 64 if quick else 256
     g = make_dataset("WG", scale_override=scale, weighted=True,
-                     with_alias=True)
+                     with_alias=True, num_edge_types=3)
     starts = np.random.default_rng(1).integers(0, g.num_vertices, queries)
     out = {}
     for algo, program in _algos(hops).items():

@@ -1,7 +1,8 @@
-"""RidgeWalker core: stateless task decomposition, samplers, zero-bubble
-slot-pool engine, queuing-theoretic scheduler, distributed routing."""
-from repro.core import scheduler, walks
-from repro.core.samplers import SamplerSpec, edge_exists, get_sampler
+"""RidgeWalker core: stateless task decomposition, sampler phase-program
+IR, zero-bubble slot-pool engine, queuing-theoretic scheduler,
+distributed routing."""
+from repro.core import phase_program, scheduler
+from repro.core.samplers import SamplerSpec, edge_exists
 from repro.core.tasks import (N2VSlots, QueryQueue, ReservoirSlots,
                               WalkerSlots, WalkResult, WalkStats,
                               empty_queue, empty_slots, make_queue)
@@ -11,11 +12,11 @@ from repro.core.walk_engine import (EngineConfig, StreamState, build_engine,
                                     run_walks)
 
 __all__ = [
-    "SamplerSpec", "get_sampler", "edge_exists",
+    "SamplerSpec", "edge_exists",
     "WalkerSlots", "N2VSlots", "ReservoirSlots", "QueryQueue",
     "WalkStats", "WalkResult",
     "empty_slots", "empty_queue", "make_queue",
     "EngineConfig", "StreamState", "init_stream_state", "inject_queries",
     "build_engine", "make_engine", "make_superstep_runner", "run_walks",
-    "scheduler", "walks",
+    "phase_program", "scheduler",
 ]

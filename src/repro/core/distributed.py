@@ -8,14 +8,17 @@ freed lanes from its local query shard (zero-bubble scheduling), (c)
 routes every live task to the device that owns the data its next phase
 reads, with one ``all_to_all`` (the butterfly, `router.py`).
 
-One generic superstep serves every sampler through **capability
-dispatch** (`SamplerSpec.capability`): first-order samplers execute a
-whole hop at owner(v_curr); second-order samplers declare the extra slot
-state they carry and a multi-phase schedule — Node2Vec rejection proposes
-at owner(v_curr) and verifies at owner(v_prev) (two phases/hop), weighted
-Node2Vec ping-pongs reservoir chunks between the two owners.  The engine
-allocates the declared task word (`WalkerSlots` / `N2VSlots` /
-`ReservoirSlots`) and drives the same routing path for all of them.
+One generic superstep serves every sampler through the **phase-program
+IR** (`repro.core.phase_program`): a sampler lowers once into typed
+gather/score/draw/commit phases with explicit operand residency, and
+:class:`ProgramCapability` interprets the lowered program's residency
+schedule — all-local programs (uniform/alias/metapath over partitioned
+``type_offsets``) execute a whole hop at owner(v_curr); a score phase
+resident at owner(v_prev) splits the hop into a propose/verify superstep
+pair (rejection Node2Vec); the looping chunk program ping-pongs reservoir
+chunks between the two owners (weighted Node2Vec).  The engine allocates
+the task word the program's ``carry`` declares (`WalkerSlots` /
+`N2VSlots` / `ReservoirSlots`) and drives the same routing path for all.
 
 Because tasks are stateless and their randomness derives from
 (seed, query_id, hop), the distributed engine produces *bit-identical
@@ -51,14 +54,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rng as task_rng, router
-from repro.core.samplers import (SALT_CHUNK0, SALT_COLUMN, SALT_STOP,
-                                 SamplerSpec, es_chunk_score, es_merge,
-                                 es_num_chunks, get_sampler,
-                                 sample_reservoir_n2v)
+from repro.core.phase_program import (PhaseProgram, chunk_gather,
+                                      chunk_score, lower, make_sampler,
+                                      reservoir_scan)
+from repro.core.samplers import (SALT_COLUMN, SALT_STOP, SamplerSpec,
+                                 _uniform_index, es_num_chunks, n2v_bias,
+                                 rejection_choose)
 from repro.core.scheduler import routing_capacity
-from repro.core.tasks import (N2VSlots, ReservoirSlots, WalkerSlots,
-                              empty_n2v_slots, empty_reservoir_slots,
-                              empty_slots, zero_stats)
+from repro.core.tasks import (WalkerSlots, empty_n2v_slots,
+                              empty_reservoir_slots, empty_slots, zero_stats)
 from repro.distributed.compat import shard_map
 from repro.graph.partition import PartitionedGraph, owner_of
 
@@ -111,7 +115,13 @@ class DistConfig:
 
 
 class LocalView(NamedTuple):
-    """Per-device graph shard presented with the sampler interface."""
+    """Per-device graph shard presented with the sampler interface.
+
+    ``num_shards`` is what makes the shared sampler arithmetic
+    residency-aware: `samplers.vertex_row` maps a global vertex id to
+    ``v // num_shards``, its row in this shard's per-vertex arrays
+    (`edge_exists` and the typed-segment gather run unchanged on either
+    the full graph or a view)."""
     row_ptr: jnp.ndarray
     col: jnp.ndarray
     weights: Optional[jnp.ndarray]
@@ -119,6 +129,7 @@ class LocalView(NamedTuple):
     alias_idx: Optional[jnp.ndarray]
     max_degree: int
     type_offsets: Optional[jnp.ndarray] = None
+    num_shards: int = 1
 
 
 class DistLogs(NamedTuple):
@@ -148,53 +159,127 @@ def _local_row_access(view: LocalView, v: jnp.ndarray, num_devices: int,
     return addr, deg
 
 
-def _local_edge_exists(view: LocalView, src, dst_mat, N, v_per_dev):
-    """Bisect dst_mat (S, K) in src's LOCAL neighbor list (sorted)."""
-    addr, deg = _local_row_access(view, src, N, v_per_dev)
-    lo = jnp.broadcast_to(addr[:, None], dst_mat.shape).astype(jnp.int32)
-    hi0 = jnp.broadcast_to((addr + deg)[:, None], dst_mat.shape).astype(jnp.int32)
-    hi = hi0
-    iters = max(1, int(math.ceil(math.log2(max(int(view.max_degree), 2) + 1))))
-    ne = view.col.shape[-1]
-    for _ in range(iters):
-        active = lo < hi
-        mid = (lo + hi) // 2
-        v = view.col[jnp.clip(mid, 0, ne - 1)]
-        go_right = v < dst_mat
-        lo = jnp.where(active & go_right, mid + 1, lo)
-        hi = jnp.where(active & ~go_right, mid, hi)
-    found = (lo < hi0) & (view.col[jnp.clip(lo, 0, ne - 1)] == dst_mat)
-    return found & (src >= 0)[:, None]
-
-
 # --------------------------------------------------------------------------
-# Capabilities: per-sampler task word + phase schedule (one routing path).
+# Generic capability: ONE engine adapter interpreting the lowered phase
+# program — residency schedule → routing plan, `carry` → task word, phase
+# bodies → the shared executors in `phase_program` / `samplers`.
 # --------------------------------------------------------------------------
 
 
-class _FirstOrderCap:
-    """Whole hop at owner(v_curr): Row Access → Sampling → Column Access.
+class ProgramCapability:
+    """Sharded lowering of a :class:`~repro.core.phase_program.PhaseProgram`.
 
-    ``hop0_inline`` is part of the shared capability constructor protocol
-    (hop 0 is an ordinary hop here, so it is accepted and ignored)."""
+    The program's residency schedule picks one of three execution plans
+    (this is derived structure, not per-sampler code):
 
-    def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
-                 v_per_dev: int, max_degree: int, hop0_inline: bool = True):
-        self.spec, self.cfg = spec, cfg
+    ``single_phase`` — every phase resident at owner(v_curr): the whole
+    hop (Row Access → phase list → Column Access) executes in one
+    superstep on the owner, via the same vectorized phase interpreter
+    the single-device engine uses (`phase_program.make_sampler`, which
+    is residency-aware through `LocalView.num_shards`).  Covers uniform,
+    alias, and — with ``type_offsets`` partitioned alongside the CSR
+    shards — metapath.
+
+    ``two_phase`` — a score phase resident at owner(v_prev): phase A
+    executes the program's csr-gather at owner(v_curr) and stages the
+    candidate fan-out in the task word (`N2VSlots`); phase B executes
+    the first-accept score at owner(v_prev) with the same
+    (seed, qid, hop)-derived uniforms and the shared
+    `rejection_choose`/`n2v_bias` arithmetic ⇒ bit-identical walks.
+    Hop 0 has no v_prev (bias ≡ 1) and scores locally in phase A, which
+    also avoids an owner(-1) thundering-herd hotspot on device 0.
+
+    ``chunked_loop`` — the looping gather/score chunk pair: the O(deg)
+    E-S reservoir scan ping-pongs `phase_program.chunk_gather` output
+    (staged in `ReservoirSlots`) between owner(v_curr) and
+    owner(v_prev)'s `phase_program.chunk_score` fold; phase 2·n_chunks
+    finalizes at owner(v_curr) with a column access on the winning
+    offset.  Per-lane early finalize: the gather phase flags the chunk
+    covering deg(v_curr), and its score phase jumps straight to finalize
+    instead of stepping through empty chunks (skipped chunks contribute
+    only -inf reservoir keys, so the scanned argmax — and bit-identity
+    with the local scan, which folds those same -inf chunks — is
+    unchanged).
+
+    Hop-0 prescan (``hop0_inline=False``, closed engine, chunked loop
+    only): hop 0 is the one hop whose whole scan is local (bias ≡ 1
+    without v_prev), so the closed engine batches it *once* before the
+    superstep loop (:meth:`prescan_hop0`) instead of tracing the full
+    chunked scan into every superstep — refilled tasks enter the pool
+    already at hop 1.  Draws still derive from ``(seed, qid, hop=0,
+    chunk)``, so paths are bit-identical.  The streaming engine keeps
+    the inline hop-0 path (arrivals land mid-run)."""
+
+    def __init__(self, prog: PhaseProgram, spec: SamplerSpec,
+                 cfg: DistConfig, num_devices: int, v_per_dev: int,
+                 max_degree: int, hop0_inline: bool = True):
+        self.prog, self.spec, self.cfg = prog, spec, cfg
         self.N, self.v_per_dev = num_devices, v_per_dev
+        self.schedule = prog.schedule
+        if self.schedule == "chunked_loop":
+            self.CH = spec.reservoir_chunk
+            self.n_chunks = es_num_chunks(max_degree, self.CH)
+            self.hop0_inline = hop0_inline
+            self.prescan = not hop0_inline
+        else:
+            self.hop0_inline = True
+            self.prescan = False
+        if self.schedule == "single_phase":
+            self._sampler = make_sampler(spec)
 
-    def empty_pool(self, size: int) -> WalkerSlots:
+    # ------------------------------------------------- task word / routing
+
+    def empty_pool(self, size: int):
+        carry = self.prog.carry
+        if carry == "candidates":
+            return empty_n2v_slots(size, self.spec.rejection_rounds)
+        if carry == "reservoir":
+            return empty_reservoir_slots(size, self.CH)
         return empty_slots(size)
 
     def home(self, slots) -> jnp.ndarray:
-        return owner_of(slots.v_curr, self.N)
+        if self.schedule == "single_phase":
+            return owner_of(slots.v_curr, self.N)
+        if self.schedule == "two_phase":
+            return owner_of(jnp.where(slots.phase == 0, slots.v_curr,
+                                      jnp.maximum(slots.v_prev, 0)), self.N)
+        # chunked loop: even phases (gather / finalize) live at
+        # owner(v_curr); odd (score) at owner(v_prev).
+        return owner_of(jnp.where(slots.phase % 2 == 0, slots.v_curr,
+                                  jnp.maximum(slots.v_prev, 0)), self.N)
 
-    route_dest = home
+    def route_dest(self, slots) -> jnp.ndarray:
+        if self.schedule == "two_phase":
+            return owner_of(jnp.where(slots.phase == 1,
+                                      jnp.maximum(slots.v_prev, 0),
+                                      slots.v_curr), self.N)
+        return self.home(slots)
 
     def reset_extras(self, slots, take):
+        carry = self.prog.carry
+        if carry == "candidates":
+            return slots._replace(phase=jnp.where(take, 0, slots.phase))
+        if carry == "reservoir":
+            return slots._replace(
+                phase=jnp.where(take, 0, slots.phase),
+                best_key=jnp.where(take, -jnp.inf, slots.best_key),
+                best_idx=jnp.where(take, 0, slots.best_idx),
+                last_chunk=jnp.where(take, False, slots.last_chunk),
+            )
         return slots
 
+    # ------------------------------------------------------------- stepping
+
     def step(self, view: LocalView, slots, mine, base_key) -> StepOut:
+        return {"single_phase": self._step_single,
+                "two_phase": self._step_two_phase,
+                "chunked_loop": self._step_chunked}[self.schedule](
+                    view, slots, mine, base_key)
+
+    def _step_single(self, view: LocalView, slots, mine,
+                     base_key) -> StepOut:
+        """Whole hop at owner(v_curr): Row Access → phase interpreter →
+        Column Access (the sharded twin of `walk_engine._process`)."""
         spec, cfg = self.spec, self.cfg
         if spec.stop_prob > 0.0:
             u_stop = task_rng.task_uniforms(base_key, slots.query_id,
@@ -206,8 +291,7 @@ class _FirstOrderCap:
 
         addr, deg = _local_row_access(view, slots.v_curr, self.N,
                                       self.v_per_dev)
-        sampler = get_sampler(spec)
-        idx, ok = sampler(view, addr, deg, slots, base_key)
+        idx, ok = self._sampler(view, addr, deg, slots, base_key)
         e = jnp.clip(addr + idx, 0, view.col.shape[-1] - 1)
         v_next = view.col[e]
 
@@ -224,39 +308,10 @@ class _FirstOrderCap:
         )
         return StepOut(slots, adv, terminated, v_next, new_hop)
 
-
-class _TwoPhaseN2VCap:
-    """Second-order rejection Node2Vec: phase A draws K proposals at
-    owner(v_curr) and carries them in the task word; phase B bisects each
-    candidate in N(v_prev), applies the (p, q) bias, accepts the first
-    winner — same bounded-round semantics and same (seed, qid, hop)-derived
-    uniforms as the single-device sampler ⇒ bit-identical walks.  Hop 0
-    has no v_prev (bias ≡ 1) and verifies locally in phase A, which also
-    avoids an owner(-1) thundering-herd hotspot on device 0.
-    ``hop0_inline`` (constructor protocol) is accepted and ignored: hop 0
-    verifies locally in phase A either way."""
-
-    def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
-                 v_per_dev: int, max_degree: int, hop0_inline: bool = True):
-        self.spec, self.cfg = spec, cfg
-        self.N, self.v_per_dev = num_devices, v_per_dev
-
-    def empty_pool(self, size: int) -> N2VSlots:
-        return empty_n2v_slots(size, self.spec.rejection_rounds)
-
-    def home(self, slots) -> jnp.ndarray:
-        return owner_of(jnp.where(slots.phase == 0, slots.v_curr,
-                                  jnp.maximum(slots.v_prev, 0)), self.N)
-
-    def route_dest(self, slots) -> jnp.ndarray:
-        return owner_of(jnp.where(slots.phase == 1,
-                                  jnp.maximum(slots.v_prev, 0),
-                                  slots.v_curr), self.N)
-
-    def reset_extras(self, slots, take):
-        return slots._replace(phase=jnp.where(take, 0, slots.phase))
-
-    def step(self, view: LocalView, slots, mine, base_key) -> StepOut:
+    def _step_two_phase(self, view: LocalView, slots, mine,
+                        base_key) -> StepOut:
+        """Propose @ owner(v_curr) (csr-gather phase), verify @
+        owner(v_prev) (first-accept score phase)."""
         spec, cfg = self.spec, self.cfg
         K = spec.rejection_rounds
 
@@ -269,33 +324,26 @@ class _TwoPhaseN2VCap:
         else:
             stop = jnp.zeros_like(do_a)
 
-        # ---- phase A: propose K candidates from N(v_curr) ---------------
+        # ---- phase A: the gather(csr, K) phase at owner(v_curr) ---------
         addr, deg = _local_row_access(view, slots.v_curr, self.N,
                                       self.v_per_dev)
         u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
                                    2 * K, SALT_COLUMN, epoch=slots.epoch)
         u_col, u_acc = u[:, :K], u[:, K:]
-        idx = jnp.minimum((u_col * deg[:, None]).astype(jnp.int32),
-                          jnp.maximum(deg - 1, 0)[:, None])
+        idx = _uniform_index(deg[:, None], u_col)
         e = jnp.clip(addr[:, None] + idx, 0, view.col.shape[-1] - 1)
         proposals = view.col[e]                                   # (S, K)
         dead = do_a & ~stop & (deg == 0)
-        w_max = max(1.0 / spec.p, 1.0, 1.0 / spec.q)
         hop0 = do_a & ~stop & (slots.v_prev < 0) & (deg > 0)
-        acc0 = (u_acc * w_max <= 1.0).at[:, K - 1].set(True)
-        first0 = jnp.argmax(acc0, axis=1)
+        # Hop 0 scores locally: no v_prev ⇒ bias ≡ 1.
+        first0 = rejection_choose(spec, u_acc, jnp.ones_like(u_acc))
         v0 = jnp.take_along_axis(proposals, first0[:, None], 1)[:, 0]
         go_b = do_a & ~stop & ~dead & ~hop0
 
-        # ---- phase B: verify candidates against N(v_prev) ---------------
+        # ---- phase B: the score(first_accept) phase at owner(v_prev) ----
         do_b = mine & (slots.phase == 1)
-        is_ret = slots.cand == slots.v_prev[:, None]
-        common = _local_edge_exists(view, slots.v_prev, slots.cand, self.N,
-                                    self.v_per_dev)
-        w = jnp.where(is_ret, 1.0 / spec.p,
-                      jnp.where(common, 1.0, 1.0 / spec.q))
-        accept = (u_acc * w_max <= w).at[:, K - 1].set(True)
-        first = jnp.argmax(accept, axis=1)
+        w = n2v_bias(spec, view, slots.v_prev, slots.cand)
+        first = rejection_choose(spec, u_acc, w)
         vb = jnp.take_along_axis(slots.cand, first[:, None], 1)[:, 0]
 
         adv = do_b | hop0
@@ -313,73 +361,9 @@ class _TwoPhaseN2VCap:
         )
         return StepOut(slots, adv, terminated, v_next, new_hop)
 
-
-class _ChunkedReservoirCap:
-    """Second-order *weighted* Node2Vec (Efraimidis–Spirakis reservoir):
-    the O(deg) scan of N(v_curr) ping-pongs fixed-size chunks between
-    owner(v_curr) — gather (candidate, edge weight) for chunk c — and
-    owner(v_prev) — score the chunk against the local adjacency bias and
-    fold it into the carried reservoir maximum.  Phase 2·n_chunks
-    finalizes at owner(v_curr) with a column access on the winning offset.
-
-    Scoring reuses `samplers.es_chunk_score`/`es_merge` with the same
-    (seed, qid, hop, chunk)-derived uniforms as the single-device
-    reservoir sampler, and the bias uses the same float expressions, so
-    the scanned maximum — and therefore every sampled path — is
-    bit-identical to the single-device engine.  Hop 0 (bias ≡ 1) runs the
-    whole scan locally at owner(v_curr) in one superstep.
-
-    Early finalize (per lane): the gather phase knows deg(v_curr), so it
-    marks the chunk that covers the last neighbor; the matching score
-    phase then jumps straight to the finalize phase instead of stepping
-    through the remaining ceil(max_degree/chunk) - ceil(deg/chunk) empty
-    chunk pairs.  Skipped chunks would have contributed only -inf reservoir
-    keys (every candidate masked invalid), so the scanned maximum — and
-    bit-identity with the single-device sampler, which folds those same
-    -inf chunks — is unchanged; only the superstep count drops, from
-    2·ceil(max_degree/chunk)+1 per hop to 2·ceil(deg(v_curr)/chunk)+1.
-
-    Hop-0 prescan (``hop0_inline=False``, the closed engine): hop 0 is
-    the one hop whose whole scan is local (bias ≡ 1 without v_prev), so
-    the closed engine batches it *once* before the superstep loop
-    (:meth:`prescan_hop0`) instead of tracing the full chunked scan into
-    every superstep — refilled tasks enter the pool already at hop 1.
-    Draws still derive from ``(seed, qid, hop=0, chunk)``, so paths are
-    bit-identical; both the per-superstep critical path and the superstep
-    count shrink.  The streaming engine keeps the inline hop-0 path
-    (arrivals land mid-run)."""
-
-    def __init__(self, spec: SamplerSpec, cfg: DistConfig, num_devices: int,
-                 v_per_dev: int, max_degree: int, hop0_inline: bool = True):
-        self.spec, self.cfg = spec, cfg
-        self.N, self.v_per_dev = num_devices, v_per_dev
-        self.CH = spec.reservoir_chunk
-        self.n_chunks = es_num_chunks(max_degree, self.CH)
-        self.hop0_inline = hop0_inline
-        self.prescan = not hop0_inline
-
-    def empty_pool(self, size: int) -> ReservoirSlots:
-        return empty_reservoir_slots(size, self.CH)
-
-    def _owner_for_phase(self, slots) -> jnp.ndarray:
-        # Even phases (gather / finalize) live at owner(v_curr); odd
-        # (score) at owner(v_prev).
-        return owner_of(jnp.where(slots.phase % 2 == 0, slots.v_curr,
-                                  jnp.maximum(slots.v_prev, 0)), self.N)
-
-    home = _owner_for_phase
-    route_dest = _owner_for_phase
-
-    def reset_extras(self, slots, take):
-        return slots._replace(
-            phase=jnp.where(take, 0, slots.phase),
-            best_key=jnp.where(take, -jnp.inf, slots.best_key),
-            best_idx=jnp.where(take, 0, slots.best_idx),
-            last_chunk=jnp.where(take, False, slots.last_chunk),
-        )
-
     def prescan_hop0(self, view: LocalView, starts, qids, own, base_key):
-        """Batched hop-0 scan for the queries this device owns data for.
+        """Batched hop-0 scan for the queries this device owns data for
+        (chunked loop, closed engine).
 
         One vectorized E-S reservoir scan over all owned start vertices
         (bias ≡ 1: no v_prev yet), with the exact (seed, qid, hop=0,
@@ -404,14 +388,15 @@ class _ChunkedReservoirCap:
         scan_slots = WalkerSlots(
             v_curr=starts, v_prev=jnp.full_like(starts, -1), query_id=qids,
             hop=zeros, active=adv0, epoch=zeros)
-        idx0, _ = sample_reservoir_n2v(spec, view, addr, deg, scan_slots,
-                                       base_key)
+        idx0, _ = reservoir_scan(spec, view, addr, deg, scan_slots, base_key)
         v1 = view.col[jnp.clip(addr + idx0, 0, view.col.shape[-1] - 1)]
         reached = adv0 & (1 >= cfg.max_hops)
         term0 = stop | dead | reached
         return v1, adv0, term0, adv0 & ~reached
 
-    def step(self, view: LocalView, slots, mine, base_key) -> StepOut:
+    def _step_chunked(self, view: LocalView, slots, mine,
+                      base_key) -> StepOut:
+        """One chunk phase of the looping gather/score program."""
         spec, cfg = self.spec, self.cfg
         CH, NC = self.CH, self.n_chunks
         phase = slots.phase
@@ -437,39 +422,20 @@ class _ChunkedReservoirCap:
         # ---- hop 0: all-local scan (bias ≡ 1 without v_prev) ------------
         if self.hop0_inline:
             hop0 = at_hop_start & ~stop & (slots.v_prev < 0) & (deg > 0)
-            idx0, _ = sample_reservoir_n2v(spec, view, addr, deg, slots,
-                                           base_key)
+            idx0, _ = reservoir_scan(spec, view, addr, deg, slots, base_key)
             v0 = view.col[jnp.clip(addr + idx0, 0, view.col.shape[-1] - 1)]
         else:  # closed engine: hop 0 was batched by prescan_hop0
             hop0 = jnp.zeros_like(mine)
             v0 = slots.v_curr
 
-        # ---- gather: stage chunk c of (candidate, edge weight) ----------
+        # ---- gather phase: stage chunk c of (candidate, edge weight) ----
         do_gather = is_gather & ~stop & ~dead & ~hop0
-        pos = chunk[:, None] * CH + jnp.arange(CH, dtype=jnp.int32)[None, :]
-        gvalid = pos < deg[:, None]
-        e = jnp.clip(addr[:, None] + pos, 0, view.col.shape[-1] - 1)
-        y = jnp.where(gvalid, view.col[e], -1)
-        if view.weights is not None:
-            w_edge = jnp.where(gvalid, view.weights[e], 0.0)
-        else:
-            w_edge = jnp.where(gvalid, 1.0, 0.0)
+        y, w_edge = chunk_gather(view, addr, deg, chunk, CH)
         cand = jnp.where(do_gather[:, None], y, slots.cand)
         cand_w = jnp.where(do_gather[:, None], w_edge, slots.cand_w)
 
-        # ---- score: E-S keys under the local N(v_prev) bias -------------
-        u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, CH,
-                                   SALT_CHUNK0 + chunk, epoch=slots.epoch)
-        svalid = slots.cand >= 0
-        is_ret = slots.cand == slots.v_prev[:, None]
-        common = _local_edge_exists(view, slots.v_prev, slots.cand, self.N,
-                                    self.v_per_dev)
-        bias = jnp.where(is_ret, 1.0 / spec.p,
-                         jnp.where(common, 1.0, 1.0 / spec.q))
-        w = slots.cand_w * bias
-        c_best, c_key = es_chunk_score(u, svalid, w)
-        m_key, m_idx = es_merge(slots.best_key, slots.best_idx, chunk, CH,
-                                c_best, c_key)
+        # ---- score phase: E-S fold under the local N(v_prev) bias -------
+        m_key, m_idx = chunk_score(spec, view, slots, chunk, CH, base_key)
 
         # ---- finalize: column access on the scanned argmax --------------
         idx_f = jnp.clip(slots.best_idx, 0, jnp.maximum(deg - 1, 0))
@@ -505,30 +471,22 @@ class _ChunkedReservoirCap:
         return StepOut(slots, adv, terminated, v_next, new_hop)
 
 
-_CAPABILITIES = {
-    "first_order": _FirstOrderCap,
-    "two_phase_n2v": _TwoPhaseN2VCap,
-    "chunked_reservoir_n2v": _ChunkedReservoirCap,
-}
-
-
 def get_capability(spec: SamplerSpec, cfg: DistConfig, num_devices: int,
                    v_per_dev: int, max_degree: int,
-                   hop0_inline: bool = True):
-    """Resolve the sampler's declared capability to an engine adapter.
+                   hop0_inline: bool = True) -> ProgramCapability:
+    """Lower the sampler's phase program to the generic engine adapter.
 
-    ``hop0_inline=False`` (closed engine) lets capabilities that support
-    it (chunked reservoir) batch their hop-0 work into a one-time prescan
-    instead of the per-superstep critical path.
+    ``hop0_inline=False`` (closed engine) lets the chunked-loop schedule
+    batch its hop-0 work into a one-time prescan instead of the
+    per-superstep critical path.
     """
-    name = spec.capability
-    if name is None:
+    prog = lower(spec)
+    if prog.capability is None:  # no current program declares None
         raise NotImplementedError(
             f"sampler kind {spec.kind!r} declares no distributed "
-            "capability (metapath type_offsets are not partitioned yet — "
-            "see ROADMAP); run it on the single-device backend")
-    return _CAPABILITIES[name](spec, cfg, num_devices, v_per_dev, max_degree,
-                               hop0_inline=hop0_inline)
+            "capability; run it on the single-device backend")
+    return ProgramCapability(prog, spec, cfg, num_devices, v_per_dev,
+                             max_degree, hop0_inline=hop0_inline)
 
 
 # --------------------------------------------------------------------------
@@ -697,14 +655,21 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
     N = pg.num_devices
     assert mesh.devices.size == N, (mesh.devices.size, N)
     v_per_dev = pg.vertices_per_device
+    prog = lower(spec)
+    if "typed" in prog.requires and pg.type_offsets is None:
+        raise ValueError(
+            "metapath programs need type_offsets partitioned with the "
+            "graph — build the CSRGraph with num_edge_types > 0 before "
+            "partition_graph")
     cap = get_capability(spec, cfg, N, v_per_dev, pg.max_degree,
                          hop0_inline=False)
     P = jax.sharding.PartitionSpec
 
     has_w = pg.weights is not None
     has_alias = pg.alias_prob is not None
+    has_to = pg.type_offsets is not None
 
-    def body(rowp, colp, wp, app, aip, starts_loc, qcount, base_key):
+    def body(rowp, colp, wp, app, aip, top, starts_loc, qcount, base_key):
         rank = jax.lax.axis_index(cfg.axis_name)
         view = LocalView(
             row_ptr=rowp[0], col=colp[0],
@@ -712,6 +677,8 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
             alias_prob=app[0] if has_alias else None,
             alias_idx=aip[0] if has_alias else None,
             max_degree=pg.max_degree,
+            type_offsets=top[0] if has_to else None,
+            num_shards=N,
         )
         starts_l = starts_loc[0]
         qcount_l = qcount[0, 0]
@@ -728,7 +695,7 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
                  jnp.ones(starts_l.shape, bool))
         if getattr(cap, "prescan", False):
             # ---- one-time batched hop-0 local scan (out of the
-            # per-superstep critical path; see _ChunkedReservoirCap) ----
+            # per-superstep critical path; see ProgramCapability) ------
             seeds, log_q, log_h, log_v, cursor, stats0 = _run_hop0_prescan(
                 cap, cfg, N, rank, view, starts_l, qcount_l, base_key,
                 log_q, log_h, log_v)
@@ -755,7 +722,7 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
         body, mesh=mesh,
         in_specs=(P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),
                   P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),
-                  P(cfg.axis_name), P()),
+                  P(cfg.axis_name), P(cfg.axis_name), P()),
         out_specs=(P(cfg.axis_name),) * 4 + (P(cfg.axis_name),),
         check_vma=False,
     )
@@ -764,10 +731,12 @@ def make_distributed_engine(pg: PartitionedGraph, spec: SamplerSpec,
     def run(graph: PartitionedGraph, starts_sharded, qcount, base_key):
         dummy = jnp.zeros((N, 1), jnp.float32)
         dummy_i = jnp.zeros((N, 1), jnp.int32)
+        dummy_to = jnp.zeros((N, 1, 2), jnp.int32)
         return smapped(graph.row_ptr, graph.col,
                        graph.weights if has_w else dummy,
                        graph.alias_prob if has_alias else dummy,
                        graph.alias_idx if has_alias else dummy_i,
+                       graph.type_offsets if has_to else dummy_to,
                        starts_sharded, qcount, base_key)
 
     return run
@@ -986,13 +955,20 @@ def make_sharded_stream_engine(pg: PartitionedGraph, spec: SamplerSpec,
     N = pg.num_devices
     assert mesh.devices.size == N, (mesh.devices.size, N)
     v_per_dev = pg.vertices_per_device
+    prog = lower(spec)
+    if "typed" in prog.requires and pg.type_offsets is None:
+        raise ValueError(
+            "metapath programs need type_offsets partitioned with the "
+            "graph — build the CSRGraph with num_edge_types > 0 before "
+            "partition_graph")
     cap_ = get_capability(spec, cfg, N, v_per_dev, pg.max_degree)
     P = jax.sharding.PartitionSpec
 
     has_w = pg.weights is not None
     has_alias = pg.alias_prob is not None
+    has_to = pg.type_offsets is not None
 
-    def body(rowp, colp, wp, app, aip, state, base_key, k):
+    def body(rowp, colp, wp, app, aip, top, state, base_key, k):
         rank = jax.lax.axis_index(cfg.axis_name)
         view = LocalView(
             row_ptr=rowp[0], col=colp[0],
@@ -1000,6 +976,8 @@ def make_sharded_stream_engine(pg: PartitionedGraph, spec: SamplerSpec,
             alias_prob=app[0] if has_alias else None,
             alias_idx=aip[0] if has_alias else None,
             max_degree=pg.max_degree,
+            type_offsets=top[0] if has_to else None,
+            num_shards=N,
         )
         st = jax.tree.map(lambda x: x[0], state)
         live0 = jnp.sum(st.slots.active.astype(jnp.int32))
@@ -1020,7 +998,7 @@ def make_sharded_stream_engine(pg: PartitionedGraph, spec: SamplerSpec,
         body, mesh=mesh,
         in_specs=(P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),
                   P(cfg.axis_name), P(cfg.axis_name), P(cfg.axis_name),
-                  P(), P()),
+                  P(cfg.axis_name), P(), P()),
         out_specs=P(cfg.axis_name),
         check_vma=False,
     )
@@ -1030,10 +1008,12 @@ def make_sharded_stream_engine(pg: PartitionedGraph, spec: SamplerSpec,
             k) -> DistStreamState:
         dummy = jnp.zeros((N, 1), jnp.float32)
         dummy_i = jnp.zeros((N, 1), jnp.int32)
+        dummy_to = jnp.zeros((N, 1, 2), jnp.int32)
         return smapped(graph.row_ptr, graph.col,
                        graph.weights if has_w else dummy,
                        graph.alias_prob if has_alias else dummy,
                        graph.alias_idx if has_alias else dummy_i,
+                       graph.type_offsets if has_to else dummy_to,
                        state, base_key, jnp.asarray(k, jnp.int32))
 
     return run

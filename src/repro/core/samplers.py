@@ -1,11 +1,12 @@
-"""Application-specific sampling modules (paper §VII, Table I).
+"""Sampler definitions and their shared arithmetic (paper §VII, Table I).
 
-Each sampler is a pure function of the stateless task tuple and the graph —
-the TPU analogue of the paper's pluggable AXI-Stream sampling module.  All
-samplers return ``(index, ok)`` where ``index`` is the chosen offset into
-the current vertex's neighbor list and ``ok`` marks lanes whose vertex has a
-valid continuation (``ok=False`` → early termination, e.g. MetaPath with no
-type-matching neighbor).
+:class:`SamplerSpec` is the host-programmable configuration of the
+paper's pluggable AXI-Stream sampling module (p, q, α, mode bits).  It no
+longer carries per-sampler execution code: a spec *lowers* into a
+declarative phase program (`repro.core.phase_program`) — a short
+sequence of typed gather/score/draw/commit phases with explicit operand
+residency — and every backend (vectorized jnp superstep, fused Pallas
+kernel, sharded engine) interprets that one program.
 
 | GRW            | weighted | sampler            |
 |----------------|----------|--------------------|
@@ -14,18 +15,23 @@ type-matching neighbor).
 | Node2Vec       | no       | rejection          |
 | Node2Vec       | yes      | reservoir (E-S)    |
 | MetaPath       | either   | typed uniform      |
+
+What remains here is the arithmetic every lowering shares — index
+picking, adjacency bisection, the Node2Vec (p, q) bias, the
+Efraimidis–Spirakis chunk fold — written once so the backends cannot
+drift apart numerically (bit-identity across backends is pinned by
+tests).  The helpers are residency-aware: they accept the full
+`CSRGraph` *or* a sharded `LocalView` (``num_shards`` maps global vertex
+ids to local rows), so the single-device and distributed engines run the
+same expressions.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
-
-from repro.core import rng as task_rng
 
 # Salt channels for decorrelated draws within one hop.
 SALT_COLUMN = 0      # which neighbor column
@@ -33,11 +39,18 @@ SALT_ACCEPT = 1      # alias / rejection accept test
 SALT_STOP = 2        # PPR termination draw (used by the engine)
 SALT_CHUNK0 = 8      # reservoir chunk draws start here
 
+# Sampler kinds with a phase-program lowering (`phase_program.lower`).
+KINDS = ("uniform", "alias", "rejection_n2v", "reservoir_n2v", "metapath")
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplerSpec:
     """Static configuration of the sampling module (host-programmable
-    AXI4-Lite registers in the paper: p, q, α, mode bits)."""
+    AXI4-Lite registers in the paper: p, q, α, mode bits).
+
+    Validation happens at construction — a malformed spec (unknown kind,
+    empty MetaPath schedule, non-positive Node2Vec parameters) fails
+    here with an actionable message instead of deep inside tracing."""
 
     kind: str = "uniform"   # uniform|alias|rejection_n2v|reservoir_n2v|metapath
     p: float = 1.0          # Node2Vec return parameter
@@ -53,27 +66,61 @@ class SamplerSpec:
     adaptive_chunks: bool = True
     metapath: Tuple[int, ...] = ()
 
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown sampler kind: {self.kind!r} (one of {KINDS})")
+        if not isinstance(self.metapath, tuple):
+            # Specs must stay hashable (phase-program lowering is cached
+            # on the frozen spec) — coerce list-like schedules to tuples.
+            object.__setattr__(self, "metapath",
+                               tuple(int(t) for t in self.metapath))
+        if self.kind == "metapath":
+            if not self.metapath:
+                raise ValueError(
+                    "metapath samplers need a non-empty edge-type schedule "
+                    "(pass metapath=(t0, t1, ...) / "
+                    "WalkProgram.metapath(schedule=[...]))")
+            if any(int(t) < 0 for t in self.metapath):
+                raise ValueError(
+                    f"metapath schedule entries are edge-type ids and must "
+                    f"be non-negative, got {self.metapath}")
+        if not 0.0 <= self.stop_prob <= 1.0:
+            raise ValueError(
+                f"stop_prob must be a probability in [0, 1], got "
+                f"{self.stop_prob}")
+        if self.second_order and (self.p <= 0 or self.q <= 0):
+            raise ValueError(
+                f"Node2Vec parameters must be positive, got p={self.p} "
+                f"q={self.q}")
+        if self.rejection_rounds <= 0:
+            raise ValueError(
+                f"rejection_rounds must be positive, got "
+                f"{self.rejection_rounds}")
+        if self.reservoir_chunk <= 0:
+            raise ValueError(
+                f"reservoir_chunk must be positive, got "
+                f"{self.reservoir_chunk}")
+
     @property
     def second_order(self) -> bool:
         return self.kind in ("rejection_n2v", "reservoir_n2v")
 
     @property
     def capability(self) -> str | None:
-        """Distributed-execution capability this sampler declares — the
-        dispatch key the sharded engine uses to allocate the task word and
-        routing schedule (first- and second-order walks share one routing
-        path; second-order kinds declare the extra slot state they carry).
+        """Distributed-execution capability this sampler declares — read
+        off the lowered phase program's residency schedule (all-local →
+        ``first_order``; a score at owner(v_prev) → ``two_phase``; the
+        chunked reservoir loop → ``chunked_reservoir``).  The sharded
+        engine dispatches on this to allocate the task word and routing
+        schedule."""
+        from repro.core.phase_program import lower
+        return lower(self).capability
 
-        ``first_order``: the whole hop reads one vertex's data — route to
-        owner(v_curr), WalkerSlots task word.
-        ``two_phase_n2v``: propose at owner(v_curr), verify at
-        owner(v_prev) — N2VSlots with a phase bit + candidate payload.
-        ``chunked_reservoir_n2v``: O(deg) weighted scan ping-pongs chunks
-        between owner(v_curr) and owner(v_prev) — ReservoirSlots.
-        ``None``: not distributable yet (metapath: typed sub-segments are
-        not partitioned).
-        """
-        return _DIST_CAPABILITIES[self.kind]
+
+# --------------------------------------------------------------------------
+# Shared arithmetic: written once, interpreted by every lowering.
+# --------------------------------------------------------------------------
 
 
 def _col_at(g, e):
@@ -86,18 +133,32 @@ def _uniform_index(deg: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
     return jnp.clip(idx, 0, jnp.maximum(deg - 1, 0))
 
 
+def vertex_row(g, v: jnp.ndarray) -> jnp.ndarray:
+    """Map a (global) vertex id to its row in ``g``'s per-vertex arrays
+    (``row_ptr`` / ``type_offsets``).  Identity for the full CSRGraph;
+    ``v // num_shards`` for a sharded LocalView (vertex v is owned by
+    device ``v % N`` and stored at local row ``v // N``).  Negative /
+    out-of-range ids clamp to a valid row — callers mask validity."""
+    shards = getattr(g, "num_shards", 1)
+    rows = g.row_ptr.shape[-1] - 1
+    local = v // shards if shards > 1 else v
+    return jnp.clip(jnp.where(v >= 0, local, 0), 0, rows - 1)
+
+
 def edge_exists(g, src: jnp.ndarray, dst: jnp.ndarray) -> jnp.ndarray:
     """Vectorized adjacency test: is dst in src's (sorted) neighbor list?
 
     Lower-bound bisection with a static iteration count (log2 of max
     segment length).  ``src`` broadcasts against ``dst``'s leading dims.
-    """
-    nv = g.row_ptr.shape[-1] - 1
+    Works on the full CSRGraph and on a sharded LocalView (the bisection
+    runs over the local copy of src's segment — same values, same
+    result), which is what lets the sharded verify/score phases reuse
+    the exact single-device bias expression."""
     while src.ndim < dst.ndim:
         src = src[..., None]
-    src_safe = jnp.clip(src, 0, nv - 1)
-    lo = jnp.broadcast_to(g.row_ptr[src_safe], dst.shape).astype(jnp.int32)
-    hi0 = jnp.broadcast_to(g.row_ptr[src_safe + 1], dst.shape).astype(jnp.int32)
+    row = vertex_row(g, src)
+    lo = jnp.broadcast_to(g.row_ptr[row], dst.shape).astype(jnp.int32)
+    hi0 = jnp.broadcast_to(g.row_ptr[row + 1], dst.shape).astype(jnp.int32)
     hi = hi0
     iters = max(1, int(math.ceil(math.log2(max(int(g.max_degree), 2) + 1))))
     for _ in range(iters):
@@ -112,24 +173,7 @@ def edge_exists(g, src: jnp.ndarray, dst: jnp.ndarray) -> jnp.ndarray:
     return found & valid_src
 
 
-def sample_uniform(spec, g, addr, deg, slots, base_key):
-    u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 1,
-                               SALT_COLUMN, epoch=slots.epoch)[:, 0]
-    return _uniform_index(deg, u), deg > 0
-
-
-def sample_alias(spec, g, addr, deg, slots, base_key):
-    """Walker alias sampling: O(1) per draw, two uniforms, two gathers."""
-    u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 2,
-                               SALT_COLUMN, epoch=slots.epoch)
-    k = _uniform_index(deg, u[:, 0])
-    e = jnp.clip(addr + k, 0, g.col.shape[-1] - 1)
-    accept = u[:, 1] < g.alias_prob[e]
-    idx = jnp.where(accept, k, g.alias_idx[e])
-    return jnp.clip(idx, 0, jnp.maximum(deg - 1, 0)), deg > 0
-
-
-def _n2v_bias(spec, g, v_prev, y):
+def n2v_bias(spec, g, v_prev, y):
     """Node2Vec bias: 1/p if returning, 1 if y ∈ N(v_prev), 1/q otherwise.
     Hop 0 (v_prev < 0) → unbiased (weight 1)."""
     inv_p = 1.0 / spec.p
@@ -142,33 +186,22 @@ def _n2v_bias(spec, g, v_prev, y):
     return jnp.where(no_hist, 1.0, w)
 
 
-def sample_rejection_n2v(spec, g, addr, deg, slots, base_key):
-    """Bounded-round rejection sampling for unweighted Node2Vec (gSampler /
-    KnightKing style).  K proposal rounds; first accept wins; if all rounds
-    reject, the last proposal is taken (geometric tail bias < (1-a_min)^K,
-    measured in tests).  Each round = 2 uniforms + 1 column gather + one
-    O(log d) adjacency bisection."""
-    K = spec.rejection_rounds
+def rejection_choose(spec, u_acc: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Bounded-round rejection reduction: accept round j iff
+    ``u_acc[j] · w_max <= w[j]``; the last round is forced (bounded
+    fallback) and the first accepted round wins.  Returns the winning
+    round index per lane — shared by the jnp lowering and the sharded
+    propose/verify phases so accepts cannot drift."""
     w_max = max(1.0 / spec.p, 1.0, 1.0 / spec.q)
-    u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 2 * K,
-                               SALT_COLUMN, epoch=slots.epoch)
-    u_col = u[:, :K]
-    u_acc = u[:, K:]
-    props = _uniform_index(deg[:, None], u_col)              # (W, K)
-    y = _col_at(g, addr[:, None] + props)                    # (W, K)
-    w = _n2v_bias(spec, g, slots.v_prev, y)                  # (W, K)
-    accept = u_acc * w_max <= w                              # (W, K)
-    accept = accept.at[:, K - 1].set(True)                   # bounded fallback
-    first = jnp.argmax(accept, axis=1)
-    idx = jnp.take_along_axis(props, first[:, None], axis=1)[:, 0]
-    return idx, deg > 0
+    accept = (u_acc * w_max <= w).at[:, -1].set(True)
+    return jnp.argmax(accept, axis=1)
 
 
 def es_chunk_score(u, valid, w):
     """Efraimidis–Spirakis chunk scoring: key = u^(1/w), monotone in
     log(u)/w (stabler) — returns the within-chunk (argmax, max).
 
-    Shared verbatim by the single-device reservoir sampler and the sharded
+    Shared verbatim by the local reservoir scan and the sharded
     engine's chunk-score phase so the two are bit-identical: both feed the
     same (u, valid, w) and the same float ops produce the same key.
     """
@@ -191,90 +224,3 @@ def es_merge(best_key, best_idx, chunk_index, chunk_size, c_best, c_key):
 
 def es_num_chunks(max_degree: int, chunk: int) -> int:
     return max(1, -(-int(max_degree) // chunk))
-
-
-def sample_reservoir_n2v(spec, g, addr, deg, slots, base_key):
-    """Weighted Node2Vec via Efraimidis–Spirakis weighted reservoir
-    (LightRW's method): scan the full neighbor list in chunks, key =
-    u^(1/w'), keep the max.  O(deg) work per hop — inherent to exact
-    weighted 2nd-order sampling; chunked so the working set stays in VMEM.
-
-    Degree-adaptive scan (``spec.adaptive_chunks``): the chunk loop runs a
-    dynamic ``ceil(max(live deg)/chunk)`` trip count instead of the static
-    ``ceil(max_degree/chunk)``.  Every chunk past a lane's own degree
-    contributes only -inf reservoir keys (all candidates masked invalid),
-    so truncating the loop at the live lanes' max degree cannot change any
-    lane's scanned argmax — paths are bit-identical, only the wasted
-    supersteps of the power-law tail disappear."""
-    CH = spec.reservoir_chunk
-    n_chunks = es_num_chunks(g.max_degree, CH)
-    W = addr.shape[0]
-    weights = g.weights if g.weights is not None else None
-
-    def chunk_body(c, carry):
-        best_key, best_idx = carry
-        u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, CH,
-                                   SALT_CHUNK0 + c, epoch=slots.epoch)
-        pos = c * CH + jnp.arange(CH, dtype=jnp.int32)[None, :]  # (1, CH)
-        valid = pos < deg[:, None]
-        e = jnp.clip(addr[:, None] + pos, 0, g.col.shape[-1] - 1)
-        y = g.col[e]
-        w = weights[e] if weights is not None else jnp.ones_like(u)
-        w = w * _n2v_bias(spec, g, slots.v_prev, y)
-        c_best, c_key = es_chunk_score(u, valid, w)
-        return es_merge(best_key, best_idx, c, CH, c_best, c_key)
-
-    init = (jnp.full((W,), -jnp.inf), jnp.zeros((W,), jnp.int32))
-    if spec.adaptive_chunks:
-        live_deg = jnp.max(jnp.where(slots.active, deg, 0))
-        hi = jnp.clip((live_deg + CH - 1) // CH, 1, n_chunks)
-    else:
-        hi = n_chunks
-    _, best_idx = jax.lax.fori_loop(0, hi, chunk_body, init)
-    return jnp.clip(best_idx, 0, jnp.maximum(deg - 1, 0)), deg > 0
-
-
-def sample_metapath(spec, g, addr, deg, slots, base_key):
-    """Typed uniform sampling: hop t draws uniformly from the sub-segment of
-    neighbors with edge type schedule[t mod |schedule|]; no such neighbor →
-    early termination (paper §VIII-B, MetaPath's higher early-termination
-    rate is what stresses the zero-bubble scheduler)."""
-    assert g.type_offsets is not None, "MetaPath needs a typed graph"
-    sched = jnp.asarray(spec.metapath, jnp.int32)
-    t = sched[slots.hop % len(spec.metapath)]
-    nv = g.type_offsets.shape[0]
-    v_safe = jnp.clip(slots.v_curr, 0, nv - 1)
-    base = g.type_offsets[v_safe, t]
-    cnt = g.type_offsets[v_safe, t + 1] - base
-    u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, 1,
-                               SALT_COLUMN, epoch=slots.epoch)[:, 0]
-    idx = base + _uniform_index(cnt, u)
-    return idx, (cnt > 0) & (deg > 0)
-
-
-_SAMPLERS = {
-    "uniform": sample_uniform,
-    "alias": sample_alias,
-    "rejection_n2v": sample_rejection_n2v,
-    "reservoir_n2v": sample_reservoir_n2v,
-    "metapath": sample_metapath,
-}
-
-# Distributed capability each sampler kind declares (see
-# SamplerSpec.capability).  The sharded engine dispatches on this to pick
-# the task word + per-phase routing schedule — one routing path for all.
-_DIST_CAPABILITIES = {
-    "uniform": "first_order",
-    "alias": "first_order",
-    "rejection_n2v": "two_phase_n2v",
-    "reservoir_n2v": "chunked_reservoir_n2v",
-    "metapath": None,
-}
-
-
-def get_sampler(spec: SamplerSpec):
-    try:
-        fn = _SAMPLERS[spec.kind]
-    except KeyError:
-        raise ValueError(f"unknown sampler kind: {spec.kind!r}") from None
-    return partial(fn, spec)

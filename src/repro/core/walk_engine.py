@@ -72,7 +72,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import rng as task_rng, scheduler as sched
-from repro.core.samplers import SALT_STOP, SamplerSpec, get_sampler
+from repro.core.phase_program import lower as lower_program, make_sampler
+from repro.core.samplers import SALT_STOP, SamplerSpec
 from repro.core.tasks import (QueryQueue, WalkerSlots, WalkResult, WalkStats,
                               empty_queue, empty_slots, make_queue, zero_stats)
 from repro.graph.csr import CSRGraph, column_access, row_access
@@ -315,7 +316,7 @@ def _process(graph: CSRGraph, spec: SamplerSpec, cfg: EngineConfig, base_key,
     else:
         stop = jnp.zeros_like(A)
 
-    if cfg.step_impl == "pallas" and spec.kind in ("uniform", "alias"):
+    if cfg.step_impl == "pallas" and lower_program(spec).pallas:
         # Fused Pallas walk-step kernel (async DMA pipeline, kernels/walk_step).
         from repro.kernels.walk_step import ops as walk_ops
         if spec.kind == "uniform":
@@ -332,7 +333,7 @@ def _process(graph: CSRGraph, spec: SamplerSpec, cfg: EngineConfig, base_key,
         ok = deg > 0
     else:
         addr, deg = row_access(graph, slots.v_curr)           # stage 1
-        sampler = get_sampler(spec)
+        sampler = make_sampler(spec)                          # phase program
         idx, ok = sampler(graph, addr, deg, slots, base_key)  # stage 2
         v_next = column_access(graph, addr, idx)              # stage 3
 
@@ -398,22 +399,33 @@ def _work_left(state: StreamState):
     return (state.queue.head < state.queue.tail) | jnp.any(state.slots.active)
 
 
-def _effective_impl(spec: SamplerSpec, cfg: EngineConfig) -> str:
+def _effective_impl(spec: SamplerSpec, cfg: EngineConfig,
+                    warned: Optional[set] = None) -> str:
     """Resolve ``cfg.step_impl``, falling back to ``jnp`` (with a warning)
-    for sampler kinds the fused kernel does not cover — the fallback is
-    bit-identical, only the launch cadence differs."""
-    if cfg.step_impl == "fused":
-        from repro.kernels.fused_superstep.ops import FUSED_KINDS
-        if spec.kind not in FUSED_KINDS:
+    for phase programs the fused kernel cannot keep launch-resident (the
+    chunked reservoir loop) — the fallback is bit-identical, only the
+    launch cadence differs.
+
+    ``warned`` is a caller-owned registry keyed on ``(kind, step_impl)``:
+    a compiled `Walker` passes its own set so the warning fires once per
+    walker, not once per engine/stream build (streaming launches used to
+    re-emit it on every advance cadence rebuild)."""
+    if cfg.step_impl == "fused" and not lower_program(spec).fused:
+        from repro.core.phase_program import fused_kinds
+        key = (spec.kind, cfg.step_impl)
+        if warned is None or key not in warned:
             warnings.warn(
-                f"step_impl='fused' covers samplers {FUSED_KINDS}; falling "
-                f"back to the bit-identical 'jnp' superstep for "
+                f"step_impl='fused' covers samplers {fused_kinds()}; "
+                f"falling back to the bit-identical 'jnp' superstep for "
                 f"{spec.kind!r}", RuntimeWarning, stacklevel=3)
-            return "jnp"
+            if warned is not None:
+                warned.add(key)
+        return "jnp"
     return cfg.step_impl
 
 
-def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
+def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig,
+                          warned: Optional[set] = None):
     """Build a jitted ``run_supersteps(graph, state, seed, k) -> StreamState``.
 
     Advances the stream by at most ``k`` supersteps, stopping early when no
@@ -427,7 +439,7 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
     bit-exact paths, O(state) host traffic per launch instead of per hop.
     """
     depth = _stage_depth(cfg)
-    impl = _effective_impl(spec, cfg)
+    impl = _effective_impl(spec, cfg, warned)
 
     if impl == "fused":
         from repro.kernels.fused_superstep import build_fused_launch
@@ -476,7 +488,8 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
     return run_supersteps
 
 
-def build_engine(spec: SamplerSpec, cfg: EngineConfig):
+def build_engine(spec: SamplerSpec, cfg: EngineConfig,
+                 warned: Optional[set] = None):
     """Build a jitted ``run(graph, start_vertices, seed) -> WalkResult``
     (the closed system: drain a fixed query batch to completion).
 
@@ -488,7 +501,7 @@ def build_engine(spec: SamplerSpec, cfg: EngineConfig):
     each) instead of per-hop superstep bounces — bit-identical paths,
     O(state) host traffic per launch.
     """
-    impl = _effective_impl(spec, cfg)
+    impl = _effective_impl(spec, cfg, warned)
     fused_launch = None
     if impl == "fused":
         from repro.kernels.fused_superstep import build_fused_launch

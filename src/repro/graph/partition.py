@@ -25,7 +25,8 @@ import numpy as np
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["row_ptr", "col", "weights", "alias_prob", "alias_idx"],
+         data_fields=["row_ptr", "col", "weights", "alias_prob", "alias_idx",
+                      "type_offsets"],
          meta_fields=["num_vertices", "num_devices", "vertices_per_device",
                       "max_degree"])
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +36,9 @@ class PartitionedGraph:
     row_ptr: (N, V_loc+1) int32  — per-device local row pointers.
     col:     (N, E_loc)   int32  — neighbor lists (global vertex ids), padded.
     weights/alias_prob/alias_idx: optional per-edge payloads, same layout.
+    type_offsets: (N, V_loc, T+1) int32 or None — per-owned-vertex MetaPath
+        sub-segment offsets (segment-relative, so they shard with the
+        vertex: the values are copied verbatim from the global table).
     """
 
     row_ptr: jnp.ndarray
@@ -42,6 +46,7 @@ class PartitionedGraph:
     weights: Optional[jnp.ndarray] = None
     alias_prob: Optional[jnp.ndarray] = None
     alias_idx: Optional[jnp.ndarray] = None
+    type_offsets: Optional[jnp.ndarray] = None
     num_vertices: int = 0
     num_devices: int = 1
     vertices_per_device: int = 0
@@ -63,6 +68,8 @@ def partition_graph(g, num_devices: int) -> PartitionedGraph:
     w = None if g.weights is None else np.asarray(g.weights)
     ap = None if g.alias_prob is None else np.asarray(g.alias_prob)
     ai = None if g.alias_idx is None else np.asarray(g.alias_idx)
+    to = None if getattr(g, "type_offsets", None) is None else \
+        np.asarray(g.type_offsets)
 
     V = g.num_vertices
     v_per_dev = (V + num_devices - 1) // num_devices
@@ -82,9 +89,15 @@ def partition_graph(g, num_devices: int) -> PartitionedGraph:
     local_w = np.ones((num_devices, e_max), dtype=np.float32) if w is not None else None
     local_ap = np.ones((num_devices, e_max), dtype=np.float32) if ap is not None else None
     local_ai = np.zeros((num_devices, e_max), dtype=np.int32) if ai is not None else None
+    # Type offsets are segment-relative, so the owned rows shard verbatim
+    # (this is what lets MetaPath declare a first-order capability).
+    local_to = (np.zeros((num_devices, v_per_dev, to.shape[1]), dtype=np.int32)
+                if to is not None else None)
 
     for r in range(num_devices):
         owned = np.arange(r, V, num_devices)
+        if local_to is not None:
+            local_to[r, : owned.size] = to[owned]
         # Gather each owned vertex's neighbor segment into the local layout.
         for k, v in enumerate(owned):
             s, e = rp[v], rp[v + 1]
@@ -103,6 +116,7 @@ def partition_graph(g, num_devices: int) -> PartitionedGraph:
         weights=None if local_w is None else jnp.asarray(local_w),
         alias_prob=None if local_ap is None else jnp.asarray(local_ap),
         alias_idx=None if local_ai is None else jnp.asarray(local_ai),
+        type_offsets=None if local_to is None else jnp.asarray(local_to),
         num_vertices=V,
         num_devices=num_devices,
         vertices_per_device=v_per_dev,

@@ -35,15 +35,39 @@ superstep bouncing) to one state round-trip, and ``stats.launches`` counts
 1 per ``k`` supersteps instead of 1 per superstep — the fusion factor
 ``supersteps / launches`` that `WalkStats.supersteps_per_launch` reports.
 
+The kernel is a lowering of the sampler **phase-program IR**
+(`repro.core.phase_program`): every loop-free program (``prog.fused``)
+stages its gather/score phases through the DMA machinery here —
+
+  * ``uniform`` / ``alias`` (and PPR via the stop draw): the original
+    double-buffered row/column/alias-probe pipeline;
+  * ``metapath``: the typed-segment gather is ONE extra 2-element DMA
+    per lane (``type_offsets[v, t:t+2]`` packs the sub-segment bounds,
+    like the RP_entry pair), then the same uniform pick;
+  * ``rejection_n2v``: the csr-gather(K) / first-accept score pair runs
+    per lane with in-kernel per-round uniforms (same Threefry counters
+    as ``rng.task_uniforms(..., 2K, ...)``) and an O(log d) adjacency
+    bisection over N(v_prev) via single-element column DMAs — the
+    verify phase's operands never leave SMEM.
+
+Only the chunked reservoir scan (weighted Node2Vec) stays on the jnp
+superstep (its O(deg) loop is the one program the launch-resident pass
+cannot bound); the engine warns once per compiled walker and falls back
+bit-identically.
+
 Semantics are pinned bit-identical to the jnp superstep
-(`core/walk_engine.py`) for uniform and alias samplers, including PPR
+(`core/walk_engine.py`) for every covered sampler, including PPR
 stop draws, both scheduling modes, and the open-system ring economy —
 ``tests/test_fused_step.py``.  Layout note: slot state is (W,) and the
 query ring (Q,) in SMEM, which assumes the modest W/Q of a single core's
-lane pool; the HBM-resident buffers (graph CSR, alias tables, paths) are
-unbounded.
+lane pool; the HBM-resident buffers (graph CSR, alias tables,
+type_offsets, paths) are unbounded.  The rejection/metapath gathers use
+synchronous one-shot DMAs (correctness-first; the uniform/alias pipeline
+keeps the overlapped double-buffered scheme).
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -60,16 +84,106 @@ STAT = {f: i for i, f in enumerate(WalkStats._fields)}
 NUM_STATS = len(WalkStats._fields)
 
 
+def _bisect_iters(max_degree: int) -> int:
+    """Static adjacency-bisection trip count — MUST match
+    `samplers.edge_exists` so the fused verify phase takes the same
+    number of halvings as the jnp score executor."""
+    return max(1, int(math.ceil(math.log2(max(int(max_degree), 2) + 1))))
+
+
+def _rejection_sample(W, num_vertices, num_edges, K, inv_p, inv_q,
+                      max_degree, k0, k1, rp_ref, load_col, load_pair,
+                      vcur, vprev, qid_o, hop_o, ep_o,
+                      addr_scr, deg_scr, vnext_scr):
+    """In-kernel lowering of the rejection program's gather(csr, K) +
+    score(first_accept) phases: per round, derive (u_col, u_acc) from the
+    same Threefry counters as ``rng.task_uniforms(..., 2K, SALT_COLUMN)``
+    (draw j and draw K+j share one block), propose a column, bisect the
+    candidate in N(v_prev) (identical trip count and compares to
+    `samplers.edge_exists`), apply the (p, q) bias, and keep the first
+    accepted proposal — the last round is forced, like the jnp executor.
+    """
+    iters = _bisect_iters(max_degree)
+    w_max = max(inv_p, 1.0, inv_q)
+
+    def lane_sample(i, _):
+        vp = vprev[i]
+        # RP_entry pair of v_prev: the verify phase's bisection bounds.
+        lo0, hi0 = load_pair(
+            rp_ref.at[pl.ds(jnp.clip(vp, 0, num_vertices - 1), 2)])
+        c0, c1 = rng.task_key_pair(k0, k1, qid_o[i], hop_o[i], SALT_COLUMN,
+                                   ep_o[i])
+        deg = deg_scr[i]
+        addr = addr_scr[i]
+
+        def round_body(j, carry):
+            got, chosen = carry
+            ju = j.astype(jnp.uint32)
+            y0, y1 = rng.threefry2x32(c0, c1, ju, ju + jnp.uint32(K))
+            u_col = rng.bits_to_uniform(y0)
+            u_acc = rng.bits_to_uniform(y1)
+            prop = _uniform_index(deg, u_col)
+            y = load_col(addr + prop)
+            lo, hi = lo0, hi0
+            for _ in range(iters):
+                active = lo < hi
+                mid = (lo + hi) // 2
+                cv = load_col(mid)
+                go_right = cv < y
+                lo = jnp.where(active & go_right, mid + 1, lo)
+                hi = jnp.where(active & ~go_right, mid, hi)
+            common = (lo < hi0) & (load_col(lo) == y) & (vp >= 0)
+            w = jnp.where(vp < 0, 1.0,
+                          jnp.where(y == vp, inv_p,
+                                    jnp.where(common, 1.0, inv_q)))
+            accept = (u_acc * w_max <= w) | (j == K - 1)
+            take = accept & ~got
+            return got | accept, jnp.where(take, y, chosen)
+
+        _, chosen = jax.lax.fori_loop(
+            0, K, round_body, (jnp.asarray(False), jnp.int32(0)))
+        vnext_scr[i] = chosen
+        return 0
+
+    jax.lax.fori_loop(0, W, lane_sample, 0)
+
+
+def _metapath_sample(W, num_vertices, mp_sched, to_ref, load_col, load_pair,
+                     vcur, hop_o, u0_scr, addr_scr, deg_scr, vnext_scr):
+    """In-kernel lowering of the metapath program's gather(typed) +
+    score(pick_uniform) phases: one 2-element DMA fetches the scheduled
+    type's sub-segment bounds (``type_offsets[v, t:t+2]``), the staged
+    uniform picks within it, and a no-match sub-segment zeroes the lane's
+    effective degree (early termination, same as the jnp executor)."""
+    L = len(mp_sched)
+
+    def lane_sample(i, _):
+        r = jax.lax.rem(hop_o[i], L)
+        t = jnp.int32(mp_sched[0])
+        for s in range(1, L):
+            t = jnp.where(r == s, jnp.int32(mp_sched[s]), t)
+        v_safe = jnp.clip(vcur[i], 0, num_vertices - 1)
+        base, end = load_pair(to_ref.at[v_safe, pl.ds(t, 2)])
+        cnt = end - base
+        pick = base + _uniform_index(cnt, u0_scr[i])
+        vnext_scr[i] = load_col(addr_scr[i] + pick)
+        deg_scr[i] = jnp.where(cnt > 0, deg_scr[i], 0)
+        return 0
+
+    jax.lax.fori_loop(0, W, lane_sample, 0)
+
+
 def fused_superstep_kernel(
         # ---- static configuration (bound via functools.partial) ----
         num_vertices, num_edges, W, Q, max_hops, depth, delay,
-        stop_prob, alias, static_mode, record_paths,
+        stop_prob, kind, mp_sched, rej_rounds, inv_p, inv_q, max_degree,
+        static_mode, record_paths,
         # ---- inputs ----
         key_ref, ctl_ref,
         vcur_in, vprev_in, qid_in, hop_in, act_in, ep_in,
         qctr_in, hist_in, stats_in, done_in, len_in,
         qstart_ref, qorder_ref, qepoch_ref,
-        rp_ref, col_ref, prob_ref, alias_ref, paths_in,
+        rp_ref, col_ref, prob_ref, alias_ref, to_ref, paths_in,
         # ---- outputs ----
         vcur, vprev, qid_o, hop_o, act, ep_o,
         qctr, hist, stats, done, len_o, paths,
@@ -77,11 +191,30 @@ def fused_superstep_kernel(
         stop_scr, u0_scr, u1_scr, addr_scr, deg_scr, idx_scr, vnext_scr,
         term_scr,
         rpbuf, rpsem, colbuf, colsem, probbuf, probsem, aliasbuf, aliassem,
-        wbuf, wsem, wmeta, wcnt):
+        wbuf, wsem, wmeta, wcnt, gbuf, gsem, pairbuf, pairsem):
     del paths_in  # aliased with `paths` (input_output_aliases)
+    alias = kind == "alias"
     k0 = key_ref[0]
     k1 = key_ref[1]
     wcnt[0] = 0
+
+    # ---- synchronous one-shot gathers (rejection / metapath phases) ----
+    def load_col(e):
+        """col[clip(e)] via a blocking single-element DMA."""
+        cp = pltpu.make_async_copy(
+            col_ref.at[pl.ds(jnp.clip(e, 0, num_edges - 1), 1)],
+            gbuf, gsem.at[0])
+        cp.start()
+        cp.wait()
+        return gbuf[0]
+
+    def load_pair(cp_src):
+        """Two consecutive int32 words (RP_entry / type_offsets bounds)
+        via a blocking 2-element DMA."""
+        cp = pltpu.make_async_copy(cp_src, pairbuf, pairsem.at[0])
+        cp.start()
+        cp.wait()
+        return pairbuf[0], pairbuf[1]
 
     def path_write(q, h, v):
         """Async double-buffered single-record path write-back: start the
@@ -145,6 +278,10 @@ def fused_superstep_kernel(
         @pl.when(work)
         def _():
             # -- per-lane stop draw + sampling uniforms (in-kernel RNG) --
+            # The draw phase of the program: uniform/metapath consume one
+            # uniform, alias two (counter layout exactly matches
+            # rng.task_uniforms); rejection derives its 2K per-round
+            # uniforms inside the sampling loop below.
             def lane_rng(i, _):
                 q = qid_o[i]
                 h = hop_o[i]
@@ -158,16 +295,17 @@ def fused_superstep_kernel(
                                    & (u < stop_prob)).astype(jnp.int32)
                 else:
                     stop_scr[i] = 0
-                c0, c1 = rng.task_key_pair(k0, k1, q, h, SALT_COLUMN, e)
-                if alias:
-                    y0, y1 = rng.threefry2x32(c0, c1, jnp.uint32(0),
-                                              jnp.uint32(1))
-                    u0_scr[i] = rng.bits_to_uniform(y0)
-                    u1_scr[i] = rng.bits_to_uniform(y1)
-                else:
-                    y0, _y1 = rng.threefry2x32(c0, c1, jnp.uint32(0),
-                                               jnp.uint32(0))
-                    u0_scr[i] = rng.bits_to_uniform(y0)
+                if kind != "rejection_n2v":
+                    c0, c1 = rng.task_key_pair(k0, k1, q, h, SALT_COLUMN, e)
+                    if alias:
+                        y0, y1 = rng.threefry2x32(c0, c1, jnp.uint32(0),
+                                                  jnp.uint32(1))
+                        u0_scr[i] = rng.bits_to_uniform(y0)
+                        u1_scr[i] = rng.bits_to_uniform(y1)
+                    else:
+                        y0, _y1 = rng.threefry2x32(c0, c1, jnp.uint32(0),
+                                                   jnp.uint32(0))
+                        u0_scr[i] = rng.bits_to_uniform(y0)
                 return 0
 
             jax.lax.fori_loop(0, W, lane_rng, 0)
@@ -181,42 +319,54 @@ def fused_superstep_kernel(
             row_access_loop(W, lambda i: vcur[i], rp_ref, rpbuf, rpsem,
                             num_vertices, on_row)
 
-            # -- Sampling: column draw (+ alias accept probes) -----------
-            def pick(i):
-                return jnp.clip(
-                    addr_scr[i] + _uniform_index(deg_scr[i], u0_scr[i]),
-                    0, num_edges - 1)
-
-            if alias:
-                def on_prob(i, p):
-                    # accept -> keep draw; reject -> resolved by alias probe
-                    idx_scr[i] = jnp.where(u1_scr[i] < p, 0, -1)
-
-                gather1_loop(W, pick, prob_ref, probbuf, probsem,
-                             num_edges, on_prob)
-
-                def on_alias(i, a):
-                    deg = deg_scr[i]
-                    kdraw = _uniform_index(deg, u0_scr[i])
-                    j = jnp.where(idx_scr[i] < 0, a, kdraw)
-                    j = jnp.clip(j, 0, jnp.maximum(deg - 1, 0))
-                    idx_scr[i] = jnp.clip(addr_scr[i] + j, 0, num_edges - 1)
-
-                gather1_loop(W, pick, alias_ref, aliasbuf, aliassem,
-                             num_edges, on_alias)
+            # -- Sampling + Column Access (per phase program) ------------
+            if kind == "rejection_n2v":
+                _rejection_sample(
+                    W, num_vertices, num_edges, rej_rounds, inv_p, inv_q,
+                    max_degree, k0, k1, rp_ref, load_col, load_pair,
+                    vcur, vprev, qid_o, hop_o, ep_o,
+                    addr_scr, deg_scr, vnext_scr)
+            elif kind == "metapath":
+                _metapath_sample(
+                    W, num_vertices, mp_sched, to_ref, load_col,
+                    load_pair, vcur, hop_o, u0_scr, addr_scr, deg_scr,
+                    vnext_scr)
             else:
-                def set_idx(i, _):
-                    idx_scr[i] = pick(i)
-                    return 0
+                def pick(i):
+                    return jnp.clip(
+                        addr_scr[i] + _uniform_index(deg_scr[i], u0_scr[i]),
+                        0, num_edges - 1)
 
-                jax.lax.fori_loop(0, W, set_idx, 0)
+                if alias:
+                    def on_prob(i, p):
+                        # accept -> keep draw; reject -> alias probe below
+                        idx_scr[i] = jnp.where(u1_scr[i] < p, 0, -1)
 
-            # -- Column Access -------------------------------------------
-            def on_col(i, v):
-                vnext_scr[i] = v
+                    gather1_loop(W, pick, prob_ref, probbuf, probsem,
+                                 num_edges, on_prob)
 
-            gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
-                         num_edges, on_col)
+                    def on_alias(i, a):
+                        deg = deg_scr[i]
+                        kdraw = _uniform_index(deg, u0_scr[i])
+                        j = jnp.where(idx_scr[i] < 0, a, kdraw)
+                        j = jnp.clip(j, 0, jnp.maximum(deg - 1, 0))
+                        idx_scr[i] = jnp.clip(addr_scr[i] + j, 0,
+                                              num_edges - 1)
+
+                    gather1_loop(W, pick, alias_ref, aliasbuf, aliassem,
+                                 num_edges, on_alias)
+                else:
+                    def set_idx(i, _):
+                        idx_scr[i] = pick(i)
+                        return 0
+
+                    jax.lax.fori_loop(0, W, set_idx, 0)
+
+                def on_col(i, v):
+                    vnext_scr[i] = v
+
+                gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf,
+                             colsem, num_edges, on_col)
 
             # -- terminate + advance + async path/done write-back --------
             def lane_update(i, acc):

@@ -22,19 +22,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.phase_program import fused_kinds, lower
 from repro.core.tasks import WalkStats
 from repro.kernels.fused_superstep import fused_superstep as _k
 
-# Sampler kinds the fused kernel covers; the engine falls back to the jnp
+# Sampler kinds the fused kernel covers — read off the phase programs
+# (every loop-free program lowers here); the engine falls back to the jnp
 # superstep (with a RuntimeWarning) for everything else.
-FUSED_KINDS = ("uniform", "alias")
+FUSED_KINDS = fused_kinds()
 
 
 def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
     """Build the jitted single-launch runner for ``spec`` × ``cfg``."""
     from repro.kernels.common import default_interpret
-    assert spec.kind in FUSED_KINDS, spec.kind
-    alias = spec.kind == "alias"
+    assert lower(spec).fused, spec.kind
+    kind = spec.kind
+    alias = kind == "alias"
+    metapath = kind == "metapath"
+    rejection = kind == "rejection_n2v"
     interpret = default_interpret(interpret)
     W = cfg.num_slots
     H = cfg.max_hops
@@ -42,6 +47,10 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
     record_paths = cfg.record_paths
     stop_prob = float(spec.stop_prob)
     static_mode = cfg.mode == "static"
+    mp_sched = tuple(int(t) for t in spec.metapath)
+    rej_rounds = int(spec.rejection_rounds) if rejection else 0
+    inv_p = 1.0 / float(spec.p)
+    inv_q = 1.0 / float(spec.q)
 
     @jax.jit
     def launch(graph, state, base_key, k):
@@ -51,7 +60,8 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
         QL = Q if record_paths else 1
         kernel = functools.partial(
             _k.fused_superstep_kernel, nv, ne, W, Q, H, depth, C,
-            stop_prob, alias, static_mode, record_paths)
+            stop_prob, kind, mp_sched, rej_rounds, inv_p, inv_q,
+            int(graph.max_degree), static_mode, record_paths)
         smem = pl.BlockSpec(memory_space=pltpu.SMEM)
         hbm = pl.BlockSpec(memory_space=pl.ANY)
         s = state.slots
@@ -64,6 +74,9 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
         else:  # inert placeholders so the operand list is shape-stable
             prob = jnp.zeros((1,), jnp.float32)
             ali = jnp.zeros((1,), jnp.int32)
+        # Typed sub-segment bounds (metapath's gather phase); inert
+        # placeholder otherwise.
+        to = graph.type_offsets if metapath else jnp.zeros((1, 2), jnp.int32)
         inputs = [
             jnp.asarray(base_key, jnp.uint32),
             jnp.asarray(k, jnp.int32).reshape(1),
@@ -72,11 +85,11 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
             qctr, state.head_hist.astype(jnp.int32), stats_vec,
             state.done.astype(jnp.int32), state.lengths,
             q.start_vertex, q.order, q.epoch,
-            graph.row_ptr, graph.col, prob, ali, state.paths,
+            graph.row_ptr, graph.col, prob, ali, to, state.paths,
         ]
         outs = pl.pallas_call(
             kernel,
-            in_specs=[smem] * 16 + [hbm] * 5,
+            in_specs=[smem] * 16 + [hbm] * 6,
             out_specs=[smem] * 11 + [hbm],
             out_shape=[jax.ShapeDtypeStruct((W,), jnp.int32)] * 6 + [
                 jax.ShapeDtypeStruct((3,), jnp.int32),
@@ -107,6 +120,10 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
                 pltpu.SemaphoreType.DMA((2,)),
                 pltpu.SMEM((2, 2), jnp.int32),   # in-flight write (q, h)
                 pltpu.SMEM((1,), jnp.int32),     # write counter
+                pltpu.SMEM((1,), jnp.int32),     # sync 1-elem gather buf
+                pltpu.SemaphoreType.DMA((1,)),
+                pltpu.SMEM((2,), jnp.int32),     # sync 2-elem pair buf
+                pltpu.SemaphoreType.DMA((1,)),
             ],
             input_output_aliases={len(inputs) - 1: 11},
             interpret=interpret,

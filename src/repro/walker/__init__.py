@@ -13,8 +13,10 @@ each on ``backend="single"`` or ``"sharded"`` (vertex-partitioned
 ``shard_map`` execution, bit-identical to single-device; ``.stream`` is a
 ``WalkStream`` or ``ShardedWalkStream`` with one shared interface).
 
-The legacy surfaces (`core.walks`, `run_walks`, `make_engine`,
-`run_distributed`, `run_distributed_n2v`) remain as deprecated shims.
+The legacy surfaces (`run_walks`, `make_engine`, `run_distributed`)
+remain as deprecated shims; the `core.walks` and `core.distributed_n2v`
+modules (two PRs past deprecation) are gone — see the migration table in
+``docs/api.md``.
 """
 from repro.walker.compile import (BACKENDS, ShardedWalkStream, Walker,
                                   WalkStream, compile)

@@ -90,6 +90,9 @@ class Walker:
         self._mesh = mesh
         self._engine = None         # single-device closed-system runner
         self._dist_cache = {}       # sharded runners keyed by graph shape
+        # Fused-fallback warnings fire once per compiled walker, keyed on
+        # (kind, step_impl) — not once per engine/stream build.
+        self._fallback_warned = set()
 
     # ----------------------------------------------------------- internals
 
@@ -98,7 +101,8 @@ class Walker:
 
     def _single_engine(self):
         if self._engine is None:
-            self._engine = build_engine(self.program.spec, self._engine_cfg())
+            self._engine = build_engine(self.program.spec, self._engine_cfg(),
+                                        warned=self._fallback_warned)
         return self._engine
 
     def _partition(self, graph) -> PartitionedGraph:
@@ -202,7 +206,7 @@ class Walker:
         if self.backend == "single":
             self.program.requires(graph)
             return WalkStream(self.program, self.execution, graph, capacity,
-                              seed)
+                              seed, warn_registry=self._fallback_warned)
         if not isinstance(graph, PartitionedGraph):
             self.program.requires(graph)
         pg = self._partition(graph)
@@ -360,7 +364,7 @@ class WalkStream(_StreamBase):
     """
 
     def __init__(self, program: WalkProgram, execution: ExecutionConfig,
-                 graph, capacity: int, seed: int):
+                 graph, capacity: int, seed: int, warn_registry=None):
         if capacity <= 0:
             raise ValueError(f"stream capacity must be positive, got "
                              f"{capacity}")
@@ -372,7 +376,8 @@ class WalkStream(_StreamBase):
         # (same guard as WalkService).
         self._cfg = dataclasses.replace(
             execution.engine_config(program), record_paths=True)
-        self._runner = make_superstep_runner(program.spec, self._cfg)
+        self._runner = make_superstep_runner(program.spec, self._cfg,
+                                             warned=warn_registry)
         self.state: StreamState = init_stream_state(self._cfg, self.capacity)
         self._init_ring()
 

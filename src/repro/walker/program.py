@@ -32,22 +32,14 @@ class WalkProgram:
     name: str = ""
 
     def __post_init__(self):
+        # Sampler-level constraints (kind, schedule, p/q, stop_prob) are
+        # validated by SamplerSpec itself at construction, so a malformed
+        # spec fails before it can reach tracing; only the program-level
+        # hop budget is checked here.
         if self.max_hops <= 0:
             raise ValueError(
                 f"WalkProgram.max_hops must be positive, got {self.max_hops}; "
                 "a walk needs at least one hop of budget")
-        if not 0.0 <= self.spec.stop_prob <= 1.0:
-            raise ValueError(
-                f"stop_prob must be a probability in [0, 1], got "
-                f"{self.spec.stop_prob}")
-        if self.spec.kind == "metapath" and not self.spec.metapath:
-            raise ValueError(
-                "metapath programs need a non-empty edge-type schedule "
-                "(pass schedule=[t0, t1, ...])")
-        if self.spec.second_order and (self.spec.p <= 0 or self.spec.q <= 0):
-            raise ValueError(
-                f"Node2Vec parameters must be positive, got p={self.spec.p} "
-                f"q={self.spec.q}")
 
     # ------------------------------------------------------------ factories
 

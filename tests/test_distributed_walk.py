@@ -135,26 +135,15 @@ logs, stats = _run_distributed(pg, starts, spec,
 dp, dl = assemble_paths(logs, starts, 10)
 assert (dp == rp).all() and (dl == rl).all()
 assert int(np.asarray(stats.drops).sum()) == 0
-
-# the deprecated per-algorithm fork still works (and warns)
-import warnings
-from repro.core.distributed_n2v import run_distributed_n2v
-with warnings.catch_warnings(record=True) as caught:
-    warnings.simplefilter("always")
-    logs2, _ = run_distributed_n2v(pg, starts, spec,
-        DistConfig(slots_per_device=16, max_hops=10, log_capacity=1<<14), seed=5)
-assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-dp2, dl2 = assemble_paths(logs2, starts, 10)
-assert (dp2 == rp).all() and (dl2 == rl).all()
 print("N2V_DIST_OK")
 """
 
 
 def test_distributed_node2vec_two_phase():
     """Second-order walks route through the *generic* distributed engine
-    (capability dispatch: propose at owner(v_curr), verify at
+    (phase-program dispatch: propose at owner(v_curr), verify at
     owner(v_prev)) and are bit-identical to the single-device rejection
-    sampler; the old distributed_n2v fork survives as a warning shim."""
+    sampler."""
     out = run_in_subprocess(N2V_DIST, devices=8)
     assert "N2V_DIST_OK" in out
 

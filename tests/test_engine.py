@@ -5,11 +5,42 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import EngineConfig, walks
+from repro.core import EngineConfig
+from repro.core.samplers import SamplerSpec
 from repro.core.scheduler import analyze_run, min_queue_depth
+from repro.core.walk_engine import _run_walks
 
 
 CFG = EngineConfig(num_slots=128, max_hops=16)
+
+
+def _walk(g, starts, spec, hops, cfg=None, seed=0):
+    cfg = dataclasses.replace(cfg or CFG, max_hops=hops)
+    return _run_walks(g, starts, spec, cfg, seed=seed)
+
+
+def urw(g, starts, hops, cfg=None, seed=0):
+    return _walk(g, starts, SamplerSpec(kind="uniform"), hops, cfg, seed)
+
+
+def ppr(g, starts, alpha, hops, cfg=None, seed=0):
+    return _walk(g, starts, SamplerSpec(kind="uniform", stop_prob=alpha),
+                 hops, cfg, seed)
+
+
+def deepwalk(g, starts, hops, cfg=None, seed=0):
+    return _walk(g, starts, SamplerSpec(kind="alias"), hops, cfg, seed)
+
+
+def node2vec(g, starts, p, q, hops, cfg=None, seed=0):
+    return _walk(g, starts, SamplerSpec(kind="rejection_n2v", p=p, q=q),
+                 hops, cfg, seed)
+
+
+def metapath(g, starts, schedule, hops, cfg=None, seed=0):
+    return _walk(g, starts,
+                 SamplerSpec(kind="metapath", metapath=tuple(schedule)),
+                 hops, cfg, seed)
 
 
 def _valid_paths(g, paths, lengths):
@@ -28,10 +59,10 @@ def test_paths_are_real_walks(algo, small_graph, weighted_graph, rng):
     g = weighted_graph if algo in ("deepwalk",) else small_graph
     starts = rng.integers(0, g.num_vertices, 200)
     runners = {
-        "urw": lambda: walks.urw(g, starts, 16, cfg=CFG),
-        "ppr": lambda: walks.ppr(g, starts, 0.15, 16, cfg=CFG),
-        "deepwalk": lambda: walks.deepwalk(g, starts, 16, cfg=CFG),
-        "node2vec": lambda: walks.node2vec(g, starts, 2.0, 0.5, 16, cfg=CFG),
+        "urw": lambda: urw(g, starts, 16, cfg=CFG),
+        "ppr": lambda: ppr(g, starts, 0.15, 16, cfg=CFG),
+        "deepwalk": lambda: deepwalk(g, starts, 16, cfg=CFG),
+        "node2vec": lambda: node2vec(g, starts, 2.0, 0.5, 16, cfg=CFG),
     }
     res = runners[algo]()
     p, l = res.as_numpy()
@@ -44,7 +75,7 @@ def test_paths_are_real_walks(algo, small_graph, weighted_graph, rng):
 
 def test_every_query_completes(small_graph, rng):
     starts = rng.integers(0, small_graph.num_vertices, 500)
-    res = walks.urw(small_graph, starts, 8, cfg=CFG)
+    res = urw(small_graph, starts, 8, cfg=CFG)
     _, l = res.as_numpy()
     assert (l >= 1).all()
 
@@ -55,11 +86,11 @@ def test_zero_bubble_theorem(small_graph, rng):
     starts = rng.integers(0, small_graph.num_vertices, 600)
     for C in (0, 2, 5):
         cfg = dataclasses.replace(CFG, injection_delay=C)
-        a = analyze_run(walks.urw(small_graph, starts, 12, cfg=cfg).stats)
+        a = analyze_run(urw(small_graph, starts, 12, cfg=cfg).stats)
         assert a.starved == 0, f"C={C}: starved={a.starved}"
         assert a.zero_bubble
     cfg = dataclasses.replace(CFG, injection_delay=5, queue_depth_factor=0.05)
-    a = analyze_run(walks.urw(small_graph, starts, 12, cfg=cfg).stats)
+    a = analyze_run(urw(small_graph, starts, 12, cfg=cfg).stats)
     assert a.starved > 0
 
 
@@ -73,9 +104,9 @@ def test_static_mode_has_more_bubbles(small_graph, rng):
     """Fig. 11 qualitative: static (bulk-synchronous) scheduling wastes
     lanes on early-terminating walks; zero-bubble does not."""
     starts = rng.integers(0, small_graph.num_vertices, 600)
-    a_zb = analyze_run(walks.urw(small_graph, starts, 16, cfg=CFG).stats)
+    a_zb = analyze_run(urw(small_graph, starts, 16, cfg=CFG).stats)
     cfg_s = dataclasses.replace(CFG, mode="static")
-    a_st = analyze_run(walks.urw(small_graph, starts, 16, cfg=cfg_s).stats)
+    a_st = analyze_run(urw(small_graph, starts, 16, cfg=cfg_s).stats)
     assert a_st.bubble_ratio > a_zb.bubble_ratio + 0.1
     assert a_st.supersteps > a_zb.supersteps
 
@@ -84,11 +115,11 @@ def test_deterministic_across_slot_counts(small_graph, rng):
     """Stateless decomposition: paths depend only on (seed, qid) — NOT on
     lane count, scheduling order, or batch boundaries (paper §V-A)."""
     starts = rng.integers(0, small_graph.num_vertices, 150)
-    res_a = walks.urw(small_graph, starts, 12,
+    res_a = urw(small_graph, starts, 12,
                       cfg=dataclasses.replace(CFG, num_slots=32))
-    res_b = walks.urw(small_graph, starts, 12,
+    res_b = urw(small_graph, starts, 12,
                       cfg=dataclasses.replace(CFG, num_slots=256))
-    res_c = walks.urw(small_graph, starts, 12,
+    res_c = urw(small_graph, starts, 12,
                       cfg=dataclasses.replace(CFG, mode="static"))
     pa, la = res_a.as_numpy()
     pb, lb = res_b.as_numpy()
@@ -100,14 +131,14 @@ def test_deterministic_across_slot_counts(small_graph, rng):
 def test_pallas_step_equivalence(small_graph, weighted_graph, rng):
     starts = rng.integers(0, small_graph.num_vertices, 100)
     cfgp = dataclasses.replace(CFG, step_impl="pallas")
-    for g, algo in ((small_graph, walks.urw), (weighted_graph, walks.deepwalk)):
+    for g, algo in ((small_graph, urw), (weighted_graph, deepwalk)):
         r1, r2 = algo(g, starts, 8, cfg=CFG), algo(g, starts, 8, cfg=cfgp)
         assert np.array_equal(*(r.as_numpy()[0] for r in (r1, r2)))
 
 
 def test_ppr_geometric_lengths(small_graph, rng):
     starts = rng.integers(0, small_graph.num_vertices, 800)
-    res = walks.ppr(small_graph, starts, alpha=0.3, max_hops=64, cfg=CFG)
+    res = ppr(small_graph, starts, 0.3, 64, cfg=CFG)
     _, l = res.as_numpy()
     # hops ~ Geometric(0.3) truncated by dead ends: mean well below 1/0.3+1
     assert 1.0 < l.mean() < 1 + 1 / 0.3 + 1
@@ -117,7 +148,7 @@ def test_metapath_early_termination(rng):
     from repro.graph import make_dataset
     g = make_dataset("WG", scale_override=9, num_edge_types=4)
     starts = rng.integers(0, g.num_vertices, 300)
-    res = walks.metapath(g, starts, [0, 1, 2, 3], 16, cfg=CFG)
+    res = metapath(g, starts, [0, 1, 2, 3], 16, cfg=CFG)
     p, l = res.as_numpy()
     # with 4 types, most walks terminate early -> stressing the scheduler
     assert l.mean() < 16

@@ -1,9 +1,13 @@
 """Fused device-resident superstep (`step_impl="fused"`) + shared Threefry
 RNG: bit-equality of the rng refactor against the jax.random derivation,
 and bit-identity of the fused kernel against the jnp superstep over
-{uniform, alias} × {zero_bubble, static} × {closed batch, chunked stream}.
+{uniform, ppr, alias, rejection_n2v, metapath} × {zero_bubble, static} ×
+{closed batch, chunked stream} — every loop-free phase program lowers to
+the kernel; only the chunked reservoir scan falls back (warning once per
+compiled walker).
 """
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +24,19 @@ SPECS = {
     "uniform": SamplerSpec(kind="uniform"),
     "ppr": SamplerSpec(kind="uniform", stop_prob=0.15),
     "alias": SamplerSpec(kind="alias"),
+    "rejection_n2v": SamplerSpec(kind="rejection_n2v", p=2.0, q=0.5,
+                                 rejection_rounds=6),
+    "metapath": SamplerSpec(kind="metapath", metapath=(0, 1, 2)),
 }
+
+
+@pytest.fixture(scope="module")
+def fused_graph():
+    """One graph with every payload the fused matrix samples from
+    (weights + alias tables + edge types)."""
+    from repro.graph import make_dataset
+    return make_dataset("WG", scale_override=9, weighted=True,
+                        with_alias=True, num_edge_types=3)
 
 
 def _fused(cfg, hops_per_launch=4, **kw):
@@ -118,14 +134,16 @@ def test_epoch_zero_matches_legacy_tuple(rng):
 
 @pytest.mark.parametrize("algo", sorted(SPECS))
 @pytest.mark.parametrize("mode", ["zero_bubble", "static"])
-def test_fused_closed_batch_bit_identical(algo, mode, weighted_graph, rng):
+def test_fused_closed_batch_bit_identical(algo, mode, fused_graph, rng):
     """Closed batch: fused kernel == jnp superstep — paths, lengths, and
-    every stat except the launch count."""
+    every stat except the launch count — for every covered sampler
+    (rejection Node2Vec's in-kernel verify and MetaPath's typed gather
+    included)."""
     spec = SPECS[algo]
     cfg = dataclasses.replace(CFG, mode=mode)
-    starts = rng.integers(0, weighted_graph.num_vertices, 80).astype(np.int32)
-    r_jnp = _run_walks(weighted_graph, starts, spec, cfg, seed=9)
-    r_fused = _run_walks(weighted_graph, starts, spec, _fused(cfg), seed=9)
+    starts = rng.integers(0, fused_graph.num_vertices, 80).astype(np.int32)
+    r_jnp = _run_walks(fused_graph, starts, spec, cfg, seed=9)
+    r_fused = _run_walks(fused_graph, starts, spec, _fused(cfg), seed=9)
     _assert_same_run(r_jnp, r_fused)
     assert int(r_fused.stats.launches) < int(r_fused.stats.supersteps)
     assert int(r_jnp.stats.launches) == int(r_jnp.stats.supersteps)
@@ -171,15 +189,43 @@ def test_fused_no_record_paths(small_graph, rng):
             assert int(getattr(r1.stats, f)) == int(getattr(r2.stats, f)), f
 
 
-def test_fused_fallback_warns_and_matches(small_graph, rng):
-    """Samplers the kernel doesn't cover fall back to the jnp superstep
-    with a warning — bit-identical output."""
-    spec = SamplerSpec(kind="rejection_n2v", p=2.0, q=0.5)
-    starts = rng.integers(0, small_graph.num_vertices, 40).astype(np.int32)
-    ref = _run_walks(small_graph, starts, spec, CFG, seed=1)
+def test_fused_fallback_warns_and_matches(weighted_graph, rng):
+    """The one remaining uncovered program — the chunked reservoir scan
+    (weighted Node2Vec) — falls back to the jnp superstep with a warning,
+    bit-identically."""
+    spec = SamplerSpec(kind="reservoir_n2v", p=2.0, q=0.5,
+                       reservoir_chunk=16)
+    starts = rng.integers(0, weighted_graph.num_vertices, 40).astype(np.int32)
+    ref = _run_walks(weighted_graph, starts, spec, CFG, seed=1)
     with pytest.warns(RuntimeWarning, match="falling back"):
-        got = _run_walks(small_graph, starts, spec, _fused(CFG), seed=1)
+        got = _run_walks(weighted_graph, starts, spec, _fused(CFG), seed=1)
     _assert_same_run(ref, got)
+
+
+def test_fused_fallback_warns_once_per_walker(weighted_graph, rng):
+    """The fallback warning is deduplicated per compiled Walker (keyed on
+    (kind, step_impl)): the first engine build warns, later stream/engine
+    builds on the same walker do not re-spam it."""
+    from repro import walker
+
+    program = walker.WalkProgram.node2vec(2.0, 0.5, 6, weighted=True)
+    ex = walker.ExecutionConfig(num_slots=16, step_impl="fused",
+                                hops_per_launch=4)
+    w = walker.compile(program, execution=ex)
+    starts = rng.integers(0, weighted_graph.num_vertices, 16).astype(np.int32)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        w.run(weighted_graph, starts, seed=0)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        stream = w.stream(weighted_graph, capacity=16, seed=0)
+        stream.inject(starts)
+        stream.drain(chunk=4)
+    assert not [c for c in caught if issubclass(c.category, RuntimeWarning)
+                and "falling back" in str(c.message)]
+    # a *fresh* walker warns again (the registry is per-walker, not global)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        walker.compile(program, execution=ex).run(weighted_graph, starts,
+                                                  seed=0)
 
 
 # ------------------------------------------------- fused vs jnp, stream
@@ -194,11 +240,12 @@ def _stream_drain(runner, graph, state, seed, chunk):
 
 
 @pytest.mark.parametrize("algo", sorted(SPECS))
-def test_fused_chunked_stream_bit_identical(algo, weighted_graph, rng):
+def test_fused_chunked_stream_bit_identical(algo, fused_graph, rng):
     """Open system: mid-stream injection + odd chunk sizes, fused vs jnp —
-    identical paths/lengths/done and identical stream stats."""
+    identical paths/lengths/done and identical stream stats, for every
+    covered sampler."""
     spec = SPECS[algo]
-    starts = rng.integers(0, weighted_graph.num_vertices, 90).astype(np.int32)
+    starts = rng.integers(0, fused_graph.num_vertices, 90).astype(np.int32)
     cfg = dataclasses.replace(CFG, num_slots=16)
 
     def run(c):
@@ -207,11 +254,11 @@ def test_fused_chunked_stream_bit_identical(algo, weighted_graph, rng):
         st = inject_queries(st, jnp.arange(50, dtype=jnp.int32),
                             jnp.asarray(starts[:50]),
                             jnp.zeros((50,), jnp.int32), 50)
-        st = runner(weighted_graph, st, 8, 5)   # mid-flight...
+        st = runner(fused_graph, st, 8, 5)   # mid-flight...
         st = inject_queries(st, jnp.arange(50, 90, dtype=jnp.int32),
                             jnp.asarray(starts[50:]),
                             jnp.zeros((40,), jnp.int32), 40)
-        return _stream_drain(runner, weighted_graph, st, 8, 7)
+        return _stream_drain(runner, fused_graph, st, 8, 7)
 
     s1 = run(cfg)
     s2 = run(_fused(cfg, hops_per_launch=3))

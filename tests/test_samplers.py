@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.samplers import SamplerSpec, edge_exists, get_sampler
+from repro.core.phase_program import make_sampler
+from repro.core.samplers import SamplerSpec, edge_exists
 from repro.core.tasks import WalkerSlots
 from repro.graph import build_alias_tables, build_csr
 
@@ -32,7 +33,7 @@ def _empirical(g, spec, n=20000, v_prev=None):
     # vary query ids -> independent streams
     from repro.graph.csr import row_access
     addr, deg = row_access(g, slots.v_curr)
-    sampler = get_sampler(spec)
+    sampler = make_sampler(spec)
     idx, ok = sampler(g, addr, deg, slots, jax.random.PRNGKey(0))
     e = np.asarray(jnp.clip(addr + idx, 0, g.num_edges - 1))
     chosen = np.asarray(g.col)[e]
@@ -94,7 +95,7 @@ def test_node2vec_distribution(weighted, rng):
     slots = _slots([2] * n, v_prev=[1] * n)
     from repro.graph.csr import row_access
     addr, deg = row_access(g, slots.v_curr)
-    idx, ok = get_sampler(spec)(g, addr, deg, slots, jax.random.PRNGKey(1))
+    idx, ok = make_sampler(spec)(g, addr, deg, slots, jax.random.PRNGKey(1))
     e = np.asarray(jnp.clip(addr + idx, 0, g.num_edges - 1))
     chosen = np.asarray(g.col)[e]
     nbrs, probs = _n2v_exact(g, 1, 2, p_, q_,
@@ -112,7 +113,7 @@ def test_metapath_respects_types(rng):
     slots = _slots(starts)
     from repro.graph.csr import row_access
     addr, deg = row_access(g, slots.v_curr)
-    idx, ok = get_sampler(spec)(g, addr, deg, slots, jax.random.PRNGKey(2))
+    idx, ok = make_sampler(spec)(g, addr, deg, slots, jax.random.PRNGKey(2))
     e = np.asarray(jnp.clip(addr + idx, 0, g.num_edges - 1))
     et = np.asarray(g.edge_type)
     ok = np.asarray(ok)

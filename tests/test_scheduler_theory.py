@@ -6,10 +6,12 @@ import numpy as np
 import pytest
 
 from conftest import hypothesis_or_stubs
-from repro.core import EngineConfig, walks
+from repro.core import EngineConfig
+from repro.core.samplers import SamplerSpec
 from repro.core.scheduler import (analyze_run, butterfly_feedback_delay,
                                   min_queue_depth, per_pipeline_fifo_depth,
                                   routing_capacity)
+from repro.core.walk_engine import _run_walks
 from repro.graph import build_csr
 from repro.graph.generators import GRAPH500, rmat_edges
 
@@ -44,6 +46,7 @@ def test_zero_starvation_at_theorem_depth(seed, delay, slots_pow):
     starts = np.random.default_rng(seed).integers(0, n, 4 * slots)
     cfg = EngineConfig(num_slots=slots, max_hops=8, injection_delay=delay,
                        record_paths=False)
-    a = analyze_run(walks.urw(g, starts, 8, cfg=cfg).stats)
+    a = analyze_run(_run_walks(g, starts, SamplerSpec(kind="uniform"),
+                               cfg).stats)
     assert a.starved == 0
     assert a.terminations == len(starts)

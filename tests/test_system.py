@@ -12,8 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import EngineConfig, walks
+from repro.core import EngineConfig
+from repro.core.samplers import SamplerSpec
 from repro.core.scheduler import analyze_run
+from repro.core.walk_engine import _run_walks
 from repro.graph import make_dataset
 from repro.models import embeddings as emb
 
@@ -25,8 +27,8 @@ def test_deepwalk_to_skipgram_end_to_end(rng):
     embeddings of co-walked vertices must be closer than random pairs."""
     g = make_dataset("WG", scale_override=9, weighted=True, with_alias=True)
     starts = rng.integers(0, g.num_vertices, 400).astype(np.int32)
-    res = walks.deepwalk(g, starts, 12,
-                         cfg=EngineConfig(num_slots=128, max_hops=12))
+    res = _run_walks(g, starts, SamplerSpec(kind="alias"),
+                     EngineConfig(num_slots=128, max_hops=12))
     paths, lengths = res.as_numpy()
 
     cfg = emb.SkipGramConfig(num_vertices=g.num_vertices, dim=32,
@@ -71,10 +73,11 @@ def test_zero_bubble_speedup_chain(rng):
     g = make_dataset("CP", scale_override=10)   # skewed, many danglers
     starts = rng.integers(0, g.num_vertices, 2000).astype(np.int32)
     base = EngineConfig(num_slots=256, max_hops=20, record_paths=False)
-    a_zb = analyze_run(walks.urw(g, starts, 20, cfg=base).stats)
-    a_st = analyze_run(walks.urw(
-        g, starts, 20,
-        cfg=dataclasses.replace(base, mode="static")).stats)
+    spec = SamplerSpec(kind="uniform")
+    a_zb = analyze_run(_run_walks(g, starts, spec, base).stats)
+    a_st = analyze_run(_run_walks(
+        g, starts, spec,
+        dataclasses.replace(base, mode="static")).stats)
     assert a_zb.steps == a_st.steps          # identical work (stateless!)
     assert a_zb.supersteps < a_st.supersteps  # done sooner
     assert a_zb.occupancy > a_st.occupancy + 0.15

@@ -92,6 +92,8 @@ cases = [
     ("node2vec", walker.WalkProgram.node2vec(2.0, 0.5, H), {}),
     ("node2vec_w", walker.WalkProgram.node2vec(2.0, 0.5, H, weighted=True),
      dict(weighted=True)),
+    ("metapath", walker.WalkProgram.metapath([0, 1, 2], H),
+     dict(num_edge_types=3)),
 ]
 for name, program, kwargs in cases:
     g = make_dataset("WG", scale_override=9, **kwargs)
@@ -125,19 +127,24 @@ print("SHARDED_PARITY_OK")
 
 @pytest.mark.slow
 def test_sharded_parity_two_devices():
-    """Every distributable algorithm, 2-device sharded backend ==
-    single-device reference, through compile(program, backend='sharded') —
-    closed batch AND open stream over the same ring substrate."""
+    """Every algorithm — metapath included, now that type_offsets shard
+    with the CSR — on the 2-device sharded backend == single-device
+    reference, through compile(program, backend='sharded'): closed batch
+    AND open stream over the same ring substrate."""
     out = run_in_subprocess(SHARDED_PARITY, devices=2)
     assert "SHARDED_PARITY_OK" in out
 
 
-def test_sharded_metapath_declares_no_capability(rich_graph, rng):
-    starts = rng.integers(0, rich_graph.num_vertices, 16).astype(np.int32)
+def test_sharded_metapath_needs_typed_partition(small_graph, rng):
+    """A metapath program on an *untyped* partitioned graph fails with an
+    actionable error (type_offsets were never built)."""
+    from repro.graph import partition_graph
+    pg = partition_graph(small_graph, 1)
+    starts = rng.integers(0, small_graph.num_vertices, 16).astype(np.int32)
     w = walker.compile(_programs()["metapath"], backend="sharded",
                        execution=walker.ExecutionConfig(num_devices=1))
-    with pytest.raises(NotImplementedError, match="capability"):
-        w.run(rich_graph, starts)
+    with pytest.raises(ValueError, match="type_offsets"):
+        w.run(pg, starts)
 
 
 # ------------------------------------------------------------ validation
@@ -156,6 +163,52 @@ def test_program_validation():
         walker.compile("urw")
     with pytest.raises(ValueError, match="backend"):
         walker.compile(walker.WalkProgram.urw(), backend="tpu_pod")
+
+
+def test_sampler_spec_validation():
+    """Malformed specs fail at construction (not deep inside tracing):
+    the kind registry, the MetaPath schedule, and the Node2Vec params are
+    all checked by SamplerSpec.__post_init__ itself."""
+    from repro.core.samplers import SamplerSpec
+    with pytest.raises(ValueError, match="schedule"):
+        SamplerSpec(kind="metapath", metapath=())
+    with pytest.raises(ValueError, match="schedule"):
+        SamplerSpec(kind="metapath")
+    with pytest.raises(ValueError, match="non-negative"):
+        SamplerSpec(kind="metapath", metapath=(0, -1))
+    with pytest.raises(ValueError, match="unknown sampler kind"):
+        SamplerSpec(kind="levy_flight")
+    with pytest.raises(ValueError, match="positive"):
+        SamplerSpec(kind="rejection_n2v", q=-1.0)
+    with pytest.raises(ValueError, match="rejection_rounds"):
+        SamplerSpec(kind="rejection_n2v", rejection_rounds=0)
+    with pytest.raises(ValueError, match="reservoir_chunk"):
+        SamplerSpec(kind="reservoir_n2v", reservoir_chunk=0)
+
+
+def test_support_matrix_generated_from_programs():
+    """The docs support matrix is generated from the phase-program
+    declarations — docs/api.md must embed render_support_matrix()'s
+    output verbatim (regenerate with
+    ``python -m repro.core.phase_program``)."""
+    import os
+
+    from repro.core.phase_program import (fused_kinds, lower,
+                                          render_support_matrix,
+                                          support_rows)
+    rows = {r["kind"]: r for r in support_rows()}
+    # the acceptance surface: fused covers everything but the chunked
+    # reservoir loop, and every kind (metapath included) is sharded
+    assert fused_kinds() == ("uniform", "alias", "rejection_n2v",
+                             "metapath")
+    assert all(r["capability"] is not None for r in rows.values())
+    assert rows["metapath"]["capability"] == "first_order"
+    assert lower(walker.WalkProgram.node2vec(
+        2.0, 0.5, weighted=True).spec).schedule == "chunked_loop"
+    docs = open(os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "docs", "api.md")).read()
+    for line in render_support_matrix().splitlines():
+        assert line in docs, f"docs/api.md out of date, missing: {line}"
 
 
 def test_execution_config_validation():
@@ -257,31 +310,16 @@ def test_public_api_snapshot():
 
 
 def test_deprecated_names_importable():
-    """Legacy entry points survive as shims (external callers)."""
+    """Surviving legacy entry points remain importable shims; the
+    ``core.walks`` / ``core.distributed_n2v`` modules (two PRs past
+    deprecation) are gone for good."""
     from repro.core.distributed import run_distributed        # noqa: F401
-    from repro.core.distributed_n2v import run_distributed_n2v  # noqa: F401
     from repro.core.walk_engine import (make_engine,          # noqa: F401
                                         make_superstep_runner, run_walks)
-    from repro.core.walks import (ALGORITHMS, deepwalk,       # noqa: F401
-                                  metapath, node2vec, ppr, urw)
-    assert set(ALGORITHMS) == {"urw", "ppr", "deepwalk", "node2vec",
-                               "metapath"}
-
-
-def test_legacy_walks_shim_warns_and_matches(rich_graph, rng):
-    """walks.urw keeps its signature + behavior but warns."""
-    from repro.core import walks
-    starts = rng.integers(0, rich_graph.num_vertices, 64).astype(np.int32)
-    cfg = EngineConfig(num_slots=32, max_hops=6)
-    with pytest.deprecated_call():
-        legacy = walks.urw(rich_graph, starts, 6, cfg=cfg, seed=9)
-    new = walker.compile(
-        walker.WalkProgram.urw(6),
-        execution=walker.ExecutionConfig(num_slots=32)).run(
-            rich_graph, starts, seed=9)
-    lp, ll = legacy.as_numpy()
-    np_, nl = new.as_numpy()
-    assert np.array_equal(lp, np_) and np.array_equal(ll, nl)
+    with pytest.raises(ImportError):
+        from repro.core import walks                          # noqa: F401
+    with pytest.raises(ImportError):
+        from repro.core import distributed_n2v                # noqa: F401
 
 
 def test_legacy_run_walks_shim_warns(rich_graph, rng):
