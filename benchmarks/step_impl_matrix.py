@@ -33,6 +33,10 @@ def _algos(hops):
         "rejection_n2v": WalkProgram.node2vec(2.0, 0.5, hops,
                                               rejection_rounds=8),
         "metapath": WalkProgram.metapath([0, 1, 2], hops),
+        # PR-6 fused coverage: weighted Node2Vec's chunked E-S reservoir
+        # runs the in-kernel chunk loop — the last matrix row.
+        "reservoir_n2v": WalkProgram.node2vec(2.0, 0.5, hops,
+                                              weighted=True),
     }
 
 

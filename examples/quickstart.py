@@ -1,9 +1,6 @@
-"""Quickstart: declare programs, compile them, run every GRW algorithm.
+"""Quickstart: compile one `WalkProgram` per GRW algorithm and run it.
 
-One `WalkProgram` (algorithm) × one `ExecutionConfig` (machine) →
-`walker.compile(program)` → `.run(graph, starts)`.  The same program also
-streams (`.stream`) and serves (`.serve`), and compiles to the sharded
-multi-device backend — see examples/distributed_walks.py.
+API reference: docs/api.md · execution pipeline: docs/architecture.md.
 
   PYTHONPATH=src python examples/quickstart.py            # full demo
   PYTHONPATH=src python examples/quickstart.py --scale 10 --queries 300 \

@@ -1,10 +1,6 @@
-"""End-to-end driver (deliverable b): DeepWalk node-embedding training.
+"""End-to-end driver: walk corpus → skip-gram DeepWalk embeddings.
 
-RidgeWalker's engine generates the walk corpus; a skip-gram model with
-negative sampling is trained on sliding-window pairs with the framework's
-AdamW + checkpointing + fault-tolerant loop.  Scale knobs make this the
-"train for a few hundred steps" driver (at --scale 16 --dim 256 the model
-is ~33M params; --scale 18 --dim 384 exceeds 100M):
+Walker API: docs/api.md · perf methodology: docs/benchmarks.md.
 
   PYTHONPATH=src python examples/train_deepwalk_embeddings.py \
       --scale 12 --dim 64 --steps 200

@@ -25,9 +25,11 @@ factorization made explicit:
         ``_TwoPhaseN2VCap`` / ``_ChunkedReservoirCap`` trio);
       - the fused device-resident Pallas kernel
         (`kernels/fused_superstep`) stages the same phases' operands
-        through its double-buffered DMA machinery for every program
-        whose phase list it can keep SMEM-resident (``fused`` flag —
-        everything except the chunked reservoir scan).
+        through its double-buffered DMA machinery for every program:
+        loop-free phase lists run as one launch-resident pass, and the
+        chunked reservoir scan runs as an in-kernel degree-adaptive
+        chunk loop with its carry held in SMEM (``fused`` is True for
+        all programs — there is no jnp fallback).
 
 Because each phase's arithmetic lives in exactly one executor here and
 each backend drives the *same* executors (or, for the kernel, a pinned
@@ -62,8 +64,12 @@ covers deg(v_curr) (``chunked_reservoir``).
 
 Run ``python -m repro.core.phase_program`` to regenerate the
 sampler × step_impl × backend support matrix embedded in
-``docs/api.md`` — the docs table is generated from these declarations,
-not hand-maintained (pinned by a test).
+``docs/api.md`` and ``python -m repro.core.phase_program --schedule``
+for the phase-program → schedule → backend table in
+``docs/architecture.md`` — both docs tables are generated from these
+declarations, not hand-maintained (pinned by tests;
+``python -m repro.core.phase_program --check`` fails on drift and is
+run by CI).
 """
 from __future__ import annotations
 
@@ -82,7 +88,8 @@ from repro.core.samplers import (KINDS, SALT_CHUNK0, SALT_COLUMN,
 
 __all__ = ["KINDS", "Phase", "PhaseProgram", "lower", "make_sampler",
            "reservoir_scan", "chunk_gather", "chunk_score", "fused_kinds",
-           "support_rows", "render_support_matrix"]
+           "support_rows", "render_support_matrix",
+           "render_schedule_table"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,11 +164,16 @@ class PhaseProgram:
 
     @property
     def fused(self) -> bool:
-        """Lowerable to the device-resident fused superstep kernel: the
-        phase list must be loop-free so one launch-resident pass covers
-        the hop (the O(deg) chunked reservoir scan is the one program
-        that is not)."""
-        return not self.loop
+        """Lowerable to the device-resident fused superstep kernel.
+
+        True for every program: loop-free phase lists run as one
+        launch-resident pass, and the looping chunk program
+        (``chunked_loop``) runs as an in-kernel degree-adaptive chunk
+        loop whose reservoir carry stays SMEM-resident — so the fused
+        kernel covers the whole sampler matrix and the engine never
+        falls back to jnp.
+        """
+        return True
 
     @property
     def pallas(self) -> bool:
@@ -354,6 +366,7 @@ def reservoir_scan(spec: SamplerSpec, g, addr, deg, slots, base_key):
     W = addr.shape[0]
 
     def chunk_body(c, carry):
+        """One gather+score trip of the chunked E-S scan (fori body)."""
         best_key, best_idx = carry
         u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop, CH,
                                    SALT_CHUNK0 + c, epoch=slots.epoch)
@@ -420,6 +433,7 @@ def make_sampler(spec: SamplerSpec):
     execs = [( _JNP_EXEC[(p.op, p.variant)], p) for p in prog.phases]
 
     def sample(g, addr, deg, slots, base_key):
+        """Execute the lowered phases over one superstep's lane pool."""
         ctx = _Ctx(spec, g, addr, deg, slots, base_key)
         for fn, ph in execs:
             fn(ph, ctx)
@@ -449,11 +463,16 @@ def _default_spec(kind: str) -> SamplerSpec:
 
 
 def support_rows():
-    """One row per sampler kind: which step_impl lowers it natively and
-    which sharded capability it declares — read off the phase programs."""
+    """One row per sampler kind: which step_impl lowers it natively,
+    which sharded capability it declares, and the schedule / carry /
+    residency facts the architecture table documents — all read off the
+    phase programs."""
     rows = []
     for kind in KINDS:
         prog = lower(_default_spec(kind))
+        residency = ("v_curr + v_prev"
+                     if any(p.residency == "v_prev" for p in prog.phases)
+                     else "v_curr")
         rows.append({
             "kind": kind,
             "label": _KIND_LABEL[kind],
@@ -462,13 +481,18 @@ def support_rows():
             "fused": prog.fused,
             "capability": prog.capability,
             "schedule": prog.schedule,
+            "carry": prog.carry,
+            "residency": residency,
+            "requires": prog.requires,
+            "phases": prog.phases,
         })
     return rows
 
 
 def render_support_matrix() -> str:
     """Markdown sampler × step_impl × backend matrix (embedded verbatim
-    in docs/api.md — regenerate with ``python -m repro.core.phase_program``)."""
+    in docs/api.md — regenerate with
+    ``python -m repro.core.phase_program``)."""
     lines = [
         "| sampler | `jnp` | `pallas` (one-hop kernel) "
         "| `fused` (k-superstep kernel) | `sharded` capability |",
@@ -476,17 +500,111 @@ def render_support_matrix() -> str:
     ]
     for r in support_rows():
         pallas = "✓" if r["pallas"] else "falls back to jnp"
-        fused = "✓" if r["fused"] else "falls back to jnp (warns)"
+        fused = "✓" if r["fused"] else "falls back to jnp"
         lines.append(f"| {r['label']} | ✓ | {pallas} | {fused} "
                      f"| `{r['capability']}` |")
     return "\n".join(lines)
 
 
+def _phase_sig(ph: Phase) -> str:
+    """Compact one-token rendering of a phase for the schedule table."""
+    tag = ph.op if not ph.variant else f"{ph.op}:{ph.variant}"
+    if ph.op in ("draw", "gather") and ph.width > 1:
+        tag += f"×{ph.width}"
+    if ph.residency == "v_prev":
+        tag += "@v_prev"
+    return tag
+
+
+def render_schedule_table() -> str:
+    """Markdown phase-program → schedule → backend table (embedded
+    verbatim in docs/architecture.md — regenerate with
+    ``python -m repro.core.phase_program --schedule``).
+
+    Widths are those of the default spec (K = rejection_rounds = 12,
+    CH = reservoir_chunk = 64); they scale with the spec fields but the
+    schedule / carry / residency columns are spec-invariant.
+    """
+    lines = [
+        "| sampler | phases | schedule | carry | residency "
+        "| graph payloads |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in support_rows():
+        phases = " → ".join(_phase_sig(p) for p in r["phases"])
+        loop = " (looped per chunk)" if r["schedule"] == "chunked_loop" \
+            else ""
+        req = ", ".join(f"`{x}`" for x in r["requires"]) or "—"
+        lines.append(f"| {r['label']} | `{phases}`{loop} "
+                     f"| `{r['schedule']}` | `{r['carry']}` "
+                     f"| {r['residency']} | {req} |")
+    return "\n".join(lines)
+
+
 def fused_kinds() -> Tuple[str, ...]:
     """Sampler kinds the fused device-resident kernel covers (derived
-    from the phase programs, not a hand-kept list)."""
+    from the phase programs, not a hand-kept list — all of them since
+    the chunked reservoir scan moved in-kernel)."""
     return tuple(r["kind"] for r in support_rows() if r["fused"])
 
 
+def _check_docs_embeddings() -> int:
+    """Verify the committed docs embed the generated tables verbatim.
+
+    Returns a process exit code: 0 when every generated line appears in
+    its doc, 1 (with a diff-style report) on drift — the CI docs-drift
+    job runs ``python -m repro.core.phase_program --check``.
+    """
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[3]
+    targets = [
+        (root / "docs" / "api.md", render_support_matrix(),
+         "support matrix"),
+        (root / "docs" / "architecture.md", render_support_matrix(),
+         "support matrix"),
+        (root / "docs" / "architecture.md", render_schedule_table(),
+         "schedule table"),
+    ]
+    failures = []
+    for path, table, name in targets:
+        text = path.read_text() if path.exists() else ""
+        missing = [ln for ln in table.splitlines() if ln not in text]
+        if missing:
+            failures.append((path, name, missing))
+    for path, name, missing in failures:
+        print(f"DRIFT: {path} is missing {len(missing)} generated "
+              f"{name} line(s):")
+        for ln in missing:
+            print(f"  {ln}")
+    if failures:
+        print("regenerate with `python -m repro.core.phase_program` / "
+              "`--schedule` and paste the output into the docs")
+        return 1
+    print("docs embeddings up to date")
+    return 0
+
+
+def _main(argv=None) -> int:
+    """CLI: print the generated docs tables or check them for drift."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.phase_program",
+        description="Generate (or drift-check) the docs tables derived "
+                    "from the sampler phase programs.")
+    ap.add_argument("--schedule", action="store_true",
+                    help="print the phase-program → schedule → backend "
+                         "table (docs/architecture.md) instead of the "
+                         "support matrix (docs/api.md)")
+    ap.add_argument("--check", action="store_true",
+                    help="verify docs/*.md embed the generated tables "
+                         "verbatim; exit 1 on drift")
+    args = ap.parse_args(argv)
+    if args.check:
+        return _check_docs_embeddings()
+    print(render_schedule_table() if args.schedule
+          else render_support_matrix())
+    return 0
+
+
 if __name__ == "__main__":
-    print(render_support_matrix())
+    raise SystemExit(_main())

@@ -399,33 +399,7 @@ def _work_left(state: StreamState):
     return (state.queue.head < state.queue.tail) | jnp.any(state.slots.active)
 
 
-def _effective_impl(spec: SamplerSpec, cfg: EngineConfig,
-                    warned: Optional[set] = None) -> str:
-    """Resolve ``cfg.step_impl``, falling back to ``jnp`` (with a warning)
-    for phase programs the fused kernel cannot keep launch-resident (the
-    chunked reservoir loop) — the fallback is bit-identical, only the
-    launch cadence differs.
-
-    ``warned`` is a caller-owned registry keyed on ``(kind, step_impl)``:
-    a compiled `Walker` passes its own set so the warning fires once per
-    walker, not once per engine/stream build (streaming launches used to
-    re-emit it on every advance cadence rebuild)."""
-    if cfg.step_impl == "fused" and not lower_program(spec).fused:
-        from repro.core.phase_program import fused_kinds
-        key = (spec.kind, cfg.step_impl)
-        if warned is None or key not in warned:
-            warnings.warn(
-                f"step_impl='fused' covers samplers {fused_kinds()}; "
-                f"falling back to the bit-identical 'jnp' superstep for "
-                f"{spec.kind!r}", RuntimeWarning, stacklevel=3)
-            if warned is not None:
-                warned.add(key)
-        return "jnp"
-    return cfg.step_impl
-
-
-def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig,
-                          warned: Optional[set] = None):
+def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
     """Build a jitted ``run_supersteps(graph, state, seed, k) -> StreamState``.
 
     Advances the stream by at most ``k`` supersteps, stopping early when no
@@ -439,9 +413,12 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig,
     bit-exact paths, O(state) host traffic per launch instead of per hop.
     """
     depth = _stage_depth(cfg)
-    impl = _effective_impl(spec, cfg, warned)
+    # Every phase program lowers to the fused kernel (the chunked
+    # reservoir runs as an in-kernel chunk loop) — cfg.step_impl is
+    # taken at face value, no fallback resolution.
+    assert lower_program(spec).fused, spec.kind
 
-    if impl == "fused":
+    if cfg.step_impl == "fused":
         from repro.kernels.fused_superstep import build_fused_launch
         launch = build_fused_launch(spec, cfg, depth)
 
@@ -488,8 +465,7 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig,
     return run_supersteps
 
 
-def build_engine(spec: SamplerSpec, cfg: EngineConfig,
-                 warned: Optional[set] = None):
+def build_engine(spec: SamplerSpec, cfg: EngineConfig):
     """Build a jitted ``run(graph, start_vertices, seed) -> WalkResult``
     (the closed system: drain a fixed query batch to completion).
 
@@ -501,9 +477,9 @@ def build_engine(spec: SamplerSpec, cfg: EngineConfig,
     each) instead of per-hop superstep bounces — bit-identical paths,
     O(state) host traffic per launch.
     """
-    impl = _effective_impl(spec, cfg, warned)
+    assert lower_program(spec).fused, spec.kind
     fused_launch = None
-    if impl == "fused":
+    if cfg.step_impl == "fused":
         from repro.kernels.fused_superstep import build_fused_launch
         fused_launch = build_fused_launch(spec, cfg, _stage_depth(cfg))
 
@@ -535,7 +511,7 @@ def build_engine(spec: SamplerSpec, cfg: EngineConfig,
         def cond(st):
             return _work_left(st) & (st.stats.supersteps < cfg.max_supersteps)
 
-        if impl == "fused":
+        if cfg.step_impl == "fused":
             def body(st):
                 kc = jnp.minimum(cfg.hops_per_launch,
                                  cfg.max_supersteps - st.stats.supersteps)

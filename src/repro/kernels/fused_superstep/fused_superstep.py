@@ -45,25 +45,32 @@ stages its gather/score phases through the DMA machinery here —
     per lane (``type_offsets[v, t:t+2]`` packs the sub-segment bounds,
     like the RP_entry pair), then the same uniform pick;
   * ``rejection_n2v``: the csr-gather(K) / first-accept score pair runs
-    per lane with in-kernel per-round uniforms (same Threefry counters
-    as ``rng.task_uniforms(..., 2K, ...)``) and an O(log d) adjacency
-    bisection over N(v_prev) via single-element column DMAs — the
-    verify phase's operands never leave SMEM.
+    breadth-wise across the lane pool with in-kernel per-round uniforms
+    (same Threefry counters as ``rng.task_uniforms(..., 2K, ...)``) and
+    an O(log d) adjacency bisection over N(v_prev) whose proposal /
+    probe column fetches are the same double-buffered one-element DMA
+    loops as the uniform pipeline — the verify phase's operands never
+    leave SMEM;
+  * ``reservoir_n2v`` (weighted Node2Vec): the ``chunked_loop`` schedule
+    runs in-kernel — a degree-adaptive chunk loop (trip count
+    ``ceil(deg/chunk)`` per lane, the in-kernel form of the jnp path's
+    ``adaptive_chunks`` trip bounding) streams each lane's CSR segment
+    through ping-pong (2, chunk) column/weight DMA buffers (chunk c+1's
+    fetch in flight while chunk c is scored), and the Efraimidis–
+    Spirakis reservoir carry (running E-S key + winning offset per
+    lane) lives in SMEM alongside the lane pool, folded with the same
+    float ops as `samplers.es_chunk_score`/`es_merge`.
 
-Only the chunked reservoir scan (weighted Node2Vec) stays on the jnp
-superstep (its O(deg) loop is the one program the launch-resident pass
-cannot bound); the engine warns once per compiled walker and falls back
-bit-identically.
+Every sampler kind therefore runs device-resident with overlapped
+memory traffic — there is no jnp fallback path left in the engine.
 
 Semantics are pinned bit-identical to the jnp superstep
-(`core/walk_engine.py`) for every covered sampler, including PPR
-stop draws, both scheduling modes, and the open-system ring economy —
+(`core/walk_engine.py`) for every sampler, including PPR stop draws,
+both scheduling modes, and the open-system ring economy —
 ``tests/test_fused_step.py``.  Layout note: slot state is (W,) and the
 query ring (Q,) in SMEM, which assumes the modest W/Q of a single core's
-lane pool; the HBM-resident buffers (graph CSR, alias tables,
-type_offsets, paths) are unbounded.  The rejection/metapath gathers use
-synchronous one-shot DMAs (correctness-first; the uniform/alias pipeline
-keeps the overlapped double-buffered scheme).
+lane pool; the HBM-resident buffers (graph CSR, edge weights, alias
+tables, type_offsets, paths) are unbounded.
 """
 from __future__ import annotations
 
@@ -75,9 +82,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import rng
-from repro.core.samplers import SALT_COLUMN, SALT_STOP, _uniform_index
+from repro.core.samplers import (SALT_CHUNK0, SALT_COLUMN, SALT_STOP,
+                                 _uniform_index)
 from repro.core.tasks import WalkStats
-from repro.kernels.walk_step.walk_step import gather1_loop, row_access_loop
+from repro.kernels.walk_step.walk_step import (gather1_loop, gather2_loop,
+                                               row_access_loop)
 
 # WalkStats slot indices inside the SMEM stats vector.
 STAT = {f: i for i, f in enumerate(WalkStats._fields)}
@@ -92,98 +101,347 @@ def _bisect_iters(max_degree: int) -> int:
 
 
 def _rejection_sample(W, num_vertices, num_edges, K, inv_p, inv_q,
-                      max_degree, k0, k1, rp_ref, load_col, load_pair,
+                      max_degree, k0, k1, rp_ref, col_ref,
+                      colbuf, colsem, pairbuf, pairsem,
                       vcur, vprev, qid_o, hop_o, ep_o,
-                      addr_scr, deg_scr, vnext_scr):
+                      addr_scr, deg_scr, idx_scr, vnext_scr, u1_scr,
+                      plo_scr, phi_scr, blo_scr, bhi_scr,
+                      kq0_scr, kq1_scr, cand_scr, got_scr):
     """In-kernel lowering of the rejection program's gather(csr, K) +
-    score(first_accept) phases: per round, derive (u_col, u_acc) from the
-    same Threefry counters as ``rng.task_uniforms(..., 2K, SALT_COLUMN)``
-    (draw j and draw K+j share one block), propose a column, bisect the
-    candidate in N(v_prev) (identical trip count and compares to
+    score(first_accept) phases, breadth-wise across the lane pool: per
+    round, derive (u_col, u_acc) from the same Threefry counters as
+    ``rng.task_uniforms(..., 2K, SALT_COLUMN)`` (draw j and draw K+j
+    share one block), propose a column, bisect the candidate in
+    N(v_prev) (identical trip count and compares to
     `samplers.edge_exists`), apply the (p, q) bias, and keep the first
     accepted proposal — the last round is forced, like the jnp executor.
+    Every column fetch (proposal, bisection probe, membership check)
+    runs through the double-buffered one-element DMA loop, so lane i+1's
+    fetch is in flight while lane i's arithmetic runs.
     """
     iters = _bisect_iters(max_degree)
     w_max = max(inv_p, 1.0, inv_q)
 
-    def lane_sample(i, _):
-        vp = vprev[i]
-        # RP_entry pair of v_prev: the verify phase's bisection bounds.
-        lo0, hi0 = load_pair(
-            rp_ref.at[pl.ds(jnp.clip(vp, 0, num_vertices - 1), 2)])
+    # RP_entry pair of v_prev per lane: the verify phase's bisection
+    # bounds, plus the lane's folded key pair and accept state.
+    def vp_src(i):
+        vp = jnp.clip(vprev[i], 0, num_vertices - 1)
+        return rp_ref.at[pl.ds(vp, 2)]
+
+    def on_vp(i, lo, hi):
+        plo_scr[i] = lo
+        phi_scr[i] = hi
         c0, c1 = rng.task_key_pair(k0, k1, qid_o[i], hop_o[i], SALT_COLUMN,
                                    ep_o[i])
-        deg = deg_scr[i]
-        addr = addr_scr[i]
+        kq0_scr[i] = c0
+        kq1_scr[i] = c1
+        got_scr[i] = 0
+        vnext_scr[i] = 0
 
-        def round_body(j, carry):
-            got, chosen = carry
-            ju = j.astype(jnp.uint32)
-            y0, y1 = rng.threefry2x32(c0, c1, ju, ju + jnp.uint32(K))
-            u_col = rng.bits_to_uniform(y0)
-            u_acc = rng.bits_to_uniform(y1)
-            prop = _uniform_index(deg, u_col)
-            y = load_col(addr + prop)
-            lo, hi = lo0, hi0
-            for _ in range(iters):
+    gather2_loop(W, vp_src, pairbuf, pairsem, on_vp)
+
+    def round_body(j, _):
+        ju = j.astype(jnp.uint32)
+
+        def lane_draw(i, _i):
+            y0, y1 = rng.threefry2x32(kq0_scr[i], kq1_scr[i], ju,
+                                      ju + jnp.uint32(K))
+            prop = _uniform_index(deg_scr[i], rng.bits_to_uniform(y0))
+            u1_scr[i] = rng.bits_to_uniform(y1)
+            idx_scr[i] = addr_scr[i] + prop
+            blo_scr[i] = plo_scr[i]
+            bhi_scr[i] = phi_scr[i]
+            return 0
+
+        jax.lax.fori_loop(0, W, lane_draw, 0)
+
+        def on_cand(i, v):
+            cand_scr[i] = v
+
+        gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
+                     num_edges, on_cand)
+
+        for _ in range(iters):
+            def on_probe(i, cv):
+                lo = blo_scr[i]
+                hi = bhi_scr[i]
                 active = lo < hi
                 mid = (lo + hi) // 2
-                cv = load_col(mid)
-                go_right = cv < y
-                lo = jnp.where(active & go_right, mid + 1, lo)
-                hi = jnp.where(active & ~go_right, mid, hi)
-            common = (lo < hi0) & (load_col(lo) == y) & (vp >= 0)
+                go_right = cv < cand_scr[i]
+                blo_scr[i] = jnp.where(active & go_right, mid + 1, lo)
+                bhi_scr[i] = jnp.where(active & ~go_right, mid, hi)
+
+            gather1_loop(W, lambda i: (blo_scr[i] + bhi_scr[i]) // 2,
+                         col_ref, colbuf, colsem, num_edges, on_probe)
+
+        def on_member(i, cv):
+            y = cand_scr[i]
+            vp = vprev[i]
+            common = (blo_scr[i] < phi_scr[i]) & (cv == y) & (vp >= 0)
             w = jnp.where(vp < 0, 1.0,
                           jnp.where(y == vp, inv_p,
                                     jnp.where(common, 1.0, inv_q)))
-            accept = (u_acc * w_max <= w) | (j == K - 1)
+            accept = (u1_scr[i] * w_max <= w) | (j == K - 1)
+            got = got_scr[i] == 1
             take = accept & ~got
-            return got | accept, jnp.where(take, y, chosen)
+            vnext_scr[i] = jnp.where(take, y, vnext_scr[i])
+            got_scr[i] = (got | accept).astype(jnp.int32)
 
-        _, chosen = jax.lax.fori_loop(
-            0, K, round_body, (jnp.asarray(False), jnp.int32(0)))
-        vnext_scr[i] = chosen
+        gather1_loop(W, lambda i: blo_scr[i], col_ref, colbuf, colsem,
+                     num_edges, on_member)
         return 0
 
-    jax.lax.fori_loop(0, W, lane_sample, 0)
+    jax.lax.fori_loop(0, K, round_body, 0)
 
 
-def _metapath_sample(W, num_vertices, mp_sched, to_ref, load_col, load_pair,
-                     vcur, hop_o, u0_scr, addr_scr, deg_scr, vnext_scr):
+def _metapath_sample(W, num_vertices, num_edges, mp_sched, to_ref, col_ref,
+                     colbuf, colsem, pairbuf, pairsem,
+                     vcur, hop_o, u0_scr, addr_scr, deg_scr, idx_scr,
+                     vnext_scr):
     """In-kernel lowering of the metapath program's gather(typed) +
-    score(pick_uniform) phases: one 2-element DMA fetches the scheduled
-    type's sub-segment bounds (``type_offsets[v, t:t+2]``), the staged
-    uniform picks within it, and a no-match sub-segment zeroes the lane's
-    effective degree (early termination, same as the jnp executor)."""
+    score(pick_uniform) phases: the scheduled type's packed sub-segment
+    bounds (``type_offsets[v, t:t+2]``) ride the double-buffered
+    2-element DMA loop (lane i+1's bounds in flight while lane i picks),
+    the staged uniform picks within the sub-segment, and a no-match
+    sub-segment zeroes the lane's effective degree (early termination,
+    same as the jnp executor)."""
     L = len(mp_sched)
 
-    def lane_sample(i, _):
+    def seg_src(i):
         r = jax.lax.rem(hop_o[i], L)
         t = jnp.int32(mp_sched[0])
         for s in range(1, L):
             t = jnp.where(r == s, jnp.int32(mp_sched[s]), t)
         v_safe = jnp.clip(vcur[i], 0, num_vertices - 1)
-        base, end = load_pair(to_ref.at[v_safe, pl.ds(t, 2)])
+        return to_ref.at[v_safe, pl.ds(t, 2)]
+
+    def on_seg(i, base, end):
         cnt = end - base
         pick = base + _uniform_index(cnt, u0_scr[i])
-        vnext_scr[i] = load_col(addr_scr[i] + pick)
+        idx_scr[i] = addr_scr[i] + pick
         deg_scr[i] = jnp.where(cnt > 0, deg_scr[i], 0)
+
+    gather2_loop(W, seg_src, pairbuf, pairsem, on_seg)
+
+    def on_col(i, v):
+        vnext_scr[i] = v
+
+    gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
+                 num_edges, on_col)
+
+
+def _reservoir_sample(W, num_vertices, num_edges, CH, Lc, inv_p, inv_q,
+                      max_degree, has_weights, k0, k1,
+                      rp_ref, col_ref, wgt_ref,
+                      colbuf, colsem, pairbuf, pairsem,
+                      ckcol, ckwgt, cksem,
+                      act, stop_scr, vcur, vprev, qid_o, hop_o, ep_o,
+                      addr_scr, deg_scr, idx_scr, vnext_scr,
+                      plo_scr, phi_scr, blo_scr, bhi_scr,
+                      cand_scr, bkey_scr, ures_scr, fnd_scr):
+    """In-kernel ``chunked_loop`` schedule — the Efraimidis–Spirakis
+    weighted reservoir scan (weighted Node2Vec) as a degree-adaptive
+    chunk loop per lane.
+
+    Per lane, the trip count is ``ceil(deg/CH)`` (the in-kernel form of
+    the jnp path's ``adaptive_chunks`` bounding: chunks past a lane's
+    own degree contribute only -inf reservoir keys, so truncating the
+    loop there cannot change the scanned argmax — the kernel is
+    degree-adaptive per lane regardless of the spec flag).  Chunk c of
+    (column, edge weight) streams through ping-pong ``(2, Lc)`` DMA
+    buffers with chunk c+1's fetch in flight while chunk c is scored;
+    the per-chunk uniforms reproduce ``rng.task_uniforms(..., CH,
+    SALT_CHUNK0 + c)``'s counter layout exactly; the (p, q) bias
+    bisects all CH candidates in N(v_prev) breadth-wise (identical trip
+    count and compares to `samplers.edge_exists`, probes double-
+    buffered); and the running (E-S key, winning offset) carry is held
+    in SMEM alongside the lane pool, folded with strict ``>`` so the
+    earliest maximal key wins — the same tie-break as
+    `samplers.es_chunk_score` (first within-chunk argmax) +
+    `samplers.es_merge` (strict cross-chunk merge), making the fold
+    bit-identical to `phase_program.reservoir_scan`.
+    """
+    iters = _bisect_iters(max_degree)
+    pairs = (CH + 1) // 2
+
+    # v_prev RP_entry pair per lane (bias bisection bounds), plus the
+    # reservoir carry init.
+    def vp_src(i):
+        vp = jnp.clip(vprev[i], 0, num_vertices - 1)
+        return rp_ref.at[pl.ds(vp, 2)]
+
+    def on_vp(i, lo, hi):
+        plo_scr[i] = lo
+        phi_scr[i] = hi
+        bkey_scr[i] = -jnp.inf
+        cand_scr[i] = 0
+
+    gather2_loop(W, vp_src, pairbuf, pairsem, on_vp)
+
+    def lane_scan(i, _):
+        deg = deg_scr[i]
+        # Lanes whose sample is consumed this superstep: active, not
+        # PPR-stopped, with a non-empty segment.  The jnp path computes
+        # (masked, unused) results for the rest; skipping them here
+        # changes nothing observable.
+        run = (act[i] == 1) & (stop_scr[i] == 0) & (deg > 0)
+
+        @pl.when(run)
+        def _():
+            addr = addr_scr[i]
+            vp = vprev[i]
+            plo = plo_scr[i]
+            phi = phi_scr[i]
+            n_tr = (deg + CH - 1) // CH
+
+            def ck_copies(c, slot):
+                # Chunk DMAs are fixed-length Lc; near the end of `col`
+                # the base clamps down and valid positions shift by
+                # `off` inside the buffer (invalid positions past the
+                # lane's degree are masked out of the fold anyway).
+                base = jnp.clip(addr + c * CH, 0, num_edges - Lc)
+                cps = [pltpu.make_async_copy(
+                    col_ref.at[pl.ds(base, Lc)], ckcol.at[slot],
+                    cksem.at[slot, 0])]
+                if has_weights:
+                    cps.append(pltpu.make_async_copy(
+                        wgt_ref.at[pl.ds(base, Lc)], ckwgt.at[slot],
+                        cksem.at[slot, 1]))
+                return cps
+
+            for cp in ck_copies(0, 0):
+                cp.start()
+
+            def chunk_body(c, _c):
+                slot = jax.lax.rem(c, 2)
+
+                @pl.when(c + 1 < n_tr)
+                def _():
+                    for cp in ck_copies(c + 1, jax.lax.rem(c + 1, 2)):
+                        cp.start()
+
+                for cp in ck_copies(c, slot):
+                    cp.wait()
+
+                base = jnp.clip(addr + c * CH, 0, num_edges - Lc)
+                off = addr + c * CH - base
+
+                def cand(j):
+                    # chunk_gather's staging: invalid positions -> -1.
+                    b = jnp.minimum(off + j, Lc - 1)
+                    return jnp.where(c * CH + j < deg, ckcol[slot, b], -1)
+
+                # Per-chunk uniforms: same counter split as
+                # rng.key_bits(CH) (draw j and draw pairs+j share a
+                # Threefry block; odd widths pad one zero counter).
+                d0, d1 = rng.task_key_pair(
+                    k0, k1, qid_o[i], hop_o[i], SALT_CHUNK0 + c, ep_o[i])
+
+                def draw_block(b, _b):
+                    bu = b.astype(jnp.uint32)
+                    x1 = jnp.where(b + pairs < CH, bu + jnp.uint32(pairs),
+                                   jnp.uint32(0))
+                    y0, y1 = rng.threefry2x32(d0, d1, bu, x1)
+                    ures_scr[b] = rng.bits_to_uniform(y0)
+
+                    @pl.when(b + pairs < CH)
+                    def _():
+                        ures_scr[b + pairs] = rng.bits_to_uniform(y1)
+
+                    return 0
+
+                jax.lax.fori_loop(0, pairs, draw_block, 0)
+
+                # Bias verify: bisect all CH candidates in N(v_prev)
+                # breadth-wise, probe DMAs double-buffered.
+                def binit(j, _j):
+                    blo_scr[j] = plo
+                    bhi_scr[j] = phi
+                    return 0
+
+                jax.lax.fori_loop(0, CH, binit, 0)
+
+                for _ in range(iters):
+                    def on_probe(j, cv):
+                        lo = blo_scr[j]
+                        hi = bhi_scr[j]
+                        active = lo < hi
+                        mid = (lo + hi) // 2
+                        go_right = cv < cand(j)
+                        blo_scr[j] = jnp.where(active & go_right, mid + 1,
+                                               lo)
+                        bhi_scr[j] = jnp.where(active & ~go_right, mid, hi)
+
+                    gather1_loop(CH,
+                                 lambda j: (blo_scr[j] + bhi_scr[j]) // 2,
+                                 col_ref, colbuf, colsem, num_edges,
+                                 on_probe)
+
+                def on_member(j, cv):
+                    fnd_scr[j] = ((blo_scr[j] < phi)
+                                  & (cv == cand(j))).astype(jnp.int32)
+
+                gather1_loop(CH, lambda j: blo_scr[j], col_ref, colbuf,
+                             colsem, num_edges, on_member)
+
+                # E-S fold into the SMEM reservoir carry: strict > is
+                # exactly es_chunk_score's first-argmax + es_merge's
+                # earliest-chunk tie-break, flattened.
+                def fold(j, _f):
+                    valid = c * CH + j < deg
+                    y = cand(j)
+                    b = jnp.minimum(off + j, Lc - 1)
+                    if has_weights:
+                        w_edge = jnp.where(valid, ckwgt[slot, b], 0.0)
+                    else:
+                        w_edge = jnp.where(valid, 1.0, 0.0)
+                    common = (fnd_scr[j] == 1) & (vp >= 0)
+                    bias = jnp.where(vp < 0, 1.0,
+                                     jnp.where(y == vp, inv_p,
+                                               jnp.where(common, 1.0,
+                                                         inv_q)))
+                    w = w_edge * bias
+                    key = jnp.where(valid & (w > 0),
+                                    jnp.log(ures_scr[j] + 1e-20) / w,
+                                    -jnp.inf)
+                    take = key > bkey_scr[i]
+                    bkey_scr[i] = jnp.where(take, key, bkey_scr[i])
+                    cand_scr[i] = jnp.where(take, c * CH + j, cand_scr[i])
+                    return 0
+
+                jax.lax.fori_loop(0, CH, fold, 0)
+                return 0
+
+            jax.lax.fori_loop(0, n_tr, chunk_body, 0)
+            idx_scr[i] = addr + jnp.clip(cand_scr[i], 0,
+                                         jnp.maximum(deg - 1, 0))
+
+        @pl.when(~run)
+        def _():
+            idx_scr[i] = addr_scr[i]
+
         return 0
 
-    jax.lax.fori_loop(0, W, lane_sample, 0)
+    jax.lax.fori_loop(0, W, lane_scan, 0)
+
+    def on_col(i, v):
+        vnext_scr[i] = v
+
+    gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
+                 num_edges, on_col)
 
 
 def fused_superstep_kernel(
         # ---- static configuration (bound via functools.partial) ----
         num_vertices, num_edges, W, Q, max_hops, depth, delay,
         stop_prob, kind, mp_sched, rej_rounds, inv_p, inv_q, max_degree,
-        static_mode, record_paths,
+        res_chunk, res_len, has_weights, static_mode, record_paths,
         # ---- inputs ----
         key_ref, ctl_ref,
         vcur_in, vprev_in, qid_in, hop_in, act_in, ep_in,
         qctr_in, hist_in, stats_in, done_in, len_in,
         qstart_ref, qorder_ref, qepoch_ref,
-        rp_ref, col_ref, prob_ref, alias_ref, to_ref, paths_in,
+        rp_ref, col_ref, wgt_ref, prob_ref, alias_ref, to_ref, paths_in,
         # ---- outputs ----
         vcur, vprev, qid_o, hop_o, act, ep_o,
         qctr, hist, stats, done, len_o, paths,
@@ -191,30 +449,14 @@ def fused_superstep_kernel(
         stop_scr, u0_scr, u1_scr, addr_scr, deg_scr, idx_scr, vnext_scr,
         term_scr,
         rpbuf, rpsem, colbuf, colsem, probbuf, probsem, aliasbuf, aliassem,
-        wbuf, wsem, wmeta, wcnt, gbuf, gsem, pairbuf, pairsem):
+        wbuf, wsem, wmeta, wcnt, pairbuf, pairsem,
+        plo_scr, phi_scr, blo_scr, bhi_scr, kq0_scr, kq1_scr, cand_scr,
+        got_scr, bkey_scr, ures_scr, fnd_scr, ckcol, ckwgt, cksem):
     del paths_in  # aliased with `paths` (input_output_aliases)
     alias = kind == "alias"
     k0 = key_ref[0]
     k1 = key_ref[1]
     wcnt[0] = 0
-
-    # ---- synchronous one-shot gathers (rejection / metapath phases) ----
-    def load_col(e):
-        """col[clip(e)] via a blocking single-element DMA."""
-        cp = pltpu.make_async_copy(
-            col_ref.at[pl.ds(jnp.clip(e, 0, num_edges - 1), 1)],
-            gbuf, gsem.at[0])
-        cp.start()
-        cp.wait()
-        return gbuf[0]
-
-    def load_pair(cp_src):
-        """Two consecutive int32 words (RP_entry / type_offsets bounds)
-        via a blocking 2-element DMA."""
-        cp = pltpu.make_async_copy(cp_src, pairbuf, pairsem.at[0])
-        cp.start()
-        cp.wait()
-        return pairbuf[0], pairbuf[1]
 
     def path_write(q, h, v):
         """Async double-buffered single-record path write-back: start the
@@ -281,7 +523,8 @@ def fused_superstep_kernel(
             # The draw phase of the program: uniform/metapath consume one
             # uniform, alias two (counter layout exactly matches
             # rng.task_uniforms); rejection derives its 2K per-round
-            # uniforms inside the sampling loop below.
+            # uniforms and the reservoir its CH per-chunk uniforms inside
+            # the sampling loops below.
             def lane_rng(i, _):
                 q = qid_o[i]
                 h = hop_o[i]
@@ -295,7 +538,7 @@ def fused_superstep_kernel(
                                    & (u < stop_prob)).astype(jnp.int32)
                 else:
                     stop_scr[i] = 0
-                if kind != "rejection_n2v":
+                if kind not in ("rejection_n2v", "reservoir_n2v"):
                     c0, c1 = rng.task_key_pair(k0, k1, q, h, SALT_COLUMN, e)
                     if alias:
                         y0, y1 = rng.threefry2x32(c0, c1, jnp.uint32(0),
@@ -323,13 +566,28 @@ def fused_superstep_kernel(
             if kind == "rejection_n2v":
                 _rejection_sample(
                     W, num_vertices, num_edges, rej_rounds, inv_p, inv_q,
-                    max_degree, k0, k1, rp_ref, load_col, load_pair,
+                    max_degree, k0, k1, rp_ref, col_ref,
+                    colbuf, colsem, pairbuf, pairsem,
                     vcur, vprev, qid_o, hop_o, ep_o,
-                    addr_scr, deg_scr, vnext_scr)
+                    addr_scr, deg_scr, idx_scr, vnext_scr, u1_scr,
+                    plo_scr, phi_scr, blo_scr, bhi_scr,
+                    kq0_scr, kq1_scr, cand_scr, got_scr)
+            elif kind == "reservoir_n2v":
+                _reservoir_sample(
+                    W, num_vertices, num_edges, res_chunk, res_len,
+                    inv_p, inv_q, max_degree, has_weights, k0, k1,
+                    rp_ref, col_ref, wgt_ref,
+                    colbuf, colsem, pairbuf, pairsem,
+                    ckcol, ckwgt, cksem,
+                    act, stop_scr, vcur, vprev, qid_o, hop_o, ep_o,
+                    addr_scr, deg_scr, idx_scr, vnext_scr,
+                    plo_scr, phi_scr, blo_scr, bhi_scr,
+                    cand_scr, bkey_scr, ures_scr, fnd_scr)
             elif kind == "metapath":
                 _metapath_sample(
-                    W, num_vertices, mp_sched, to_ref, load_col,
-                    load_pair, vcur, hop_o, u0_scr, addr_scr, deg_scr,
+                    W, num_vertices, num_edges, mp_sched, to_ref, col_ref,
+                    colbuf, colsem, pairbuf, pairsem,
+                    vcur, hop_o, u0_scr, addr_scr, deg_scr, idx_scr,
                     vnext_scr)
             else:
                 def pick(i):

@@ -26,9 +26,10 @@ from repro.core.phase_program import fused_kinds, lower
 from repro.core.tasks import WalkStats
 from repro.kernels.fused_superstep import fused_superstep as _k
 
-# Sampler kinds the fused kernel covers — read off the phase programs
-# (every loop-free program lowers here); the engine falls back to the jnp
-# superstep (with a RuntimeWarning) for everything else.
+# Sampler kinds the fused kernel covers — read off the phase programs.
+# Every program lowers here (loop-free programs as one launch-resident
+# pass, the chunked reservoir as the in-kernel chunk loop), so this is
+# all of `samplers.KINDS`; there is no jnp fallback.
 FUSED_KINDS = fused_kinds()
 
 
@@ -40,6 +41,8 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
     alias = kind == "alias"
     metapath = kind == "metapath"
     rejection = kind == "rejection_n2v"
+    reservoir = kind == "reservoir_n2v"
+    second = rejection or reservoir
     interpret = default_interpret(interpret)
     W = cfg.num_slots
     H = cfg.max_hops
@@ -49,6 +52,7 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
     static_mode = cfg.mode == "static"
     mp_sched = tuple(int(t) for t in spec.metapath)
     rej_rounds = int(spec.rejection_rounds) if rejection else 0
+    CH = int(spec.reservoir_chunk) if reservoir else 1
     inv_p = 1.0 / float(spec.p)
     inv_q = 1.0 / float(spec.q)
 
@@ -58,10 +62,16 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
         nv = graph.row_ptr.shape[0] - 1
         ne = graph.col.shape[0]
         QL = Q if record_paths else 1
+        # Chunk DMAs are fixed-length; on a graph smaller than one chunk
+        # the transfer shrinks to the edge count (valid positions always
+        # fit — degrees are bounded by ne).
+        Lc = max(1, min(CH, ne)) if reservoir else 1
+        has_weights = reservoir and graph.weights is not None
         kernel = functools.partial(
             _k.fused_superstep_kernel, nv, ne, W, Q, H, depth, C,
             stop_prob, kind, mp_sched, rej_rounds, inv_p, inv_q,
-            int(graph.max_degree), static_mode, record_paths)
+            int(graph.max_degree), CH, Lc, has_weights, static_mode,
+            record_paths)
         smem = pl.BlockSpec(memory_space=pltpu.SMEM)
         hbm = pl.BlockSpec(memory_space=pl.ANY)
         s = state.slots
@@ -74,6 +84,9 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
         else:  # inert placeholders so the operand list is shape-stable
             prob = jnp.zeros((1,), jnp.float32)
             ali = jnp.zeros((1,), jnp.int32)
+        # Edge weights (the reservoir's chunk gather); inert placeholder
+        # otherwise (unweighted graphs score every edge at weight 1).
+        wgt = graph.weights if has_weights else jnp.zeros((1,), jnp.float32)
         # Typed sub-segment bounds (metapath's gather phase); inert
         # placeholder otherwise.
         to = graph.type_offsets if metapath else jnp.zeros((1, 2), jnp.int32)
@@ -85,11 +98,15 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
             qctr, state.head_hist.astype(jnp.int32), stats_vec,
             state.done.astype(jnp.int32), state.lengths,
             q.start_vertex, q.order, q.epoch,
-            graph.row_ptr, graph.col, prob, ali, to, state.paths,
+            graph.row_ptr, graph.col, wgt, prob, ali, to, state.paths,
         ]
+        # Second-order samplers (rejection / reservoir) bisect N(v_prev)
+        # breadth-wise: rejection over the W lanes, the reservoir over
+        # the CH positions of the staged chunk.
+        BW = W if rejection else (CH if reservoir else 1)
         outs = pl.pallas_call(
             kernel,
-            in_specs=[smem] * 16 + [hbm] * 6,
+            in_specs=[smem] * 16 + [hbm] * 7,
             out_specs=[smem] * 11 + [hbm],
             out_shape=[jax.ShapeDtypeStruct((W,), jnp.int32)] * 6 + [
                 jax.ShapeDtypeStruct((3,), jnp.int32),
@@ -120,10 +137,29 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
                 pltpu.SemaphoreType.DMA((2,)),
                 pltpu.SMEM((2, 2), jnp.int32),   # in-flight write (q, h)
                 pltpu.SMEM((1,), jnp.int32),     # write counter
-                pltpu.SMEM((1,), jnp.int32),     # sync 1-elem gather buf
-                pltpu.SemaphoreType.DMA((1,)),
-                pltpu.SMEM((2,), jnp.int32),     # sync 2-elem pair buf
-                pltpu.SemaphoreType.DMA((1,)),
+                pltpu.SMEM((2, 2), jnp.int32),   # pair-gather DMA buf
+                pltpu.SemaphoreType.DMA((2,)),
+                # Second-order scratch (inert (1,) when unused):
+                # v_prev segment bounds per lane, bisection lo/hi per
+                # breadth-wise probe, rejection's folded key pair /
+                # candidate / first-accept flag, the reservoir's SMEM
+                # carry (running E-S key + winning offset rides
+                # cand_scr), per-chunk uniforms and membership flags,
+                # and the ping-pong chunk column/weight DMA buffers.
+                pltpu.SMEM((W if second else 1,), jnp.int32),    # plo
+                pltpu.SMEM((W if second else 1,), jnp.int32),    # phi
+                pltpu.SMEM((BW,), jnp.int32),                    # bisect lo
+                pltpu.SMEM((BW,), jnp.int32),                    # bisect hi
+                pltpu.SMEM((W if rejection else 1,), jnp.uint32),  # kq0
+                pltpu.SMEM((W if rejection else 1,), jnp.uint32),  # kq1
+                pltpu.SMEM((W if second else 1,), jnp.int32),    # cand/best
+                pltpu.SMEM((W if rejection else 1,), jnp.int32),  # got
+                pltpu.SMEM((W if reservoir else 1,), jnp.float32),  # E-S key
+                pltpu.SMEM((CH,), jnp.float32),  # per-chunk uniforms
+                pltpu.SMEM((CH,), jnp.int32),    # common-neighbor flags
+                pltpu.SMEM((2, Lc), jnp.int32),    # chunk column DMA buf
+                pltpu.SMEM((2, Lc), jnp.float32),  # chunk weight DMA buf
+                pltpu.SemaphoreType.DMA((2, 2)),
             ],
             input_output_aliases={len(inputs) - 1: 11},
             interpret=interpret,

@@ -57,6 +57,32 @@ def row_access_loop(n, v_fn, rp_ref, rpbuf, rpsem, num_vertices, on_result):
     jax.lax.fori_loop(0, n, body, 0, unroll=False)
 
 
+def gather2_loop(n, src_fn, buf, sem, on_result):
+    """Double-buffered 2-element DMA gather: buf[slot] gets the packed
+    word pair at ``src_fn(i)`` (a 2-element ref slice — an RP_entry or a
+    ``type_offsets[v, t:t+2]`` sub-segment bound), with item i+1's fetch
+    in flight while item i is consumed.  Calls on_result(i, first,
+    second).  Shared with the fused superstep kernel
+    (`kernels/fused_superstep`)."""
+
+    def copy(i, slot):
+        return pltpu.make_async_copy(src_fn(i), buf.at[slot], sem.at[slot])
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < n)
+        def _():
+            copy(i + 1, jax.lax.rem(i + 1, 2)).start()
+
+        copy(i, slot).wait()
+        on_result(i, buf[slot, 0], buf[slot, 1])
+        return 0
+
+    copy(0, 0).start()
+    jax.lax.fori_loop(0, n, body, 0, unroll=False)
+
+
 def gather1_loop(n, e_fn, src_ref, buf, sem, num_entries, on_result):
     """Double-buffered 1-element DMA gather: buf[slot] = src[e_fn(i)].
     Shared with the fused superstep kernel."""

@@ -90,9 +90,6 @@ class Walker:
         self._mesh = mesh
         self._engine = None         # single-device closed-system runner
         self._dist_cache = {}       # sharded runners keyed by graph shape
-        # Fused-fallback warnings fire once per compiled walker, keyed on
-        # (kind, step_impl) — not once per engine/stream build.
-        self._fallback_warned = set()
 
     # ----------------------------------------------------------- internals
 
@@ -101,8 +98,8 @@ class Walker:
 
     def _single_engine(self):
         if self._engine is None:
-            self._engine = build_engine(self.program.spec, self._engine_cfg(),
-                                        warned=self._fallback_warned)
+            self._engine = build_engine(self.program.spec,
+                                        self._engine_cfg())
         return self._engine
 
     def _partition(self, graph) -> PartitionedGraph:
@@ -206,7 +203,7 @@ class Walker:
         if self.backend == "single":
             self.program.requires(graph)
             return WalkStream(self.program, self.execution, graph, capacity,
-                              seed, warn_registry=self._fallback_warned)
+                              seed)
         if not isinstance(graph, PartitionedGraph):
             self.program.requires(graph)
         pg = self._partition(graph)
@@ -256,12 +253,15 @@ class _StreamBase:
         raise NotImplementedError
 
     def advance(self, k: int = 16) -> int:
+        """Run at most ``k`` supersteps on the persistent device state."""
         raise NotImplementedError
 
     def done_mask(self) -> np.ndarray:
+        """Per-slot completion flags (capacity-sized, includes free slots)."""
         raise NotImplementedError
 
     def harvest_ids(self, qids):
+        """Fetch ``(paths, lengths)`` for the given live query-id slots."""
         raise NotImplementedError
 
     # -- ring economy ------------------------------------------------------
@@ -364,7 +364,7 @@ class WalkStream(_StreamBase):
     """
 
     def __init__(self, program: WalkProgram, execution: ExecutionConfig,
-                 graph, capacity: int, seed: int, warn_registry=None):
+                 graph, capacity: int, seed: int):
         if capacity <= 0:
             raise ValueError(f"stream capacity must be positive, got "
                              f"{capacity}")
@@ -376,21 +376,23 @@ class WalkStream(_StreamBase):
         # (same guard as WalkService).
         self._cfg = dataclasses.replace(
             execution.engine_config(program), record_paths=True)
-        self._runner = make_superstep_runner(program.spec, self._cfg,
-                                             warned=warn_registry)
+        self._runner = make_superstep_runner(program.spec, self._cfg)
         self.state: StreamState = init_stream_state(self._cfg, self.capacity)
         self._init_ring()
 
     @property
     def num_slots(self) -> int:
+        """W — walker lanes of the underlying engine."""
         return self._cfg.num_slots
 
     @property
     def max_hops(self) -> int:
+        """The program's hop budget (path buffers are ``max_hops + 1``)."""
         return self.program.max_hops
 
     @property
     def cfg(self):
+        """The lowered engine-layer config (:class:`EngineConfig`)."""
         return self._cfg
 
     def _device_inject(self, qids, starts, epochs) -> None:
@@ -473,14 +475,17 @@ class ShardedWalkStream(_StreamBase):
 
     @property
     def num_slots(self) -> int:
+        """W — total lanes across the mesh (devices × W_loc)."""
         return self.graph.num_devices * self._cfg.slots_per_device
 
     @property
     def max_hops(self) -> int:
+        """The program's hop budget (path buffers are ``max_hops + 1``)."""
         return self.program.max_hops
 
     @property
     def cfg(self):
+        """The lowered engine-layer config (:class:`DistConfig`)."""
         return self._cfg
 
     def _device_inject(self, qids, starts, epochs) -> None:

@@ -37,9 +37,9 @@ class ExecutionConfig:
       max_supersteps:   safety bound for the drain loop.
       step_impl:        ``jnp`` (vectorized superstep), ``pallas`` (one-hop
                         fused walk-step kernel), or ``fused`` (device-
-                        resident multi-hop superstep kernel; uniform and
-                        alias samplers, others fall back to ``jnp`` with a
-                        warning).
+                        resident multi-hop superstep kernel; covers every
+                        sampler kind, including the chunked E-S
+                        reservoir).
       hops_per_launch:  ``fused`` only — supersteps executed per kernel
                         launch (the k of the O(k·state) → O(state) host-
                         traffic reduction; ``stats.launches`` exposes the

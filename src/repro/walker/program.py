@@ -86,6 +86,7 @@ class WalkProgram:
 
     @property
     def second_order(self) -> bool:
+        """Whether sampling conditions on ``v_prev`` (Node2Vec family)."""
         return self.spec.second_order
 
     def requires(self, graph) -> None:

@@ -1,10 +1,10 @@
 """Fused device-resident superstep (`step_impl="fused"`) + shared Threefry
 RNG: bit-equality of the rng refactor against the jax.random derivation,
 and bit-identity of the fused kernel against the jnp superstep over
-{uniform, ppr, alias, rejection_n2v, metapath} × {zero_bubble, static} ×
-{closed batch, chunked stream} — every loop-free phase program lowers to
-the kernel; only the chunked reservoir scan falls back (warning once per
-compiled walker).
+{uniform, ppr, alias, rejection_n2v, metapath, reservoir_n2v} ×
+{zero_bubble, static} × {closed batch, chunked stream} — every phase
+program lowers to the kernel (the chunked E-S reservoir runs the in-kernel
+chunk loop; there is no jnp fallback path).
 """
 import dataclasses
 import warnings
@@ -27,6 +27,10 @@ SPECS = {
     "rejection_n2v": SamplerSpec(kind="rejection_n2v", p=2.0, q=0.5,
                                  rejection_rounds=6),
     "metapath": SamplerSpec(kind="metapath", metapath=(0, 1, 2)),
+    # Small chunk so the in-kernel loop runs multiple (and partial) chunks
+    # on the scale-9 fixture's degree range.
+    "reservoir_n2v": SamplerSpec(kind="reservoir_n2v", p=2.0, q=0.5,
+                                 reservoir_chunk=8),
 }
 
 
@@ -189,43 +193,69 @@ def test_fused_no_record_paths(small_graph, rng):
             assert int(getattr(r1.stats, f)) == int(getattr(r2.stats, f)), f
 
 
-def test_fused_fallback_warns_and_matches(weighted_graph, rng):
-    """The one remaining uncovered program — the chunked reservoir scan
-    (weighted Node2Vec) — falls back to the jnp superstep with a warning,
-    bit-identically."""
-    spec = SamplerSpec(kind="reservoir_n2v", p=2.0, q=0.5,
-                       reservoir_chunk=16)
-    starts = rng.integers(0, weighted_graph.num_vertices, 40).astype(np.int32)
-    ref = _run_walks(weighted_graph, starts, spec, CFG, seed=1)
-    with pytest.warns(RuntimeWarning, match="falling back"):
-        got = _run_walks(weighted_graph, starts, spec, _fused(CFG), seed=1)
-    _assert_same_run(ref, got)
-
-
-def test_fused_fallback_warns_once_per_walker(weighted_graph, rng):
-    """The fallback warning is deduplicated per compiled Walker (keyed on
-    (kind, step_impl)): the first engine build warns, later stream/engine
-    builds on the same walker do not re-spam it."""
+def test_fused_reservoir_in_kernel_no_fallback(weighted_graph, rng):
+    """Weighted Node2Vec (the chunked E-S reservoir) runs in-kernel: the
+    full Walker path emits no fallback warning and matches the jnp
+    superstep bit-for-bit — the matrix row the kernel closed last."""
     from repro import walker
 
     program = walker.WalkProgram.node2vec(2.0, 0.5, 6, weighted=True)
+    assert program.spec.kind == "reservoir_n2v"
+    starts = rng.integers(0, weighted_graph.num_vertices, 24).astype(np.int32)
+    ref = walker.compile(program, execution=walker.ExecutionConfig(
+        num_slots=16)).run(weighted_graph, starts, seed=0)
     ex = walker.ExecutionConfig(num_slots=16, step_impl="fused",
                                 hops_per_launch=4)
-    w = walker.compile(program, execution=ex)
-    starts = rng.integers(0, weighted_graph.num_vertices, 16).astype(np.int32)
-    with pytest.warns(RuntimeWarning, match="falling back"):
-        w.run(weighted_graph, starts, seed=0)
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
-        stream = w.stream(weighted_graph, capacity=16, seed=0)
-        stream.inject(starts)
-        stream.drain(chunk=4)
+        got = walker.compile(program, execution=ex).run(weighted_graph,
+                                                        starts, seed=0)
     assert not [c for c in caught if issubclass(c.category, RuntimeWarning)
                 and "falling back" in str(c.message)]
-    # a *fresh* walker warns again (the registry is per-walker, not global)
-    with pytest.warns(RuntimeWarning, match="falling back"):
-        walker.compile(program, execution=ex).run(weighted_graph, starts,
-                                                  seed=0)
+    _assert_same_run(ref, got)
+
+
+def test_fused_reservoir_adaptive_vs_fixed_chunks(weighted_graph, rng):
+    """Degree-adaptive trip bounding is a pure machine knob: adaptive and
+    fixed chunk counts sample identical paths, on both engines (chunks
+    past a lane's degree contribute only -inf reservoir keys)."""
+    starts = rng.integers(0, weighted_graph.num_vertices, 40).astype(np.int32)
+    runs = []
+    for adaptive in (True, False):
+        spec = SamplerSpec(kind="reservoir_n2v", p=2.0, q=0.5,
+                           reservoir_chunk=8, adaptive_chunks=adaptive)
+        runs.append(_run_walks(weighted_graph, starts, spec, CFG, seed=3))
+        runs.append(_run_walks(weighted_graph, starts, spec, _fused(CFG),
+                               seed=3))
+    for r in runs[1:]:
+        _assert_same_run(runs[0], r)
+
+
+def test_fused_reservoir_partial_final_chunks(rng):
+    """Skewed degrees exercise the chunk loop's ragged tail: a hub whose
+    degree is not a multiple of reservoir_chunk (partial final chunk,
+    clamped fixed-length DMA) next to degree-2 ring vertices (single
+    partial chunk), with p/q biases live via the ring back-edges."""
+    from repro.graph import build_csr
+
+    n = 48
+    edges = []
+    for v in range(1, n):          # star: hub 0 <-> every spoke
+        edges += [(0, v), (v, 0)]
+    for v in range(1, n):          # ring over the spokes
+        w = v % (n - 1) + 1
+        edges += [(v, w), (w, v)]
+    g = build_csr(np.asarray(edges, np.int64), n,
+                  weights=rng.random(len(edges)).astype(np.float32) + 1e-3)
+    spec = SamplerSpec(kind="reservoir_n2v", p=4.0, q=0.25,
+                       reservoir_chunk=16)
+    deg0 = int(g.row_ptr[1] - g.row_ptr[0])
+    assert deg0 % spec.reservoir_chunk != 0 and deg0 > spec.reservoir_chunk
+    starts = rng.integers(0, n, 40).astype(np.int32)
+    cfg = dataclasses.replace(CFG, num_slots=16, max_hops=6)
+    ref = _run_walks(g, starts, spec, cfg, seed=12)
+    got = _run_walks(g, starts, spec, _fused(cfg), seed=12)
+    _assert_same_run(ref, got)
 
 
 # ------------------------------------------------- fused vs jnp, stream

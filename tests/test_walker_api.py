@@ -197,10 +197,11 @@ def test_support_matrix_generated_from_programs():
                                           render_support_matrix,
                                           support_rows)
     rows = {r["kind"]: r for r in support_rows()}
-    # the acceptance surface: fused covers everything but the chunked
-    # reservoir loop, and every kind (metapath included) is sharded
-    assert fused_kinds() == ("uniform", "alias", "rejection_n2v",
-                             "metapath")
+    # the acceptance surface: fused covers every sampler kind (the
+    # chunked reservoir loop runs in-kernel), and every kind (metapath
+    # included) is sharded
+    from repro.core.samplers import KINDS
+    assert fused_kinds() == KINDS
     assert all(r["capability"] is not None for r in rows.values())
     assert rows["metapath"]["capability"] == "first_order"
     assert lower(walker.WalkProgram.node2vec(
@@ -209,6 +210,22 @@ def test_support_matrix_generated_from_programs():
         os.path.abspath(__file__))), "docs", "api.md")).read()
     for line in render_support_matrix().splitlines():
         assert line in docs, f"docs/api.md out of date, missing: {line}"
+
+
+def test_schedule_table_generated_from_programs():
+    """docs/architecture.md must embed both generated tables verbatim
+    (regenerate with ``python -m repro.core.phase_program`` /
+    ``--schedule``; CI runs ``--check``)."""
+    import os
+
+    from repro.core.phase_program import (render_schedule_table,
+                                          render_support_matrix)
+    arch = open(os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "docs", "architecture.md")).read()
+    for table in (render_schedule_table(), render_support_matrix()):
+        for line in table.splitlines():
+            assert line in arch, \
+                f"docs/architecture.md out of date, missing: {line}"
 
 
 def test_execution_config_validation():
