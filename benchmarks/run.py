@@ -19,8 +19,67 @@ step_impl — walks/sec across the jnp / pallas / fused superstep impls
 """
 import argparse
 import json
+import numbers
 import sys
 import time
+
+
+def validate_payload(payload) -> list:
+    """Validate the BENCH JSON schema before it is written.
+
+    Shape: ``{suite: {row: {"us_per_call": number, "derived": str}}}``
+    plus the optional ``walks_per_sec`` summary
+    (``{algo: {impl: number}}``).  Returns a list of problem strings —
+    a malformed suite result (a typo'd key, a non-numeric timing, a
+    stray nesting level) must fail the run instead of silently
+    producing a BENCH.json downstream dashboards mis-parse.
+    """
+    problems = []
+    if not isinstance(payload, dict):
+        return [f"payload is {type(payload).__name__}, expected dict"]
+    for suite, rows in payload.items():
+        if suite == "walks_per_sec":
+            if not isinstance(rows, dict):
+                problems.append(f"walks_per_sec: expected dict, got "
+                                f"{type(rows).__name__}")
+                continue
+            for algo, impls in rows.items():
+                if not isinstance(impls, dict):
+                    problems.append(f"walks_per_sec[{algo!r}]: expected "
+                                    f"dict of impl→rate")
+                    continue
+                for impl, rate in impls.items():
+                    if not isinstance(rate, numbers.Real):
+                        problems.append(
+                            f"walks_per_sec[{algo!r}][{impl!r}]: rate is "
+                            f"{type(rate).__name__}, expected number")
+            continue
+        if not isinstance(rows, dict):
+            problems.append(f"suite {suite!r}: expected dict of rows, "
+                            f"got {type(rows).__name__}")
+            continue
+        for row, rec in rows.items():
+            if not isinstance(rec, dict):
+                problems.append(f"{suite}.{row}: expected record dict, "
+                                f"got {type(rec).__name__}")
+                continue
+            extra = set(rec) - {"us_per_call", "derived"}
+            missing = {"us_per_call", "derived"} - set(rec)
+            if extra:
+                problems.append(f"{suite}.{row}: unknown key(s) "
+                                f"{sorted(extra)}")
+            if missing:
+                problems.append(f"{suite}.{row}: missing key(s) "
+                                f"{sorted(missing)}")
+            us = rec.get("us_per_call")
+            if "us_per_call" in rec and not isinstance(us, numbers.Real):
+                problems.append(f"{suite}.{row}: us_per_call is "
+                                f"{type(us).__name__}, expected number")
+            der = rec.get("derived")
+            if "derived" in rec and not isinstance(der, str):
+                problems.append(f"{suite}.{row}: derived is "
+                                f"{type(der).__name__}, expected str")
+    return problems
 
 
 def main() -> None:
@@ -72,6 +131,14 @@ def main() -> None:
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
     if args.json:
+        problems = validate_payload(payload)
+        if problems:
+            # never write a malformed BENCH.json — fail loudly instead
+            print(f"# BENCH schema invalid ({len(problems)} problem(s)); "
+                  f"not writing {args.json}:", file=sys.stderr)
+            for p in problems:
+                print(f"#   {p}", file=sys.stderr)
+            sys.exit(1)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -1,0 +1,42 @@
+"""Static verifier for the pipeline invariants the repro rests on.
+
+Four passes, each reading a *declarative export* the runtime code
+already maintains (nothing here re-implements a backend — the passes
+check the declarations the backends execute):
+
+  * `rng_collisions` — every per-task draw stream (phase-program
+    ``draw_streams()``, engine stop draws, AST-extracted call-site
+    salts) is pairwise disjoint across phases / chunks / rounds /
+    epochs for every sampler kind.
+  * `dma_hazards` — every kernel's declared DMA schedule
+    (``dma_schedule()`` next to each kernel) is hazard-free: reads
+    dominated by copy-waits, no slot re-issued while in flight, all
+    copies drained; plus the segment-sum output-revisit contract.
+  * `residency` — every lowered `PhaseProgram` satisfies the sharded
+    interpreter's contract (v_prev phases only under two_phase /
+    chunked_loop, carries produced before consumed, derived flags
+    recomputed from the phase facts).
+  * `determinism` — AST lint over ``src/repro/{core,kernels,walker}``:
+    no ambient RNG or wall-clock in the deterministic paths, every
+    Pallas wrapper plumbed through `default_interpret`.
+
+``python -m repro.analysis --check`` runs all four (CI job
+``analysis``); ``--table`` regenerates the docs summary;
+``--fixture NAME`` runs a pass over a deliberately broken input and
+exits non-zero when (as it must) the defect is caught.
+"""
+from repro.analysis.report import Finding, render_findings
+
+__all__ = ["Finding", "render_findings", "run_all"]
+
+
+def run_all():
+    """Run every pass over the repo; returns the combined findings."""
+    from repro.analysis import (determinism, dma_hazards, residency,
+                                rng_collisions)
+    findings = []
+    findings += rng_collisions.check_repo()
+    findings += dma_hazards.check_repo()
+    findings += residency.check_repo()
+    findings += determinism.check_repo()
+    return findings

@@ -1,0 +1,88 @@
+"""CLI for the static verifier.
+
+``--check``          run all four passes over the repo (and verify the
+                     docs embed the generated --table output); exit 1
+                     with per-finding diagnostics on any violation.
+``--table``          print the statically-verified-invariants summary
+                     (embedded in docs/architecture.md).
+``--fixture NAME``   run one deliberately-broken fixture; exits 1 when
+                     the defect is (correctly) caught — CI asserts this
+                     for every fixture so the checkers can't silently
+                     rot.
+``--list-fixtures``  print the fixture names.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+from repro.analysis import run_all
+from repro.analysis.fixtures import FIXTURES, run_fixture
+from repro.analysis.report import render_findings
+from repro.analysis.tables import render_table
+
+
+def _check_docs_embedding() -> int:
+    """The --table output must appear verbatim in docs/architecture.md
+    (same discipline as `repro.core.phase_program --check`)."""
+    root = pathlib.Path(__file__).resolve().parents[3]
+    doc = root / "docs" / "architecture.md"
+    text = doc.read_text() if doc.exists() else ""
+    missing = [ln for ln in render_table().splitlines()
+               if ln and ln not in text]
+    if missing:
+        print(f"DRIFT: {doc} is missing {len(missing)} generated "
+              f"invariant-table line(s):")
+        for ln in missing:
+            print(f"  {ln}")
+        print("regenerate with `python -m repro.analysis --table` and "
+              "paste the output into the docs")
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static pipeline-hazard / RNG-collision / residency "
+                    "/ determinism verifier.")
+    ap.add_argument("--check", action="store_true",
+                    help="run all passes over the repo; exit 1 on any "
+                         "finding or docs drift")
+    ap.add_argument("--table", action="store_true",
+                    help="print the statically-verified-invariants "
+                         "summary tables")
+    ap.add_argument("--fixture", metavar="NAME",
+                    help="run one injected-defect fixture; exit 1 when "
+                         "its defect is detected")
+    ap.add_argument("--list-fixtures", action="store_true",
+                    help="list fixture names")
+    args = ap.parse_args(argv)
+
+    if args.list_fixtures:
+        for name in FIXTURES:
+            print(name)
+        return 0
+    if args.fixture:
+        if args.fixture not in FIXTURES:
+            known = ", ".join(FIXTURES)
+            print(f"unknown fixture {args.fixture!r} (known: {known})")
+            return 2
+        findings = run_fixture(args.fixture)
+        print(render_findings(findings))
+        return 1 if findings else 0
+    if args.table:
+        print(render_table())
+        return 0
+    # default: --check
+    findings = run_all()
+    print(render_findings(findings))
+    code = 1 if findings else 0
+    code = max(code, _check_docs_embedding())
+    if code == 0:
+        print("docs embedding up to date")
+    return code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

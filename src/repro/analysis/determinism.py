@@ -1,0 +1,139 @@
+"""Determinism lint: AST pass over the deterministic core.
+
+The repo's bit-identity guarantees (same walks across jnp / sharded /
+fused backends, same draws across supersteps) hold only because every
+random bit flows through the stateless counter RNG in `core/rng.py` and
+every Pallas kernel can be forced into interpret mode off-TPU.  This
+pass bans the ways that discipline erodes:
+
+  * ``jax.random.*`` anywhere in ``src/repro/{core,kernels,walker}``
+    except `core/rng.py` itself (ambient PRNG keys fork the stream
+    model; `rng.stream_key` / `rng.task_uniforms` are the blessed
+    entries);
+  * ``numpy.random`` / ``np.random`` and ``time.time`` / wall-clock
+    calls in the same tree (host-side randomness or timing leaking into
+    sampler/kernel paths breaks replay; benchmarks and dataset builders
+    live outside the linted tree on purpose);
+  * Pallas plumbing: every function that calls ``pl.pallas_call`` must
+    take an ``interpret`` parameter, and every ``kernels/*/ops.py``
+    wrapper module must route it through
+    `kernels.common.default_interpret` (otherwise CPU CI silently stops
+    exercising the kernel bodies).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List
+
+from repro.analysis.report import Finding
+
+_SCOPE = ("core", "kernels", "walker")
+_ALLOWED = ("core/rng.py",)
+
+
+def _dotted(node: ast.expr) -> str:
+    """Best-effort dotted name of an attribute/name expression."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def check_source(source: str, filename: str) -> List[Finding]:
+    findings = []
+    if any(filename.endswith(a) for a in _ALLOWED):
+        return findings
+    tree = ast.parse(source, filename=filename)
+
+    def flag(node, msg):
+        findings.append(Finding("determinism",
+                                f"{filename}:{node.lineno}", msg))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif node.module:
+                mods = [f"{node.module}.{a.name}" for a in node.names]
+            for m in mods:
+                if m.startswith("jax.random") or m == "jax.random":
+                    flag(node, "imports jax.random — all draws must go "
+                               "through core/rng.py's counter RNG")
+        if isinstance(node, ast.Attribute):
+            dotted = _dotted(node)
+            if dotted.startswith("jax.random."):
+                flag(node, f"{dotted} — ambient PRNG outside core/rng.py"
+                           f"; use rng.stream_key / rng.task_uniforms")
+            elif dotted.startswith(("np.random.", "numpy.random.")):
+                flag(node, f"{dotted} — host randomness in the "
+                           f"deterministic tree; thread an explicit "
+                           f"seed through core/rng.py")
+            elif dotted in ("time.time", "time.time_ns",
+                            "time.perf_counter"):
+                flag(node, f"{dotted} — wall-clock in the deterministic "
+                           f"tree breaks replay; timing belongs in "
+                           f"benchmarks/")
+    _PallasVisitor(flag).visit(tree)
+    return findings
+
+
+class _PallasVisitor(ast.NodeVisitor):
+    """Flags ``pallas_call`` sites with no ``interpret`` parameter on
+    any enclosing function (a jitted closure may capture the resolved
+    flag from its builder — that counts)."""
+
+    def __init__(self, flag):
+        self._flag = flag
+        self._stack: list = []
+
+    def visit_FunctionDef(self, node):
+        self._stack.append(node)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node):
+        if _dotted(node.func).endswith("pallas_call"):
+            plumbed = any(
+                "interpret" in [a.arg for a in (f.args.args
+                                                + f.args.kwonlyargs)]
+                for f in self._stack)
+            if not plumbed:
+                name = self._stack[-1].name if self._stack else "<module>"
+                self._flag(node, f"{name} calls pl.pallas_call without "
+                                 f"an 'interpret' parameter in scope — "
+                                 f"plumb it through kernels.common."
+                                 f"default_interpret so CPU CI "
+                                 f"interprets the kernel body")
+        self.generic_visit(node)
+
+
+def _check_ops_module(source: str, filename: str) -> List[Finding]:
+    """kernels/*/ops.py must resolve interpret via default_interpret."""
+    if "default_interpret" in source:
+        return []
+    return [Finding(
+        "determinism", filename,
+        "kernel wrapper module never calls default_interpret — "
+        "per-call interpret overrides must default to 'interpret "
+        "off-TPU' (kernels/common.default_interpret)")]
+
+
+def check_repo(root=None) -> List[Finding]:
+    root = pathlib.Path(root) if root else \
+        pathlib.Path(__file__).resolve().parents[1]
+    findings = []
+    for sub in _SCOPE:
+        for py in sorted((root / sub).rglob("*.py")):
+            rel = str(py.relative_to(root.parent))
+            src = py.read_text()
+            findings += check_source(src, rel)
+            if py.name == "ops.py" and sub == "kernels":
+                findings += _check_ops_module(src, rel)
+    return findings

@@ -1,0 +1,183 @@
+"""RNG-collision pass: prove every per-task draw stream disjoint.
+
+The RNG contract (`core/rng.py`): a draw stream is identified by the
+Threefry key fold ``(seed[, epoch], query_id, hop, salt)`` plus a
+counter range ``[0, width)``.  Epoch / query / hop are folded into the
+key, so two streams of the *same* task can only be separated by their
+salt channel — distinct salts → disjoint streams (injective key fold),
+a shared salt value → both streams consume counters ``[0, width)``
+there and collide on ``[0, min(widths))``.
+
+The model is built from the declarative exports, once per logical
+stream (the jnp path, the sharded supersteps, and the fused kernel all
+issue the *same* logical draws — bit-identity across backends is the
+repo's pinned property, so modelling each call site separately would
+triple-count the streams, not find more collisions):
+
+  * `PhaseProgram.draw_streams()` — one stream per ``draw`` phase; a
+    looping program's stream is an open-ended *family* at
+    ``[salt, ∞)`` (one chunk per salt, degree-dependent count);
+  * `walk_engine.ENGINE_DRAW_STREAMS` — engine-issued draws (the PPR
+    stop draw) outside the phase programs.
+
+The AST side then keeps the model honest: every
+``task_uniforms`` / ``task_key_pair`` / ``task_bits`` / ``task_fold``
+call site in ``src/repro/{core,kernels,walker}`` must pass a salt that
+is a registered `SaltRegistry` channel (a ``SALT_*`` name, a
+``SALT_CHUNK0 + c`` family member, or an IR-supplied ``.salt``
+attribute) — so no code path can draw from a channel the stream model
+doesn't know about.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List, Sequence, Tuple
+
+from repro.analysis.report import Finding
+from repro.core.phase_program import DrawStream, _default_spec, lower
+from repro.core.rng import SALTS
+from repro.core.samplers import KINDS
+from repro.core.walk_engine import ENGINE_DRAW_STREAMS
+
+_RNG_FNS = {"task_uniforms": 4, "task_bits": 4, "task_key_pair": 4,
+            "task_fold": 3}  # fn -> positional index of the salt arg
+_SCOPE = ("core", "kernels", "walker")
+
+
+# ------------------------------------------------------------ stream model
+
+
+def spec_streams(spec) -> Tuple[DrawStream, ...]:
+    """All draw streams one sampler spec's tasks consume: the lowered
+    program's streams plus the engine-issued ones."""
+    streams = list(lower(spec).draw_streams())
+    for site, salt, width in ENGINE_DRAW_STREAMS:
+        streams.append(DrawStream(site=site, salt=salt, width=width))
+    return tuple(streams)
+
+
+def _span_overlap(a: DrawStream, b: DrawStream):
+    """Intersection of two salt spans, or None (``hi=None`` = ∞)."""
+    lo_a, hi_a = a.salt_span()
+    lo_b, hi_b = b.salt_span()
+    lo = max(lo_a, lo_b)
+    if hi_a is None:
+        hi = hi_b
+    elif hi_b is None:
+        hi = hi_a
+    else:
+        hi = min(hi_a, hi_b)
+    if hi is not None and lo >= hi:
+        return None
+    return (lo, hi)
+
+
+def check_streams(streams: Sequence[DrawStream],
+                  context: str = "") -> List[Finding]:
+    """Pairwise salt-disjointness over one task's streams."""
+    findings = []
+    tag = f"{context}: " if context else ""
+    for i, a in enumerate(streams):
+        for b in streams[i + 1:]:
+            span = _span_overlap(a, b)
+            if span is None:
+                continue
+            lo, hi = span
+            salts = f"salt {lo}" if hi == lo + 1 else (
+                f"salts [{lo}, {'∞' if hi is None else hi})")
+            w = min(a.width, b.width)
+            findings.append(Finding(
+                "rng", f"{a.site} × {b.site}",
+                f"{tag}streams share {salts}: both consume counters "
+                f"[0, {w}) there (same (seed, epoch, qid, hop) fold) — "
+                f"give one a distinct SaltRegistry channel"))
+    return findings
+
+
+def check_kinds() -> List[Finding]:
+    """Disjointness for every sampler kind's default spec."""
+    findings = []
+    for kind in KINDS:
+        findings += check_streams(spec_streams(_default_spec(kind)),
+                                  context=f"kind={kind}")
+    return findings
+
+
+# --------------------------------------------------------- call-site audit
+
+
+def _classify_salt(node: ast.expr):
+    """Classify a salt argument expression.
+
+    Returns (status, detail): ``ok`` (registered channel name or chunk
+    family), ``ir`` (attribute access — the salt rides the phase IR,
+    already covered by the stream model), or ``bad``.
+    """
+    if isinstance(node, ast.Name):
+        if node.id in SALTS.names():
+            return "ok", node.id
+        return "bad", f"unregistered salt name {node.id!r}"
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        base = node.left
+        if (isinstance(base, ast.Name) and base.id in SALTS.names()
+                and SALTS[base.id].family):
+            return "ok", f"{base.id} + <chunk>"
+        return "bad", "salt arithmetic must be <family channel> + offset"
+    if isinstance(node, ast.Attribute):
+        return "ir", f".{node.attr}"
+    if isinstance(node, ast.Constant):
+        return "bad", (f"literal salt {node.value!r} — use a named "
+                       f"SaltRegistry channel (SALT_*)")
+    return "bad", f"unrecognized salt expression {ast.dump(node)[:60]}"
+
+
+def check_call_sites(root=None) -> List[Finding]:
+    """AST audit: every rng call site's salt is a registered channel."""
+    root = pathlib.Path(root) if root else _src_root()
+    findings = []
+    for sub in _SCOPE:
+        for py in sorted((root / sub).rglob("*.py")):
+            findings += check_source(py.read_text(),
+                                     str(py.relative_to(root.parent)))
+    return findings
+
+
+def check_source(source: str, filename: str) -> List[Finding]:
+    """Audit one module's rng call sites (exposed for fixtures/tests)."""
+    findings = []
+    if filename.endswith("core/rng.py"):
+        return findings  # the registry itself defines the channels
+    tree = ast.parse(source, filename=filename)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None)
+        if name not in _RNG_FNS:
+            continue
+        pos = _RNG_FNS[name]
+        salt_node = None
+        if len(node.args) > pos:
+            salt_node = node.args[pos]
+        else:
+            for kw in node.keywords:
+                if kw.arg == "salt":
+                    salt_node = kw.value
+        if salt_node is None:
+            continue  # salt defaulted (SALT_COLUMN)
+        status, detail = _classify_salt(salt_node)
+        if status == "bad":
+            findings.append(Finding(
+                "rng", f"{filename}:{node.lineno}",
+                f"{name}(...) salt: {detail}"))
+    return findings
+
+
+def _src_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[1]
+
+
+def check_repo() -> List[Finding]:
+    return check_kinds() + check_call_sites()

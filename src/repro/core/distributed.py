@@ -57,9 +57,9 @@ from repro.core import rng as task_rng, router
 from repro.core.phase_program import (PhaseProgram, chunk_gather,
                                       chunk_score, lower, make_sampler,
                                       reservoir_scan)
-from repro.core.samplers import (SALT_COLUMN, SALT_STOP, SamplerSpec,
-                                 _uniform_index, es_num_chunks, n2v_bias,
-                                 rejection_choose)
+from repro.core.rng import SALT_COLUMN, SALT_STOP
+from repro.core.samplers import (SamplerSpec, _uniform_index, es_num_chunks,
+                                 n2v_bias, rejection_choose)
 from repro.core.scheduler import routing_capacity
 from repro.core.tasks import (WalkerSlots, empty_n2v_slots,
                               empty_reservoir_slots, empty_slots, zero_stats)
@@ -1046,7 +1046,7 @@ def _run_distributed(pg: PartitionedGraph, starts, spec: SamplerSpec,
         mesh = jax.sharding.Mesh(devs, (cfg.axis_name,))
     starts_sh, qcount = shard_starts(starts, N)
     run = make_distributed_engine(pg, spec, cfg, mesh)
-    base_key = jax.random.PRNGKey(seed)
+    base_key = task_rng.stream_key(seed)
     log_q, log_h, log_v, cursor, stats = run(
         pg, jnp.asarray(starts_sh), jnp.asarray(qcount), base_key)
     logs = DistLogs(qid=log_q, hop=log_h, vertex=log_v, cursor=cursor)

@@ -75,20 +75,20 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import rng as task_rng
-from repro.core.samplers import (KINDS, SALT_CHUNK0, SALT_COLUMN,
-                                 SamplerSpec, _uniform_index, es_chunk_score,
-                                 es_merge, es_num_chunks, n2v_bias,
-                                 rejection_choose, vertex_row)
+from repro.core.rng import SALT_CHUNK0, SALT_COLUMN, SALT_STOP
+from repro.core.samplers import (KINDS, SamplerSpec, _uniform_index,
+                                 es_chunk_score, es_merge, es_num_chunks,
+                                 n2v_bias, rejection_choose, vertex_row)
 
-__all__ = ["KINDS", "Phase", "PhaseProgram", "lower", "make_sampler",
-           "reservoir_scan", "chunk_gather", "chunk_score", "fused_kinds",
-           "support_rows", "render_support_matrix",
+__all__ = ["KINDS", "Phase", "PhaseProgram", "DrawStream", "lower",
+           "make_sampler", "reservoir_scan", "chunk_gather", "chunk_score",
+           "fused_kinds", "support_rows", "render_support_matrix",
            "render_schedule_table"]
 
 
@@ -181,6 +181,50 @@ class PhaseProgram:
         (single-residency programs over the plain/alias CSR segments)."""
         return all(p.residency == "v_curr" for p in self.phases) and not (
             self.loop or "typed" in self.requires)
+
+    # ------------------------------------------- static-analysis exports
+
+    def draw_streams(self) -> Tuple["DrawStream", ...]:
+        """Declarative RNG draw streams this program consumes per task —
+        the schedule-export hook the `repro.analysis` RNG-collision pass
+        reads.
+
+        Each ``draw`` phase contributes one stream at its salt channel;
+        in a looping program the draw repeats per chunk at
+        ``salt + chunk``, an open-ended *family* (chunk counts are
+        degree-dependent and statically unbounded).  Engine-issued draws
+        (the PPR stop draw) are declared separately
+        (`repro.core.walk_engine.ENGINE_DRAW_STREAMS`) — they share the
+        same (seed, epoch, qid, hop) tuple, so the analyzer checks them
+        against these streams too.
+        """
+        streams = []
+        for n, ph in enumerate(self.phases):
+            if ph.op != "draw":
+                continue
+            streams.append(DrawStream(
+                site=f"{self.kind}.phases[{n}].draw",
+                salt=ph.salt, width=ph.width, family=self.loop))
+        return tuple(streams)
+
+
+class DrawStream(NamedTuple):
+    """One per-task RNG draw stream: ``width`` uniforms at salt channel
+    ``salt`` (or, for a chunk *family*, at every salt in ``[salt, ∞)`` —
+    one chunk per salt, degree-dependent count).  Two streams with
+    distinct salts are disjoint by the Threefry key fold; two streams
+    sharing any salt value both consume counters ``[0, width)`` there and
+    therefore collide — the RNG-collision pass's whole check."""
+
+    site: str
+    salt: int
+    width: int
+    family: bool = False
+
+    def salt_span(self) -> Tuple[int, Optional[int]]:
+        """Half-open salt interval this stream draws from (``None`` hi =
+        unbounded chunk family)."""
+        return (self.salt, None if self.family else self.salt + 1)
 
 
 @functools.lru_cache(maxsize=None)

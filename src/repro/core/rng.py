@@ -42,9 +42,119 @@ Both paths therefore sample identical walks for identical
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Dict, Optional, Tuple
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# --------------------------------------------------------------------------
+# Salt registry: the single source of truth for every salt channel.
+#
+# A task's draw stream is keyed by (seed, epoch, query_id, hop, salt) — two
+# streams with distinct salts are disjoint (the salt folds into the Threefry
+# key), so the whole RNG-collision argument reduces to: no two independent
+# uses share a salt.  Every SALT_* constant in the codebase is registered
+# here, uniqueness is asserted at import, and the static analyzer
+# (`repro.analysis`) reads this registry as ground truth when it proves the
+# per-sampler draw streams pairwise disjoint.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SaltChannel:
+    """One registered salt channel.
+
+    A scalar channel owns exactly the value ``value``.  A *family*
+    (``family=True``) owns the open-ended range ``[value, ∞)`` — the
+    reservoir chunk draws use ``SALT_CHUNK0 + c`` for chunk ``c`` with a
+    data-dependent (degree-bounded, statically unbounded) chunk count, so
+    the family must sit above every scalar channel.
+    """
+
+    name: str
+    value: int
+    family: bool = False
+
+    def covers(self, salt: int) -> bool:
+        """Does this channel own the concrete salt value ``salt``?"""
+        return salt >= self.value if self.family else salt == self.value
+
+
+class SaltRegistry:
+    """Name → :class:`SaltChannel` registry with import-time disjointness.
+
+    ``register`` raises immediately when a new channel overlaps an
+    existing one (duplicate scalar value, scalar inside a family's range,
+    or a second open-ended family — two unbounded families always
+    overlap), so a bad salt constant can never make it past import.
+    """
+
+    def __init__(self):
+        self._channels: Dict[str, SaltChannel] = {}
+
+    def register(self, name: str, value: int, family: bool = False) -> int:
+        ch = SaltChannel(name, int(value), family)
+        if name in self._channels:
+            raise ValueError(f"salt channel {name!r} registered twice")
+        for other in self._channels.values():
+            span = self._overlap(ch, other)
+            if span is not None:
+                lo, hi = span
+                rng_s = f"[{lo}, ∞)" if hi is None else f"[{lo}, {hi})"
+                raise ValueError(
+                    f"salt channel {name}={value!r} overlaps "
+                    f"{other.name}={other.value!r} on {rng_s} — every "
+                    f"salt channel must own a disjoint value range")
+        self._channels[name] = ch
+        return ch.value
+
+    @staticmethod
+    def _overlap(a: SaltChannel,
+                 b: SaltChannel) -> Optional[Tuple[int, Optional[int]]]:
+        """Overlap interval of two channels' owned ranges, or None."""
+        if a.family and b.family:
+            return (max(a.value, b.value), None)
+        if a.family or b.family:
+            fam, sc = (a, b) if a.family else (b, a)
+            return (sc.value, sc.value + 1) if sc.value >= fam.value else None
+        return (a.value, a.value + 1) if a.value == b.value else None
+
+    def channels(self) -> Tuple[SaltChannel, ...]:
+        return tuple(self._channels.values())
+
+    def lookup(self, salt: int) -> Optional[SaltChannel]:
+        """The channel owning concrete salt value ``salt``, if any."""
+        for ch in self._channels.values():
+            if ch.covers(int(salt)):
+                return ch
+        return None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._channels)
+
+    def __getitem__(self, name: str) -> SaltChannel:
+        return self._channels[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._channels
+
+
+#: The registry instance — all salt channels in the system, in one place.
+SALTS = SaltRegistry()
+
+# Salt channels for decorrelated draws within one hop.  `samplers.py` and
+# the kernels import these (never redefine them); the `repro.analysis` RNG
+# pass cross-checks every `task_*` call site against this registry.
+SALT_COLUMN = SALTS.register("SALT_COLUMN", 0)   # which neighbor column
+SALT_ACCEPT = SALTS.register("SALT_ACCEPT", 1)   # alias/rejection accept
+SALT_STOP = SALTS.register("SALT_STOP", 2)       # PPR termination draw
+# Reservoir chunk draws: chunk c draws at SALT_CHUNK0 + c, an open-ended
+# family (chunk counts are degree-dependent), so it must sit above every
+# scalar channel — the registry enforces that at import.
+SALT_CHUNK0 = SALTS.register("SALT_CHUNK0", 8, family=True)
+
 
 # Threefry-2x32 key-schedule parity constant (Salmon et al., SC'11).
 _THREEFRY_PARITY = np.uint32(0x1BD11BDA)

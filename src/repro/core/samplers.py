@@ -33,11 +33,11 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-# Salt channels for decorrelated draws within one hop.
-SALT_COLUMN = 0      # which neighbor column
-SALT_ACCEPT = 1      # alias / rejection accept test
-SALT_STOP = 2        # PPR termination draw (used by the engine)
-SALT_CHUNK0 = 8      # reservoir chunk draws start here
+# Salt channels re-exported from the registry in `core/rng.py` (the single
+# source of truth — uniqueness is asserted there at import, and the
+# `repro.analysis` RNG-collision pass reads the registry as ground truth).
+from repro.core.rng import (SALT_ACCEPT, SALT_CHUNK0,  # noqa: F401
+                            SALT_COLUMN, SALT_STOP)
 
 # Sampler kinds with a phase-program lowering (`phase_program.lower`).
 KINDS = ("uniform", "alias", "rejection_n2v", "reservoir_n2v", "metapath")

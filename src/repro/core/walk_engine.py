@@ -73,7 +73,8 @@ import jax.numpy as jnp
 
 from repro.core import rng as task_rng, scheduler as sched
 from repro.core.phase_program import lower as lower_program, make_sampler
-from repro.core.samplers import SALT_STOP, SamplerSpec
+from repro.core.rng import SALT_COLUMN, SALT_STOP
+from repro.core.samplers import SamplerSpec
 from repro.core.tasks import (QueryQueue, WalkerSlots, WalkResult, WalkStats,
                               empty_queue, empty_slots, make_queue, zero_stats)
 from repro.graph.csr import CSRGraph, column_access, row_access
@@ -83,6 +84,16 @@ from repro.graph.csr import CSRGraph, column_access, row_access
 # ExecutionConfig so the two validation layers cannot drift.
 MODES = ("zero_bubble", "static")
 STEP_IMPLS = ("jnp", "pallas", "fused")
+
+# Schedule-export hook for the static analyzer (`repro.analysis`): draw
+# streams the engine itself issues per task, outside any sampler phase
+# program.  The PPR stop draw shares the task's (seed, epoch, qid, hop)
+# tuple with the sampler's draws, so its salt channel must stay disjoint
+# from every phase-program stream — the RNG-collision pass checks these
+# against `PhaseProgram.draw_streams()`.  (All three backends — this jnp
+# superstep, the sharded engine, and the fused kernel — issue the same
+# logical stop draw at SALT_STOP.)
+ENGINE_DRAW_STREAMS = (("engine.stop_draw", SALT_STOP, 1),)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -321,12 +332,12 @@ def _process(graph: CSRGraph, spec: SamplerSpec, cfg: EngineConfig, base_key,
         from repro.kernels.walk_step import ops as walk_ops
         if spec.kind == "uniform":
             u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
-                                       1, 0, epoch=slots.epoch)
+                                       1, SALT_COLUMN, epoch=slots.epoch)
             v_next, deg = walk_ops.walk_step_uniform(
                 slots.v_curr, u[:, 0], graph.row_ptr, graph.col)
         else:
             u = task_rng.task_uniforms(base_key, slots.query_id, slots.hop,
-                                       2, 0, epoch=slots.epoch)
+                                       2, SALT_COLUMN, epoch=slots.epoch)
             v_next, deg = walk_ops.walk_step_alias(
                 slots.v_curr, u[:, 0], u[:, 1], graph.row_ptr, graph.col,
                 graph.alias_prob, graph.alias_idx)
@@ -425,8 +436,7 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
         @jax.jit
         def run_supersteps(graph: CSRGraph, state: StreamState, seed,
                            k) -> StreamState:
-            base_key = (jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0
-                        else seed)
+            base_key = task_rng.stream_key(seed)
             k = jnp.asarray(k, jnp.int32)
 
             def cond(carry):
@@ -447,7 +457,7 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
     @jax.jit
     def run_supersteps(graph: CSRGraph, state: StreamState, seed,
                        k) -> StreamState:
-        base_key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
+        base_key = task_rng.stream_key(seed)
         step = partial(_superstep, graph, spec, cfg, base_key, depth)
 
         def cond(carry):
@@ -486,7 +496,7 @@ def build_engine(spec: SamplerSpec, cfg: EngineConfig):
     @partial(jax.jit, static_argnames=("num_queries",))
     def run(graph: CSRGraph, start_vertices: jnp.ndarray, seed,
             num_queries: int) -> WalkResult:
-        base_key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
+        base_key = task_rng.stream_key(seed)
         depth = _stage_depth(cfg)
         queue = make_queue(start_vertices, staged=min(depth, num_queries))
         paths, lengths = _fresh_buffers(cfg, num_queries)

@@ -1,7 +1,154 @@
-"""Shared kernel-wrapper plumbing."""
+"""Shared kernel-wrapper plumbing + the declarative DMA-schedule IR.
+
+Every Pallas kernel in this tree that issues asynchronous copies also
+*emits* its DMA schedule as data (a ``dma_schedule()`` function next to
+the kernel): a flat sequence of :class:`DmaOp` records — copy start,
+copy wait, buffer-slot read/write — in the kernel's program order.  The
+static analyzer (`repro.analysis.dma_hazards`) builds the dependence
+relation over that sequence and proves the two async-pipeline safety
+properties RidgeWalker's "perfect pipelining" rests on:
+
+  * every **read** of a staging slot is dominated by the **wait** of the
+    copy that filled it (no read-before-arrival), and
+  * no slot is **re-issued or overwritten** while a prior copy on it is
+    still un-waited (no overwrite-while-in-flight), and every copy is
+    drained before the kernel returns.
+
+Double-buffered loops are periodic with period 2 (the slot cycle), so a
+schedule unrolled for n ≥ 3 iterations covers every steady-state slot
+interaction plus the prologue and drain — the emitters below default to
+small unroll counts on that argument.
+
+The `ScheduleBuilder` emitters mirror the generic loop shapes
+(`walk_step.row_access_loop`/`gather1_loop`/`gather2_loop`, the fused
+kernel's ping-pong chunk loop and delayed-wait write-back); each kernel
+composes them into its full schedule.  Keep an emitter and its loop in
+the same module so a pipeline change and its declared schedule travel in
+one diff.
+"""
 from __future__ import annotations
 
+from typing import NamedTuple, Sequence, Tuple
+
 import jax
+
+
+class DmaOp(NamedTuple):
+    """One event of a kernel's declared DMA schedule, in program order.
+
+    ``kind``:
+      * ``start`` — an async copy (id ``copy``) begins on ``(buffer,
+        slot)``; the slot is busy until the matching ``wait``.
+      * ``wait``  — the copy ``copy`` on ``(buffer, slot)`` completes.
+      * ``read``  — kernel arithmetic consumes ``(buffer, slot)``; legal
+        only if the latest inbound copy on the slot has been waited.
+      * ``write`` — kernel arithmetic overwrites ``(buffer, slot)`` (the
+        write-back staging pattern); legal only with no copy in flight
+        on the slot.
+      * ``visit`` — an output-block visit (grid-scheduled kernels like
+        `segment_sum`, which revisit output blocks instead of issuing
+        explicit DMAs); ``slot`` is the block id, ``first`` flags the
+        declared init-vs-accumulate bit, ``live`` whether the visit
+        actually accumulates.
+    """
+
+    kind: str
+    buffer: str
+    slot: int
+    copy: int = -1
+    first: bool = False
+    live: bool = True
+
+
+class ScheduleBuilder:
+    """Accumulates a kernel's :class:`DmaOp` sequence with globally
+    unique copy ids (buffers are reused across loop instances — ids must
+    not be)."""
+
+    def __init__(self):
+        self.ops: list[DmaOp] = []
+        self._next_copy = 0
+
+    # ---------------------------------------------------------- primitives
+
+    def start(self, buffer: str, slot: int) -> int:
+        cid = self._next_copy
+        self._next_copy += 1
+        self.ops.append(DmaOp("start", buffer, slot, cid))
+        return cid
+
+    def wait(self, buffer: str, slot: int, copy: int) -> None:
+        self.ops.append(DmaOp("wait", buffer, slot, copy))
+
+    def read(self, buffer: str, slot: int) -> None:
+        self.ops.append(DmaOp("read", buffer, slot))
+
+    def write(self, buffer: str, slot: int) -> None:
+        self.ops.append(DmaOp("write", buffer, slot))
+
+    def visit(self, buffer: str, block: int, first: bool,
+              live: bool = True) -> None:
+        self.ops.append(DmaOp("visit", buffer, block, first=first,
+                              live=live))
+
+    # ------------------------------------------------------------ patterns
+
+    def gather_loop(self, buffer: str, n: int = 3) -> None:
+        """The double-buffered gather shape shared by `row_access_loop` /
+        `gather1_loop` / `gather2_loop`: ``start(0)``; per item *i*,
+        prefetch *i+1* into the other slot, then wait and consume *i*."""
+        if n <= 0:
+            return
+        pend = {0: self.start(buffer, 0)}
+        for i in range(n):
+            if i + 1 < n:
+                pend[i + 1] = self.start(buffer, (i + 1) % 2)
+            self.wait(buffer, i % 2, pend.pop(i))
+            self.read(buffer, i % 2)
+
+    def pingpong_loop(self, buffers: Sequence[str], n: int = 3,
+                      reads_per_chunk: int = 1) -> None:
+        """The fused kernel's chunk-loop shape: several buffers (column +
+        weight) advance through the same slot cycle together, chunk c+1's
+        copies in flight while chunk c is consumed ``reads_per_chunk``
+        times (the E-S fold reads the staged chunk once per position
+        group)."""
+        if n <= 0:
+            return
+        pend = {0: [(b, self.start(b, 0)) for b in buffers]}
+        for c in range(n):
+            if c + 1 < n:
+                pend[c + 1] = [(b, self.start(b, (c + 1) % 2))
+                               for b in buffers]
+            for b, cid in pend.pop(c):
+                self.wait(b, c % 2, cid)
+            for _ in range(reads_per_chunk):
+                for b in buffers:
+                    self.read(b, c % 2)
+
+    def writeback_loop(self, buffer: str, n: int = 4) -> None:
+        """The fused kernel's async path write-back shape: per record,
+        reclaim the staging slot by waiting its two-records-old store,
+        overwrite it, start the outbound copy; drain both slots at the
+        end of the launch."""
+        pend: list[int] = []
+        for c in range(n):
+            if c >= 2:
+                self.wait(buffer, (c - 2) % 2, pend[c - 2])
+            self.write(buffer, c % 2)
+            pend.append(self.start(buffer, c % 2))
+        for back in (2, 1):
+            if n >= back:
+                self.wait(buffer, (n - back) % 2, pend[n - back])
+
+
+def schedule_buffers(ops: Sequence[DmaOp]) -> Tuple[str, ...]:
+    """Distinct buffer names referenced by a schedule, in first-use
+    order (the docs table and diagnostics name buffers with this)."""
+    seen: dict[str, None] = {}
+    for op in ops:
+        seen.setdefault(op.buffer)
+    return tuple(seen)
 
 
 def default_interpret(interpret: bool | None) -> bool:

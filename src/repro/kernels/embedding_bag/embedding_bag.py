@@ -21,6 +21,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import ScheduleBuilder
+
+
+def dma_schedule(tile_b: int = 2, hots: int = 2):
+    """Declarative DMA schedule of one embedding-bag tile, for the static
+    hazard analyzer (`repro.analysis.dma_hazards`).
+
+    The kernel is a single double-buffered gather over the flattened
+    ``tile_b * hots`` (bag, hot) pairs — the `gather_loop` shape with
+    row k+1's table-row fetch in flight while row k is accumulated.
+    Keep in sync with `_kernel`.
+    """
+    b = ScheduleBuilder()
+    b.gather_loop("rowbuf", tile_b * hots)
+    return b.ops
+
 
 def _kernel(num_rows, hots,
             idx_ref, w_ref,      # SMEM (TILE_B, H)

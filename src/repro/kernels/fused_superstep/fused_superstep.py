@@ -22,9 +22,11 @@ supersteps per launch:
     DMAs as `kernels/walk_step`, overlapping lane *i+1*'s fetch with lane
     *i*'s sampling arithmetic (§V-B).
   * **Async write-back**: only the per-hop path records stream out to the
-    HBM-resident path buffer (one-element DMA per advanced lane — the
-    paper's §IV-B streaming-window write-back); ``done``/``lengths`` ride
-    home once per launch with the SMEM state.
+    HBM-resident path buffer through a two-slot staging buffer whose
+    outbound copies stay in flight across records — a slot is reclaimed
+    by waiting its two-records-old store, and both slots drain at the end
+    of the launch (the paper's §IV-B streaming-window write-back);
+    ``done``/``lengths`` ride home once per launch with the SMEM state.
   * **In-kernel termination + zero-bubble refill**: the PPR stop draw,
     hop budget, dead-end detection, prefix-sum lane compaction, and the
     Theorem VI.1 staging controller all run between hops without leaving
@@ -41,9 +43,11 @@ stages its gather/score phases through the DMA machinery here —
 
   * ``uniform`` / ``alias`` (and PPR via the stop draw): the original
     double-buffered row/column/alias-probe pipeline;
-  * ``metapath``: the typed-segment gather is ONE extra 2-element DMA
-    per lane (``type_offsets[v, t:t+2]`` packs the sub-segment bounds,
-    like the RP_entry pair), then the same uniform pick;
+  * ``metapath``: the typed-segment gather is one extra double-buffered
+    2-element DMA loop over the lane pool (``type_offsets[v, t:t+2]``
+    packs the sub-segment bounds, like the RP_entry pair, with lane
+    i+1's pair in flight while lane i picks), then the same uniform
+    pick;
   * ``rejection_n2v``: the csr-gather(K) / first-accept score pair runs
     breadth-wise across the lane pool with in-kernel per-round uniforms
     (same Threefry counters as ``rng.task_uniforms(..., 2K, ...)``) and
@@ -82,15 +86,91 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import rng
-from repro.core.samplers import (SALT_CHUNK0, SALT_COLUMN, SALT_STOP,
-                                 _uniform_index)
+from repro.core.rng import SALT_CHUNK0, SALT_COLUMN, SALT_STOP
+from repro.core.samplers import _uniform_index
 from repro.core.tasks import WalkStats
+from repro.kernels.common import ScheduleBuilder
 from repro.kernels.walk_step.walk_step import (gather1_loop, gather2_loop,
                                                row_access_loop)
 
 # WalkStats slot indices inside the SMEM stats vector.
 STAT = {f: i for i, f in enumerate(WalkStats._fields)}
 NUM_STATS = len(WalkStats._fields)
+
+
+def dma_schedule(kind: str = "uniform", lanes: int = 3, rounds: int = 2,
+                 bisect_iters: int = 2, chunks: int = 3, records: int = 4,
+                 record_paths: bool = True):
+    """Declarative DMA schedule of one fused-superstep launch, for the
+    static hazard analyzer (`repro.analysis.dma_hazards`).
+
+    Mirrors `fused_superstep_kernel`'s per-kind pipeline op-for-op with
+    small unroll counts (double-buffered loops are period-2 in the slot
+    cycle, so ``lanes``/``chunks`` ≥ 3 covers prologue, both steady-state
+    parities, and drain):
+
+      * every kind: `row_access_loop` on ``rpbuf``;
+      * ``uniform``: column gather on ``colbuf``;
+      * ``alias``: prob/alias probe loops then the column gather;
+      * ``metapath``: the typed sub-segment bounds ride the
+        `gather2_loop` on ``pairbuf``, then the column gather;
+      * ``rejection_n2v``: v_prev RP_entry pairs on ``pairbuf``, then per
+        round a proposal gather, ``bisect_iters`` probe gathers, and the
+        membership gather — all on ``colbuf``;
+      * ``reservoir_n2v``: v_prev pairs on ``pairbuf``, then per lane the
+        ping-pong (``ckcol``, ``ckwgt``) chunk loop with chunk c+1 in
+        flight while chunk c's bisection probes (``colbuf``) and E-S fold
+        consume the staged chunk, then the final column access;
+      * the async path write-back (``wbuf``) with its delayed two-deep
+        slot reclamation and end-of-launch drain.
+
+    Keep in sync with the kernel — the analyzer checks this declaration,
+    and the declaration is only as good as its fidelity to the loops
+    above.
+    """
+    b = ScheduleBuilder()
+    b.gather_loop("rpbuf", lanes)                   # row access (RP_entry)
+    if kind == "alias":
+        b.gather_loop("probbuf", lanes)
+        b.gather_loop("aliasbuf", lanes)
+        b.gather_loop("colbuf", lanes)
+    elif kind == "metapath":
+        b.gather_loop("pairbuf", lanes)             # type_offsets[v, t:t+2]
+        b.gather_loop("colbuf", lanes)
+    elif kind == "rejection_n2v":
+        b.gather_loop("pairbuf", lanes)             # RP_entry of v_prev
+        for _ in range(rounds):
+            b.gather_loop("colbuf", lanes)          # proposal columns
+            for _ in range(bisect_iters):
+                b.gather_loop("colbuf", lanes)      # bisection probes
+            b.gather_loop("colbuf", lanes)          # membership check
+    elif kind == "reservoir_n2v":
+        b.gather_loop("pairbuf", lanes)             # RP_entry of v_prev
+        for _lane in range(lanes):
+            # Per-lane degree-adaptive chunk loop: ping-pong (ckcol,
+            # ckwgt) with chunk c+1 in flight while chunk c is scored.
+            pend = {0: [(buf, b.start(buf, 0))
+                        for buf in ("ckcol", "ckwgt")]}
+            for c in range(chunks):
+                if c + 1 < chunks:
+                    pend[c + 1] = [(buf, b.start(buf, (c + 1) % 2))
+                                   for buf in ("ckcol", "ckwgt")]
+                for buf, cid in pend.pop(c):
+                    b.wait(buf, c % 2, cid)
+                # Candidate reads feed the breadth-wise bisection...
+                b.read("ckcol", c % 2)
+                for _ in range(bisect_iters):
+                    b.gather_loop("colbuf", 2)      # probes over CH posns
+                b.gather_loop("colbuf", 2)          # membership check
+                # ...and the E-S fold consumes columns and weights.
+                b.read("ckcol", c % 2)
+                b.read("ckwgt", c % 2)
+        b.gather_loop("colbuf", lanes)              # final column access
+    else:  # uniform / ppr
+        b.gather_loop("colbuf", lanes)
+    if record_paths:
+        b.writeback_loop("wbuf", records)           # async path write-back
+    return b.ops
 
 
 def _bisect_iters(max_degree: int) -> int:

@@ -29,6 +29,40 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import ScheduleBuilder
+
+
+def dma_schedule(seg_sorted=None, num_segments: int = 8, tile_e: int = 4,
+                 row_block: int = 2):
+    """Declarative output-visit schedule of one segment-sum launch, for
+    the static hazard analyzer (`repro.analysis.dma_hazards`).
+
+    This kernel issues no explicit async copies — its hazard surface is
+    the Pallas TPU output-revisit contract: the grid-ordered sequence of
+    output blocks chosen by the data-dependent ``index_map`` must revisit
+    each block only consecutively (monotone, because segments are
+    sorted), and ``first_visit`` must flag exactly the first visit of
+    each block (init-vs-accumulate).  The schedule replays `plan_tiles`
+    over a representative sorted segment vector (or a caller-supplied
+    one) and emits one ``visit`` op per (edge-tile, block-slot) grid
+    point, mirroring `_kernel`'s ``r`` / ``live`` / ``first`` logic.
+    """
+    if seg_sorted is None:
+        # Representative fixture: skewed sorted segments spanning several
+        # row blocks, with an empty segment (3) and a block-crossing tile.
+        seg_sorted = np.array([0, 0, 0, 1, 2, 2, 4, 4, 5, 6, 6, 7],
+                              np.int64)
+    seg_sorted = np.asarray(seg_sorted)
+    lo, hi, first, _covered, T, L, _Ep = plan_tiles(
+        seg_sorted, num_segments, tile_e, row_block)
+    b = ScheduleBuilder()
+    for t in range(T):
+        for l in range(L):
+            r = min(int(lo[t]) + l, int(hi[t]))
+            live = int(lo[t]) + l <= int(hi[t])
+            b.visit("out", r, first=bool(first[t, l]), live=live)
+    return b.ops
+
 
 def _kernel(row_block, tile_e,
             lo_ref, hi_ref, first_ref,  # scalar-prefetch

@@ -27,6 +27,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import ScheduleBuilder
+
+
+def dma_schedule(kind: str = "uniform", n: int = 3):
+    """Declarative DMA schedule of the one-hop walk-step kernel, for the
+    static hazard analyzer (`repro.analysis.dma_hazards`).
+
+    Mirrors the kernel bodies below op-for-op: the uniform kernel runs
+    the row-access pair gather then the column gather; the alias kernel
+    adds the prob/alias probe loops between them.  ``n`` lanes of unroll
+    (≥ 3 covers both slot parities of the double buffer plus prologue
+    and drain — the pipelines are period-2 in the slot cycle).  Keep in
+    sync with `walk_step_uniform_kernel` / `walk_step_alias_kernel`.
+    """
+    b = ScheduleBuilder()
+    b.gather_loop("rpbuf", n)            # row_access_loop
+    if kind == "alias":
+        b.gather_loop("probbuf", n)      # accept-probability probes
+        b.gather_loop("aliasbuf", n)     # alias-index probes
+    b.gather_loop("colbuf", n)           # column access
+    return b.ops
+
 
 def row_access_loop(n, v_fn, rp_ref, rpbuf, rpsem, num_vertices, on_result):
     """Double-buffered 2-element DMA loop over lanes: rpbuf[slot] gets

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import rng as task_rng
 from repro.core.distributed import (DistLogs, assemble_paths,
                                     init_dist_stream_state,
                                     inject_stream_queries,
@@ -154,8 +155,7 @@ class Walker:
         run, cfg = self._dist_engine(pg)
         starts_np = np.asarray(starts, dtype=np.int32)
         starts_sh, qcount = shard_starts(starts_np, pg.num_devices)
-        base_key = (jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0
-                    else jnp.asarray(seed))
+        base_key = task_rng.stream_key(seed)
         log_q, log_h, log_v, cursor, stats = run(
             pg, jnp.asarray(starts_sh), jnp.asarray(qcount), base_key)
         # Devices run the lockstep superstep loop the same number of times:
@@ -469,7 +469,7 @@ class ShardedWalkStream(_StreamBase):
                                                   mesh, self.capacity)
         self.state = init_dist_stream_state(pg, program.spec, cfg,
                                             self.capacity)
-        self._base_key = jax.random.PRNGKey(seed)
+        self._base_key = task_rng.stream_key(seed)
         self._next_dev = 0  # round-robin staging cursor
         self._init_ring()
 
@@ -540,7 +540,7 @@ class ShardedWalkStream(_StreamBase):
             raise RuntimeError("reset with live queries outstanding")
         if seed is not None:
             self.seed = seed
-            self._base_key = jax.random.PRNGKey(seed)
+            self._base_key = task_rng.stream_key(seed)
         self.state = init_dist_stream_state(self.graph, self.program.spec,
                                             self._cfg, self.capacity)
         self._next_dev = 0
