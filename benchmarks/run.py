@@ -91,10 +91,10 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from benchmarks import (common, fig8_fpga_baselines, fig9_throughput,
-                            fig10_rmat_skew, fig11_ablation, roofline,
-                            serve_walks, step_impl_matrix, table3_scaling,
-                            table4_kernels)
+    from benchmarks import (common, e2e_embeddings, fig8_fpga_baselines,
+                            fig9_throughput, fig10_rmat_skew, fig11_ablation,
+                            roofline, serve_walks, step_impl_matrix,
+                            table3_scaling, table4_kernels)
     suites = {
         "fig8": fig8_fpga_baselines.run,
         "fig9": fig9_throughput.run,
@@ -105,6 +105,7 @@ def main() -> None:
         "roofline": roofline.run,
         "serve": serve_walks.run,
         "step_impl": step_impl_matrix.run,
+        "e2e_embeddings": e2e_embeddings.run,
     }
     print("name,us_per_call,derived")
     payload = {}

@@ -1,87 +1,71 @@
-"""End-to-end driver: walk corpus → skip-gram DeepWalk embeddings.
+"""End-to-end driver: device-resident walks → DeepWalk embeddings.
+
+One call — ``Walker.train_embeddings`` — runs the whole pipeline: walk
+rounds land in the HBM corpus ring, the jitted consumer samples
+(center, context, negatives) windows straight out of it, and SGNS grad
+steps train donated embedding tables, with round ``r+1``'s walk launch
+overlapped with round ``r``'s grad steps.  The paths never visit the
+host (pinned by ``repro.core.corpus_ring.no_host_copies``); pass
+``--serial`` to time the naive host round-trip wiring instead — the
+result is bit-identical either way.
 
 Walker API: docs/api.md · perf methodology: docs/benchmarks.md.
 
   PYTHONPATH=src python examples/train_deepwalk_embeddings.py \
-      --scale 12 --dim 64 --steps 200
+      --scale 12 --dim 64 --rounds 8 --steps-per-round 48
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import walker
+from repro.core import corpus_ring
 from repro.graph import make_dataset
-from repro.models import embeddings as emb
-from repro.optim import adamw
-from repro.runtime import train_loop
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--dim", type=int, default=64)
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--walks", type=int, default=4000)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--steps-per-round", type=int, default=48)
+    ap.add_argument("--walks-per-round", type=int, default=4096)
     ap.add_argument("--walk-len", type=int, default=40)
     ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--serial", action="store_true",
+                    help="naive baseline: host round-trip, no overlap")
+    ap.add_argument("--backend", choices=["single", "sharded"],
+                    default="single")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_deepwalk")
     args = ap.parse_args()
 
     g = make_dataset("WG", scale_override=args.scale, weighted=True,
                      with_alias=True)
     print(f"graph |V|={g.num_vertices} |E|={g.num_edges}")
-    rng = np.random.default_rng(0)
-    starts = rng.integers(0, g.num_vertices, args.walks).astype(np.int32)
 
+    w = walker.compile(walker.WalkProgram.deepwalk(args.walk_len),
+                       backend=args.backend)
     t0 = time.time()
-    res = walker.compile(
-        walker.WalkProgram.deepwalk(args.walk_len),
-        execution=walker.ExecutionConfig(num_slots=2048)).run(g, starts)
-    paths, lengths = res.as_numpy()
-    print(f"walk corpus: {int(res.stats.steps)} steps "
-          f"in {time.time()-t0:.1f}s")
+    out = w.train_embeddings(
+        g, seed=0, rounds=args.rounds, walks_per_round=args.walks_per_round,
+        steps_per_round=args.steps_per_round, batch_size=args.batch,
+        dim=args.dim, window=5, num_negatives=5, use_kernel=False,
+        overlap=not args.serial, ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(16, args.steps_per_round), log_every=16)
+    jax.block_until_ready(out["params"]["in_embed"])
+    dt = time.time() - t0
 
-    cfg = emb.SkipGramConfig(num_vertices=g.num_vertices, dim=args.dim,
-                             num_negatives=5, window=5)
-    centers, contexts = emb.pairs_from_walks(paths, lengths, cfg.window, rng,
-                                             max_pairs=args.steps * args.batch)
-    n_params = 2 * g.num_vertices * args.dim
-    print(f"pairs: {centers.size}; model params: {n_params/1e6:.1f}M")
-
-    params = emb.init_params(jax.random.PRNGKey(0), cfg)
-    opt_cfg = adamw.AdamWConfig(lr=2e-2, weight_decay=0.0,
-                                warmup_steps=20, total_steps=args.steps)
-    opt_state = adamw.init_state(params)
-
-    @jax.jit
-    def step_fn(state, batch):
-        params, opt = state
-        c, x, n = batch
-        loss, grads = jax.value_and_grad(emb.loss_fn)(params, c, x, n)
-        params, opt, stats = adamw.apply_updates(params, grads, opt, opt_cfg)
-        return (params, opt), {"loss": loss, **stats}
-
-    def batch_fn(step):
-        r = np.random.default_rng((1, step))
-        i = r.integers(0, centers.size, args.batch)
-        negs = r.integers(0, g.num_vertices, (args.batch, 5))
-        return (jnp.asarray(centers[i]), jnp.asarray(contexts[i]),
-                jnp.asarray(negs))
-
-    loop_cfg = train_loop.TrainLoopConfig(
-        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-        ckpt_every=max(50, args.steps // 4), log_every=20)
-    state, start = train_loop.resume_or_init(args.ckpt_dir,
-                                             (params, opt_state))
-    state, step, hist, wd = train_loop.run(step_fn, state, batch_fn,
-                                           loop_cfg, start_step=start)
-    if hist:
+    walks = args.rounds * args.walks_per_round
+    samples = out["step"] * args.batch
+    mode = "serial" if args.serial else "overlapped"
+    print(f"{mode}: {walks} walks → {out['step']} grad steps "
+          f"({samples / dt:.0f} samples/sec) in {dt:.1f}s; "
+          f"path host round-trips so far: {corpus_ring.host_copies()}")
+    if out["history"]:
         print("loss trajectory:",
-              [f"{h['step']}:{h['loss']:.3f}" for h in hist[::3]])
-    print(f"finished at step {step}; stragglers={wd.straggler_steps}; "
+              [f"{h['step']}:{h['loss']:.3f}" for h in out["history"][::3]])
+    print(f"tables: in_embed{tuple(out['params']['in_embed'].shape)}; "
           f"checkpoints in {args.ckpt_dir}")
 
 

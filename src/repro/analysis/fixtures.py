@@ -49,6 +49,17 @@ def rng_chunk_overlap() -> List[Finding]:
     return rng_collisions.check_streams(streams, context="fixture")
 
 
+def rng_corpus_salt_reuse() -> List[Finding]:
+    """The corpus-ring negatives draw put back on a walk channel — the
+    defect the SALT_NEGATIVE registration exists to prevent.  Consumer
+    batches fold (qid=batch element, hop=grad step) under the round-0
+    stream key, the very tuples walk tasks fold, so a consumer stream on
+    SALT_COLUMN collides with the uniform sampler's column draw."""
+    streams = rng_collisions.spec_streams(_default_spec("uniform"))
+    streams += (DrawStream("fixture.corpus_negatives", SALT_COLUMN, 5),)
+    return rng_collisions.check_streams(streams, context="fixture")
+
+
 def rng_literal_salt() -> List[Finding]:
     """A call site passing a raw integer salt the registry never saw."""
     src = ("from repro.core import rng as task_rng\n"
@@ -142,6 +153,7 @@ def determinism_no_interpret() -> List[Finding]:
 FIXTURES: Dict[str, Callable[[], List[Finding]]] = {
     "rng-duplicate-salt": rng_duplicate_salt,
     "rng-chunk-overlap": rng_chunk_overlap,
+    "rng-corpus-salt-reuse": rng_corpus_salt_reuse,
     "rng-literal-salt": rng_literal_salt,
     "dma-missing-wait": dma_missing_wait,
     "dma-overwrite-in-flight": dma_overwrite_in_flight,

@@ -18,7 +18,12 @@ triple-count the streams, not find more collisions):
     looping program's stream is an open-ended *family* at
     ``[salt, ∞)`` (one chunk per salt, degree-dependent count);
   * `walk_engine.ENGINE_DRAW_STREAMS` — engine-issued draws (the PPR
-    stop draw) outside the phase programs.
+    stop draw) outside the phase programs;
+  * `corpus_ring.CORPUS_DRAW_STREAMS` — the corpus-ring batch sampler's
+    window/negative draws.  The consumer folds ``(qid=batch element,
+    hop=grad step)`` under the round-0 stream key — the *same* fold
+    tuples walk tasks use — so its channels must be disjoint from every
+    sampler and engine channel, and they join each kind's stream set.
 
 The AST side then keeps the model honest: every
 ``task_uniforms`` / ``task_key_pair`` / ``task_bits`` / ``task_fold``
@@ -35,6 +40,7 @@ import pathlib
 from typing import List, Sequence, Tuple
 
 from repro.analysis.report import Finding
+from repro.core.corpus_ring import CORPUS_DRAW_STREAMS
 from repro.core.phase_program import DrawStream, _default_spec, lower
 from repro.core.rng import SALTS
 from repro.core.samplers import KINDS
@@ -50,9 +56,13 @@ _SCOPE = ("core", "kernels", "walker")
 
 def spec_streams(spec) -> Tuple[DrawStream, ...]:
     """All draw streams one sampler spec's tasks consume: the lowered
-    program's streams plus the engine-issued ones."""
+    program's streams, the engine-issued ones, and the corpus-ring
+    consumer's (its (qid, hop) tuples overlap walk tasks under the
+    round-0 key, so it shares the task fold space)."""
     streams = list(lower(spec).draw_streams())
     for site, salt, width in ENGINE_DRAW_STREAMS:
+        streams.append(DrawStream(site=site, salt=salt, width=width))
+    for site, salt, width in CORPUS_DRAW_STREAMS:
         streams.append(DrawStream(site=site, salt=salt, width=width))
     return tuple(streams)
 

@@ -1,7 +1,8 @@
 """RidgeWalker core: stateless task decomposition, sampler phase-program
 IR, zero-bubble slot-pool engine, queuing-theoretic scheduler,
 distributed routing."""
-from repro.core import phase_program, scheduler
+from repro.core import corpus_ring, phase_program, scheduler
+from repro.core.corpus_ring import CorpusRing
 from repro.core.samplers import SamplerSpec, edge_exists
 from repro.core.tasks import (N2VSlots, QueryQueue, ReservoirSlots,
                               WalkerSlots, WalkResult, WalkStats,
@@ -19,4 +20,5 @@ __all__ = [
     "EngineConfig", "StreamState", "init_stream_state", "inject_queries",
     "build_engine", "make_engine", "make_superstep_runner", "run_walks",
     "phase_program", "scheduler",
+    "corpus_ring", "CorpusRing",
 ]

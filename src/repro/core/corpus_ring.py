@@ -1,0 +1,234 @@
+"""Device-resident corpus ring: walks land in HBM, training reads HBM.
+
+The walks→embeddings hand-off is the first *consumer* of the walk engine,
+and the naive wiring collapses the pipeline to host-bandwidth speed:
+every completed path is pulled through ``np.asarray`` and re-uploaded
+before the SGNS step can touch it.  This module keeps the hand-off on
+device (the LightRW precedent): completed paths are scattered into a
+ring of ``capacity`` rows that lives in HBM for its whole life, and the
+jitted batch sampler draws (center, context, negatives) windows straight
+out of it.
+
+Ring economy
+------------
+The ring mirrors the ``QueryQueue`` slot economy: a monotone ``tail``
+counter is the only state besides the row buffers.  ``append`` scatters
+``n`` completed paths at slots ``(tail + i) % capacity`` (oldest rows
+are overwritten once the ring wraps) and advances ``tail``; the sampler
+reads ``filled = min(tail, capacity)`` rows.  There is no head/consume
+pointer — training *samples* the ring (with replacement) rather than
+draining it, so one walk is reused by many windows, exactly like an
+on-host DeepWalk corpus.
+
+Determinism
+-----------
+Every batch is a pure function of ``(base_key, step, ring contents)``:
+batch element ``i`` at grad step ``t`` folds the task tuple
+``(seed, qid=i, hop=t)`` — the *same* fold space a walk task of stream
+epoch 0 uses — so the corpus draws get their own registered salt
+channels (``SALT_CORPUS`` for the row/center/offset window draw,
+``SALT_NEGATIVE`` for the negative ids) and the `repro.analysis` rng
+pass proves them disjoint from every sampler and engine channel.  Ring
+contents are themselves pure functions of ``(seed, round)`` (round
+``r``'s walks are a closed batch under ``rng.stream_key(seed, r)``), so
+the whole batch stream is restartable from ``(seed, ring state)``.
+
+Host-copy accounting
+--------------------
+The zero-copy claim is pinned by a counter, not prose: every code path
+that pulls walk paths to the host (``harvest_ids``, the serial-mode
+round-trip) calls :func:`record_host_copy`, and tests wrap the training
+loop in :func:`no_host_copies` — which raises on the first recorded copy
+and additionally arms ``jax.transfer_guard_device_to_host`` (inert on
+CPU, enforcing on real accelerators).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as task_rng
+from repro.core.rng import SALT_CORPUS, SALT_NEGATIVE
+
+# Draw streams the corpus consumer adds to every sampler's task draws —
+# the `repro.analysis` rng pass appends these to each kind's stream set
+# (consumer qid/hop tuples overlap walk tasks under the round-0 key, so
+# salt disjointness is the only separator).  Widths: the window draw is
+# always 3 uniforms (row, center, offset); negatives default to 5/batch
+# element (`SkipGramConfig.num_negatives`).
+CORPUS_DRAW_STREAMS = (("corpus.window_draw", SALT_CORPUS, 3),
+                       ("corpus.negatives", SALT_NEGATIVE, 5))
+
+
+class CorpusRing(NamedTuple):
+    """Device-resident walk corpus: a ring of completed path rows.
+
+    ``paths`` is ``(capacity, path_width)`` int32 with ``-1`` padding
+    (the engine's recording layout, ``path_width = max_hops + 1``);
+    ``lengths`` is the recorded hop count per row; ``tail`` is the
+    monotone append counter (a device scalar so the ring checkpoints as
+    a plain pytree and `append` stays jittable).
+    """
+
+    paths: jnp.ndarray    # (R, P) int32, -1 pad
+    lengths: jnp.ndarray  # (R,) int32
+    tail: jnp.ndarray     # () int32 — monotone rows-ever-appended
+
+    @property
+    def capacity(self) -> int:
+        """R — ring rows (old walks are overwritten past this)."""
+        return int(self.paths.shape[0])
+
+    @property
+    def path_width(self) -> int:
+        """P — path buffer width (``max_hops + 1``)."""
+        return int(self.paths.shape[1])
+
+
+def init_ring(capacity: int, path_width: int) -> CorpusRing:
+    """An empty ring able to hold ``capacity`` walks of ``path_width``."""
+    if capacity <= 0:
+        raise ValueError(f"corpus ring capacity must be positive, got "
+                         f"{capacity}")
+    if path_width <= 0:
+        raise ValueError(f"path_width must be positive, got {path_width}")
+    return CorpusRing(
+        paths=jnp.full((capacity, path_width), -1, jnp.int32),
+        lengths=jnp.zeros((capacity,), jnp.int32),
+        tail=jnp.zeros((), jnp.int32),
+    )
+
+
+@jax.jit
+def append(ring: CorpusRing, paths: jnp.ndarray,
+           lengths: jnp.ndarray) -> CorpusRing:
+    """Scatter ``n`` completed walks into the ring (device→device).
+
+    Rows land at slots ``(tail + i) % capacity`` — the monotone-counter
+    ring economy of ``QueryQueue``, so appending never needs a host
+    round-trip and wrapping transparently retires the oldest walks.
+    ``paths`` may be narrower than the ring rows (shorter hop budget);
+    it is right-padded with ``-1``.
+    """
+    n, p = paths.shape
+    R, P = ring.paths.shape
+    if n > R:
+        raise ValueError(
+            f"appending {n} walks to a {R}-row ring would overwrite rows "
+            "within one append; raise ring_capacity")
+    if p > P:
+        raise ValueError(
+            f"walk paths are {p} wide but the ring holds {P}-wide rows")
+    if p < P:
+        paths = jnp.concatenate(
+            [paths, jnp.full((n, P - p), -1, jnp.int32)], axis=1)
+    slots = (ring.tail + jnp.arange(n, dtype=jnp.int32)) % R
+    return CorpusRing(
+        paths=ring.paths.at[slots].set(jnp.asarray(paths, jnp.int32)),
+        lengths=ring.lengths.at[slots].set(jnp.asarray(lengths, jnp.int32)),
+        tail=ring.tail + n,
+    )
+
+
+def filled(ring: CorpusRing) -> jnp.ndarray:
+    """Rows currently holding a walk (``min(tail, capacity)``)."""
+    return jnp.minimum(ring.tail, ring.paths.shape[0])
+
+
+def make_batch_sampler(num_vertices: int, batch_size: int, window: int,
+                       num_negatives: int):
+    """Build the jitted corpus consumer: ring → (center, context, negs).
+
+    The returned ``sample(ring, base_key, step)`` draws one SGNS batch
+    deterministically: element ``i`` folds ``(qid=i, hop=step)`` and
+    draws 3 uniforms on ``SALT_CORPUS`` (ring row, center position,
+    window offset) plus ``num_negatives`` on ``SALT_NEGATIVE``.  Returns
+    ``(centers, contexts, negatives, mask)`` — ``mask`` is False where
+    the window fell off the walk (or the ring is empty), so the loss
+    skips the pair without breaking batch-shape staticness.
+    """
+    if window <= 0:
+        raise ValueError(f"window must be positive, got {window}")
+    if num_negatives <= 0:
+        raise ValueError(f"num_negatives must be positive, got "
+                         f"{num_negatives}")
+
+    @jax.jit
+    def sample(ring: CorpusRing, base_key, step):
+        B = batch_size
+        qid = jnp.arange(B, dtype=jnp.int32)
+        hop = jnp.asarray(step, jnp.int32)
+        u = task_rng.task_uniforms(base_key, qid, hop, 3, SALT_CORPUS)
+        avail = filled(ring)
+        # Ring row + center position (clamped draws: floor(u·n) < n).
+        row = jnp.minimum((u[:, 0] * avail).astype(jnp.int32),
+                          jnp.maximum(avail - 1, 0))
+        ln = jnp.maximum(ring.lengths[row], 1)
+        center = jnp.minimum((u[:, 1] * ln).astype(jnp.int32), ln - 1)
+        # Window offset in {-window..-1, 1..window} (never 0).
+        j = jnp.minimum((u[:, 2] * (2 * window)).astype(jnp.int32),
+                        2 * window - 1)
+        off = j - window
+        off = jnp.where(off >= 0, off + 1, off)
+        ctx_pos = center + off
+        valid = (ctx_pos >= 0) & (ctx_pos < ln) & (avail > 0)
+        ctx_pos = jnp.clip(ctx_pos, 0, ln - 1)
+        centers = ring.paths[row, center]
+        contexts = ring.paths[row, ctx_pos]
+        mask = valid & (centers >= 0) & (contexts >= 0)
+        un = task_rng.task_uniforms(base_key, qid, hop, num_negatives,
+                                    SALT_NEGATIVE)
+        negatives = jnp.minimum((un * num_vertices).astype(jnp.int32),
+                                num_vertices - 1)
+        return (jnp.maximum(centers, 0), jnp.maximum(contexts, 0),
+                negatives, mask)
+
+    return sample
+
+
+# ---------------------------------------------------- host-copy accounting
+
+_copies = 0
+_guard_depth = 0
+
+
+def record_host_copy(site: str = "") -> None:
+    """Note one host round-trip of walk paths (harvest / serial mode).
+
+    Raises when inside :func:`no_host_copies` — that is how the
+    zero-per-step-host-transfer property is pinned by a test instead of
+    trusted to prose.
+    """
+    global _copies
+    _copies += 1
+    if _guard_depth > 0:
+        raise RuntimeError(
+            f"walk paths copied to the host under a no_host_copies guard "
+            f"(site: {site or 'unknown'}) — the device-resident pipeline "
+            "must hand paths to the corpus ring without a host round-trip")
+
+
+def host_copies() -> int:
+    """Total path host round-trips recorded since import."""
+    return _copies
+
+
+@contextlib.contextmanager
+def no_host_copies():
+    """Assert no walk-path host round-trip happens in this scope.
+
+    Arms both the module counter (raises at the offending call site) and
+    ``jax.transfer_guard_device_to_host("disallow")`` — the JAX guard is
+    inert on CPU (host and device memory coincide) but enforces the same
+    property at the runtime level on real accelerators.
+    """
+    global _guard_depth
+    _guard_depth += 1
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            yield
+    finally:
+        _guard_depth -= 1

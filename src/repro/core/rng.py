@@ -150,6 +150,14 @@ SALTS = SaltRegistry()
 SALT_COLUMN = SALTS.register("SALT_COLUMN", 0)   # which neighbor column
 SALT_ACCEPT = SALTS.register("SALT_ACCEPT", 1)   # alias/rejection accept
 SALT_STOP = SALTS.register("SALT_STOP", 2)       # PPR termination draw
+# Corpus-consumer channels (`core/corpus_ring.py`): the SGNS batch sampler
+# draws (ring row, center position, window offset) and the negative ids
+# from the same (seed, qid, hop) fold space a walk task of round 0 uses
+# (batch element i at grad step t folds qid=i, hop=t), so its channels
+# must be registry-disjoint from every sampler/engine channel — the
+# `repro.analysis` rng pass proves it.
+SALT_CORPUS = SALTS.register("SALT_CORPUS", 3)       # window draw (row/c/off)
+SALT_NEGATIVE = SALTS.register("SALT_NEGATIVE", 4)   # SGNS negative ids
 # Reservoir chunk draws: chunk c draws at SALT_CHUNK0 + c, an open-ended
 # family (chunk counts are degree-dependent), so it must sit above every
 # scalar channel — the registry enforces that at import.

@@ -4,14 +4,28 @@ The end-to-end driver: RidgeWalker's walk engine generates the corpus, a
 sliding window produces (center, context) pairs, and this model learns the
 node embeddings — the full DeepWalk pipeline [5] on top of the paper's
 system.
+
+Two consumption paths exist:
+
+* the legacy host path (:func:`pairs_from_walks` + ad-hoc batching), kept
+  for offline corpus processing;
+* the device-resident path — `repro.core.corpus_ring` samples
+  (center, context, negatives) windows straight from the HBM ring and
+  :func:`make_sgns_step` (donated embedding-table buffers, hot-path
+  gathers on the fused `kernels/embedding_bag` Pallas kernel) consumes
+  them with zero per-step host traffic.  ``Walker.train_embeddings``
+  composes the two ends.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.optim import adamw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,16 +48,96 @@ def init_params(key, cfg: SkipGramConfig):
     }
 
 
-def loss_fn(params, centers, contexts, negatives):
-    """centers (B,), contexts (B,), negatives (B, K) — SGNS objective."""
-    ci = params["in_embed"][centers]              # (B, D)
-    co = params["out_embed"][contexts]            # (B, D)
-    no = params["out_embed"][negatives]           # (B, K, D)
+# ------------------------------------------------------------ row gathers
+#
+# The SGNS hot path is three random-row gathers per step — exactly the
+# access regime the embedding_bag kernel double-buffers (each id is a
+# one-row bag).  pallas_call has no VJP, so the kernel carries a
+# custom_vjp whose backward is the standard scatter-add — identical to
+# the jnp gather's gradient.
+
+
+@jax.custom_vjp
+def _kernel_gather(table, flat_ids):
+    from repro.kernels.embedding_bag import embedding_bag
+    return embedding_bag(flat_ids[:, None], table)
+
+
+def _kernel_gather_fwd(table, flat_ids):
+    return _kernel_gather(table, flat_ids), (flat_ids, table.shape[0])
+
+
+def _kernel_gather_bwd(res, g):
+    flat_ids, rows = res
+    gt = jnp.zeros((rows, g.shape[-1]), g.dtype).at[flat_ids].add(g)
+    return gt, np.zeros(flat_ids.shape, dtype=jax.dtypes.float0)
+
+
+_kernel_gather.defvjp(_kernel_gather_fwd, _kernel_gather_bwd)
+
+
+def gather_rows(table, ids, use_kernel: bool = False):
+    """``table[ids]`` with the forward gather on the embedding_bag kernel.
+
+    ``ids`` may carry any leading shape; the row axis is appended last.
+    ``use_kernel=False`` is the jnp reference the parity tests pin the
+    kernel against (bit-exact forward, scatter-add-identical backward).
+    """
+    if not use_kernel:
+        return table[ids]
+    flat = ids.reshape(-1).astype(jnp.int32)
+    rows = _kernel_gather(table, flat)
+    return rows.reshape(*ids.shape, table.shape[1])
+
+
+def loss_fn(params, centers, contexts, negatives, mask=None,
+            use_kernel: bool = False):
+    """centers (B,), contexts (B,), negatives (B, K) — SGNS objective.
+
+    ``mask`` (B,) bool skips invalid pairs (a corpus-ring window that
+    fell off its walk) without changing the static batch shape; ``None``
+    keeps the legacy all-pairs mean bit-exactly.  ``use_kernel`` routes
+    the three row gathers through the embedding_bag Pallas kernel.
+    """
+    ci = gather_rows(params["in_embed"], centers, use_kernel)    # (B, D)
+    co = gather_rows(params["out_embed"], contexts, use_kernel)  # (B, D)
+    no = gather_rows(params["out_embed"], negatives, use_kernel)  # (B, K, D)
     pos = jnp.sum(ci * co, axis=-1)
     neg = jnp.einsum("bd,bkd->bk", ci, no)
     pos_l = jax.nn.log_sigmoid(pos)
     neg_l = jnp.sum(jax.nn.log_sigmoid(-neg), axis=-1)
-    return -jnp.mean(pos_l + neg_l)
+    per_pair = pos_l + neg_l
+    if mask is None:
+        return -jnp.mean(per_pair)
+    w = mask.astype(per_pair.dtype)
+    return -jnp.sum(per_pair * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def make_sgns_step(cfg: SkipGramConfig, opt_cfg: adamw.AdamWConfig,
+                   use_kernel: bool = True):
+    """Build the jitted SGNS grad step with donated table buffers.
+
+    ``step(params, opt_state, batch) -> (params, opt_state, aux)`` where
+    ``batch = (centers, contexts, negatives, mask)``.  Donating the
+    embedding tables and optimizer moments lets XLA update the (2·|V|·D)
+    buffers in place — the tables never leave the device and no step
+    allocates a second copy.
+    """
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt_state, batch):
+        centers, contexts, negatives, mask = batch
+
+        def objective(p):
+            return loss_fn(p, centers, contexts, negatives, mask=mask,
+                           use_kernel=use_kernel)
+
+        loss, grads = jax.value_and_grad(objective)(params)
+        params2, opt2, stats = adamw.apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        return params2, opt2, {"loss": loss, **stats}
+
+    return step
 
 
 def pairs_from_walks(paths: np.ndarray, lengths: np.ndarray, window: int,

@@ -100,6 +100,125 @@ def run(step_fn: Callable, state: Any, batch_fn: Callable,
     return state, step, history, watchdog
 
 
+@dataclasses.dataclass
+class PipelineConfig:
+    """Knobs for the producer/consumer pipelined loop (`run_pipelined`).
+
+    ``rounds`` walk-production rounds × ``steps_per_round`` grad steps;
+    ``overlap=True`` dispatches round ``r+1``'s walk launch *before*
+    round ``r``'s grad steps are issued, so the device queue interleaves
+    walk supersteps with training (async dispatch — the host never
+    blocks between the two).  ``overlap=False`` is the serial baseline:
+    block on the walks, round-trip them through the host, then train.
+    """
+
+    rounds: int = 4
+    steps_per_round: int = 16
+    overlap: bool = True
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0          # 0 = no mid-training checkpoints
+    log_every: int = 0           # 0 = no loss history (zero host syncs)
+    straggler_factor: float = 3.0
+
+
+def run_pipelined(produce_fn: Callable, append_fn: Callable,
+                  sample_fn: Callable, step_fn: Callable,
+                  state: Any, ring: Any, cfg: PipelineConfig,
+                  start_step: int = 0, rounds_done: int = 0,
+                  batch_hook: Optional[Callable] = None):
+    """Overlapped producer/consumer training loop.
+
+    * ``produce_fn(round) -> walks`` — dispatch one walk round (device
+      arrays; must be a pure function of the round index, so a resumed
+      run regenerates exactly the rounds it needs).
+    * ``append_fn(ring, walks) -> ring`` — land the walks in the corpus
+      ring (device→device in overlapped mode; the serial baseline's
+      append is where the host round-trip lives).
+    * ``sample_fn(ring, step) -> batch`` — the jitted corpus consumer.
+    * ``step_fn(state, batch) -> (state, aux)`` — the grad step.
+
+    With ``cfg.overlap`` the loop issues round ``r+1``'s production
+    immediately after appending round ``r`` — before any of round ``r``'s
+    grad steps — so walk launches and grad steps coexist in the device
+    queue (launch ``k+1`` in flight while step ``k`` executes).  Steps
+    are checkpointed (``{"state", "ring"}`` payload) every
+    ``ckpt_every`` steps; resume via :func:`resume_pipeline`, passing
+    the restored ``rounds_done`` so already-ingested rounds are not
+    re-appended.  Returns ``(state, ring, step, history, watchdog)``.
+    """
+    if cfg.rounds <= 0 or cfg.steps_per_round <= 0:
+        raise ValueError(
+            f"rounds ({cfg.rounds}) and steps_per_round "
+            f"({cfg.steps_per_round}) must be positive")
+    total = cfg.rounds * cfg.steps_per_round
+    spr = cfg.steps_per_round
+    watchdog = StragglerWatchdog(cfg.straggler_factor)
+    history = []
+    pending = None
+    pending_round = -1
+    step = start_step
+    while step < total:
+        r = step // spr
+        # Ingest every round up to and including r (a fresh run appends
+        # exactly round r here; a resumed run may need to catch up).
+        while rounds_done <= r:
+            if pending_round != rounds_done:
+                pending = produce_fn(rounds_done)
+                pending_round = rounds_done
+            ring = append_fn(ring, pending)
+            pending = None
+            rounds_done += 1
+        # Overlap: round r+1's walk launch enters the device queue ahead
+        # of round r's grad steps (the producer side of the pipeline).
+        nxt = rounds_done
+        if cfg.overlap and nxt == r + 1 and nxt < cfg.rounds:
+            pending = produce_fn(nxt)
+            pending_round = nxt
+        end = min(total, (r + 1) * spr)
+        while step < end:
+            t0 = time.perf_counter()
+            batch = sample_fn(ring, step)
+            if batch_hook is not None:
+                batch_hook(step, batch)
+            state, aux = step_fn(state, batch)
+            step += 1
+            if cfg.log_every and step % cfg.log_every == 0:
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+                dt = time.perf_counter() - t0
+                history.append({"step": step, "dt_s": dt,
+                                "straggler": watchdog.observe(dt),
+                                **{k: float(v)
+                                   for k, v in (aux or {}).items()}})
+            if (cfg.ckpt_dir and cfg.ckpt_every
+                    and step % cfg.ckpt_every == 0 and step < total):
+                checkpointer.save(cfg.ckpt_dir, step,
+                                  {"state": state, "ring": ring},
+                                  blocking=True)
+        if cfg.overlap:
+            # Bounded pipeline: fence on the consumer state at the round
+            # boundary (round r+1's walk launch is already in flight, so
+            # it keeps executing behind this wait).  Without the fence
+            # the async dispatch queue grows without bound and dispatch
+            # overhead eats the overlap win.
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+    if cfg.ckpt_dir:
+        checkpointer.save(cfg.ckpt_dir, step,
+                          {"state": state, "ring": ring}, blocking=True)
+    return state, ring, step, history, watchdog
+
+
+def resume_pipeline(ckpt_dir: Optional[str], init_state: Any, init_ring: Any):
+    """Latest pipelined checkpoint (state, ring, step) or the fresh pair."""
+    if not ckpt_dir:
+        return init_state, init_ring, 0
+    last = checkpointer.latest_step(ckpt_dir)
+    if last is None:
+        return init_state, init_ring, 0
+    payload = checkpointer.restore(ckpt_dir, last,
+                                   {"state": init_state, "ring": init_ring})
+    return payload["state"], payload["ring"], last
+
+
 def resume_or_init(ckpt_dir: str, init_state: Any, shardings=None):
     """Elastic restart: load the latest checkpoint (re-sharded to the
     current mesh) or return the fresh state."""

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import corpus_ring
 from repro.core import rng as task_rng
 from repro.core.distributed import (DistLogs, assemble_paths,
                                     init_dist_stream_state,
@@ -91,6 +92,7 @@ class Walker:
         self._mesh = mesh
         self._engine = None         # single-device closed-system runner
         self._dist_cache = {}       # sharded runners keyed by graph shape
+        self._emb_cache = {}        # train_embeddings jitted pieces
 
     # ----------------------------------------------------------- internals
 
@@ -225,6 +227,182 @@ class Walker:
                                               seed=seed),
                            chunk=chunk)
 
+    # ------------------------------------------------- walks → embeddings
+
+    def train_embeddings(self, graph, *, seed: int = 0,
+                         rounds: int = 4, walks_per_round: int = 64,
+                         steps_per_round: int = 32, batch_size: int = 256,
+                         dim: int = 32, window: int = 5,
+                         num_negatives: int = 5,
+                         ring_capacity: Optional[int] = None,
+                         opt_cfg=None, overlap: bool = True,
+                         use_kernel: bool = True,
+                         ckpt_dir: Optional[str] = None,
+                         ckpt_every: int = 0, log_every: int = 0,
+                         batch_hook=None) -> dict:
+        """Device-resident walks→embeddings pipeline (DeepWalk/node2vec).
+
+        Runs ``rounds`` walk-production rounds of ``walks_per_round``
+        walks each; completed paths land directly in an HBM corpus ring
+        (`repro.core.corpus_ring`) and ``steps_per_round`` SGNS grad
+        steps per round consume (center, context, negatives) windows
+        sampled straight from the ring — the paths never visit the host.
+        With ``overlap=True`` round ``r+1``'s walk launch is dispatched
+        before round ``r``'s grad steps, so walking and training share
+        the device queue; ``overlap=False`` is the serial baseline
+        (host round-trip + blocking), bit-identical in result.
+
+        Round ``r``'s corpus is the closed batch of starts
+        ``(r·walks_per_round + i) % |V|`` under ``rng.stream_key(seed,
+        r)`` — a pure function of ``(seed, r)`` on either backend, so a
+        run checkpointed via ``ckpt_dir`` resumes bit-identically
+        (pending rounds are re-produced, ingested rounds are not).
+
+        Returns ``{"params", "opt_state", "ring", "step", "history",
+        "config"}`` — ``params`` are the trained (device-resident)
+        embedding tables.
+        """
+        from repro.models import embeddings as emb
+        from repro.optim import adamw
+        from repro.runtime import train_loop
+
+        if walks_per_round <= 0 or rounds <= 0:
+            raise ValueError(
+                f"rounds ({rounds}) and walks_per_round ({walks_per_round}) "
+                "must be positive")
+        path_width = self.program.max_hops + 1
+
+        # ------------------------------------------------------- producer
+        if self.backend == "single":
+            self.program.requires(graph)
+            nv = int(graph.num_vertices)
+            if "engine" not in self._emb_cache:
+                cfg = dataclasses.replace(self._engine_cfg(),
+                                          record_paths=True)
+                self._emb_cache["engine"] = build_engine(self.program.spec,
+                                                         cfg)
+            engine = self._emb_cache["engine"]
+            stream = None
+
+            def produce(r: int):
+                sv = jnp.asarray(
+                    (r * walks_per_round + np.arange(walks_per_round)) % nv,
+                    jnp.int32)
+                res = engine(graph, sv, task_rng.stream_key(seed, r),
+                             num_queries=walks_per_round)
+                return res.paths, res.lengths
+        else:
+            stream = self.stream(graph, capacity=walks_per_round, seed=seed)
+            nv = int(stream.graph.num_vertices)
+
+            def produce(r: int):
+                starts = (r * walks_per_round
+                          + np.arange(walks_per_round)) % nv
+                qids, epochs = stream.inject(starts)
+                if int(epochs[0]) != r:
+                    raise RuntimeError(
+                        f"producer stream is at epoch {int(epochs[0])} but "
+                        f"round {r} was requested (rounds must be produced "
+                        "in order; use seek_epochs after a resume)")
+                stream.drain()
+                paths, lengths = stream.harvest_device(qids)
+                stream.release(qids)
+                return paths, lengths
+
+        # ------------------------------------------------------- consumer
+        sg_cfg = emb.SkipGramConfig(num_vertices=nv, dim=dim,
+                                    num_negatives=num_negatives,
+                                    window=window)
+        opt_cfg = opt_cfg or adamw.AdamWConfig(
+            lr=1e-2, warmup_steps=max(1, rounds * steps_per_round // 10),
+            total_steps=rounds * steps_per_round)
+        params0 = emb.init_params(task_rng.stream_key(seed), sg_cfg)
+        state0 = (params0, adamw.init_state(params0))
+        # Reuse jitted pieces across calls (repeat training runs on one
+        # Walker hit the jit cache instead of recompiling).
+        skey = ("sampler", nv, batch_size, window, num_negatives)
+        if skey not in self._emb_cache:
+            self._emb_cache[skey] = corpus_ring.make_batch_sampler(
+                nv, batch_size, window, num_negatives)
+        sampler = self._emb_cache[skey]
+        base_key = task_rng.stream_key(seed)
+
+        def sample(ring, step):
+            return sampler(ring, base_key, step)
+
+        gkey = ("sgns", dataclasses.astuple(sg_cfg),
+                dataclasses.astuple(opt_cfg), use_kernel)
+        if gkey not in self._emb_cache:
+            self._emb_cache[gkey] = emb.make_sgns_step(
+                sg_cfg, opt_cfg, use_kernel=use_kernel)
+        sgns = self._emb_cache[gkey]
+
+        def step_fn(state, batch):
+            params, opt = state
+            if not overlap:
+                # Serial baseline: the naive wiring stages every batch
+                # through the host (the per-step transfer the corpus
+                # ring exists to delete) and blocks on every grad step.
+                corpus_ring.record_host_copy("train_embeddings.serial_batch")
+                batch = tuple(jnp.asarray(np.asarray(x)) for x in batch)
+            params, opt, aux = sgns(params, opt, batch)
+            if not overlap:
+                jax.block_until_ready(params["in_embed"])
+            return (params, opt), aux
+
+        # ----------------------------------------------------------- ring
+        cap = ring_capacity or max(2 * walks_per_round, walks_per_round)
+        if self.backend == "sharded":
+            ndev = stream.graph.num_devices
+            cap = -(-cap // ndev) * ndev  # row-shardable across the mesh
+        ring0 = corpus_ring.init_ring(cap, path_width)
+
+        state, ring, start_step = train_loop.resume_pipeline(
+            ckpt_dir, state0, ring0)
+        rounds_done = int(ring.tail) // walks_per_round
+        if stream is not None:
+            stream.seek_epochs(rounds_done)
+            mesh, ax = stream._mesh, stream.cfg.axis_name
+            P = jax.sharding.PartitionSpec
+            ring = jax.device_put(ring, corpus_ring.CorpusRing(
+                paths=jax.sharding.NamedSharding(mesh, P(ax, None)),
+                lengths=jax.sharding.NamedSharding(mesh, P(ax)),
+                tail=jax.sharding.NamedSharding(mesh, P())))
+            if nv % ndev == 0:
+                # Vocab-sharded tables: each device owns |V|/N rows of
+                # both tables (and their optimizer moments).
+                vocab = jax.sharding.NamedSharding(mesh, P(ax, None))
+                state = jax.tree.map(
+                    lambda x: jax.device_put(x, vocab)
+                    if getattr(x, "ndim", 0) == 2 and x.shape[0] == nv
+                    else x, state)
+
+        if overlap:
+            def append(ring, walks):
+                return corpus_ring.append(ring, *walks)
+        else:
+            def append(ring, walks):
+                # The naive hand-off this module exists to delete: pull
+                # every path to the host, re-upload, and fence.
+                corpus_ring.record_host_copy("train_embeddings.serial")
+                paths = np.asarray(walks[0])
+                lengths = np.asarray(walks[1])
+                ring = corpus_ring.append(ring, jnp.asarray(paths),
+                                          jnp.asarray(lengths))
+                jax.block_until_ready(ring.paths)
+                return ring
+
+        pcfg = train_loop.PipelineConfig(
+            rounds=rounds, steps_per_round=steps_per_round, overlap=overlap,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, log_every=log_every)
+        state, ring, step, history, _ = train_loop.run_pipelined(
+            produce, append, sample, step_fn, state, ring, pcfg,
+            start_step=start_step, rounds_done=rounds_done,
+            batch_hook=batch_hook)
+        params, opt_state = state
+        return {"params": params, "opt_state": opt_state, "ring": ring,
+                "step": step, "history": history, "config": sg_cfg}
+
 
 class _StreamBase:
     """Host-side ring economy shared by both stream backends.
@@ -260,8 +438,9 @@ class _StreamBase:
         """Per-slot completion flags (capacity-sized, includes free slots)."""
         raise NotImplementedError
 
-    def harvest_ids(self, qids):
-        """Fetch ``(paths, lengths)`` for the given live query-id slots."""
+    def harvest_device(self, qids):
+        """Fetch ``(paths, lengths)`` for the given live query-id slots as
+        *device-resident* arrays (no host copy) — the corpus-ring feed."""
         raise NotImplementedError
 
     # -- ring economy ------------------------------------------------------
@@ -330,6 +509,32 @@ class _StreamBase:
         self._live[qids] = False
         self._epochs[qids] += 1
         self._free.extend(int(q) for q in qids)
+
+    def seek_epochs(self, epoch: int) -> None:
+        """Fast-forward every free slot's epoch (resume support).
+
+        A resumed pipelined training run re-creates the stream with all
+        epochs at 0 but needs production to continue at walk round
+        ``rounds_done``; seeking makes the next occupant of every slot
+        sample round ``epoch`` — bit-identical to a fresh run that walked
+        through the earlier rounds, because epoch ``e`` of a slot is a
+        pure function of ``(seed, e, qid)``.
+        """
+        if self._live.any():
+            raise RuntimeError("seek_epochs with live queries outstanding")
+        if epoch < int(self._epochs.max(initial=0)):
+            raise ValueError(
+                f"seek_epochs({epoch}) would rewind a slot already past it "
+                f"(max epoch {int(self._epochs.max(initial=0))}) and replay "
+                "a used (epoch, qid) identity")
+        self._epochs[:] = epoch
+
+    def harvest_ids(self, qids):
+        """Fetch ``(paths, lengths)`` for the given live query-id slots as
+        numpy (one recorded host round-trip over :meth:`harvest_device`)."""
+        paths, lengths = self.harvest_device(qids)
+        corpus_ring.record_host_copy("harvest_ids")
+        return np.asarray(paths), np.asarray(lengths)
 
     def done_live_mask(self) -> np.ndarray:
         """(capacity,) bool — live slots whose query has terminated (the
@@ -415,11 +620,10 @@ class WalkStream(_StreamBase):
         """(capacity,) bool — True where that slot's query terminated."""
         return np.asarray(self.state.done)
 
-    def harvest_ids(self, qids):
-        """Recorded (paths, lengths) rows for the given slot ids."""
+    def harvest_device(self, qids):
+        """Recorded (paths, lengths) rows for the given slot ids (device)."""
         idx = jnp.asarray(np.asarray(qids, np.int32))
-        return (np.asarray(self.state.paths[idx]),
-                np.asarray(self.state.lengths[idx]))
+        return self.state.paths[idx], self.state.lengths[idx]
 
     def walk_stats(self) -> WalkStats:
         """Engine counters since construction/reset (host ints)."""
@@ -519,12 +723,12 @@ class ShardedWalkStream(_StreamBase):
         its occupant's walk."""
         return np.asarray(jnp.any(self.state.done, axis=0))
 
-    def harvest_ids(self, qids):
-        """Max-fold the per-device path windows for the given slot ids."""
+    def harvest_device(self, qids):
+        """Max-fold the per-device path windows for the given slot ids —
+        a cross-device reduction, but the result stays on device."""
         idx = jnp.asarray(np.asarray(qids, np.int32))
-        paths = np.asarray(jnp.max(self.state.paths[:, idx, :], axis=0))
-        lengths = np.asarray(jnp.max(self.state.lengths[:, idx], axis=0))
-        return paths, lengths
+        return (jnp.max(self.state.paths[:, idx, :], axis=0),
+                jnp.max(self.state.lengths[:, idx], axis=0))
 
     def walk_stats(self) -> WalkStats:
         """Engine counters summed across devices (supersteps/launches are

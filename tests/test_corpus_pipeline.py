@@ -1,0 +1,284 @@
+"""Device-resident walks→embeddings pipeline (`repro.core.corpus_ring` +
+`Walker.train_embeddings`): ring economy unit tests, batch-sampler
+determinism, kernel-gather parity, the zero-host-copy guard, overlap vs
+serial bit-identity, checkpoint/resume bit-identity, and the sharded
+backend parity smoke."""
+import glob
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+from repro import walker
+from repro.core import corpus_ring
+from repro.core import rng as task_rng
+from repro.models import embeddings as emb
+
+H = 10  # hop budget for the pipeline tests
+
+
+def _walker():
+    return walker.compile(walker.WalkProgram.urw(H))
+
+
+def _train_kw(**over):
+    kw = dict(seed=3, rounds=2, walks_per_round=16, steps_per_round=8,
+              batch_size=32, dim=8, window=3, num_negatives=4,
+              use_kernel=False)
+    kw.update(over)
+    return kw
+
+
+# --------------------------------------------------------------- ring unit
+
+def test_ring_init_and_validation():
+    ring = corpus_ring.init_ring(8, H + 1)
+    assert ring.capacity == 8 and ring.path_width == H + 1
+    assert int(ring.tail) == 0 and int(corpus_ring.filled(ring)) == 0
+    assert bool(jnp.all(ring.paths == -1))
+    with pytest.raises(ValueError):
+        corpus_ring.init_ring(0, H + 1)
+    with pytest.raises(ValueError):
+        corpus_ring.init_ring(8, 0)
+
+
+def test_ring_append_wraps_and_pads():
+    ring = corpus_ring.init_ring(4, 6)
+    p0 = jnp.arange(12, dtype=jnp.int32).reshape(3, 4)  # narrower rows
+    ring = corpus_ring.append(ring, p0, jnp.full((3,), 4, jnp.int32))
+    assert int(ring.tail) == 3 and int(corpus_ring.filled(ring)) == 3
+    # Narrow paths are right-padded with -1.
+    np.testing.assert_array_equal(np.asarray(ring.paths[0]),
+                                  [0, 1, 2, 3, -1, -1])
+    # Next append wraps: slots 3, 0 are overwritten, 1..2 survive.
+    p1 = jnp.full((2, 6), 7, jnp.int32)
+    ring = corpus_ring.append(ring, p1, jnp.full((2,), 6, jnp.int32))
+    assert int(ring.tail) == 5 and int(corpus_ring.filled(ring)) == 4
+    np.testing.assert_array_equal(np.asarray(ring.paths[3]), [7] * 6)
+    np.testing.assert_array_equal(np.asarray(ring.paths[0]), [7] * 6)
+    np.testing.assert_array_equal(np.asarray(ring.paths[1]),
+                                  [4, 5, 6, 7, -1, -1])
+
+
+def test_ring_append_rejects_oversize():
+    ring = corpus_ring.init_ring(4, 6)
+    with pytest.raises(ValueError, match="would overwrite"):
+        corpus_ring.append(ring, jnp.zeros((5, 6), jnp.int32),
+                           jnp.zeros((5,), jnp.int32))
+    with pytest.raises(ValueError, match="wide"):
+        corpus_ring.append(ring, jnp.zeros((2, 7), jnp.int32),
+                           jnp.zeros((2,), jnp.int32))
+
+
+# ----------------------------------------------------------- batch sampler
+
+def _filled_ring(nv=64, rows=16, width=H + 1, seed=0):
+    r = np.random.default_rng(seed)
+    paths = r.integers(0, nv, (rows, width), dtype=np.int32)
+    lengths = r.integers(2, width + 1, (rows,), dtype=np.int32)
+    for i in range(rows):
+        paths[i, lengths[i]:] = -1
+    ring = corpus_ring.init_ring(rows, width)
+    return corpus_ring.append(ring, jnp.asarray(paths),
+                              jnp.asarray(lengths))
+
+
+def test_batch_sampler_deterministic_and_bounded():
+    nv = 64
+    ring = _filled_ring(nv)
+    sample = corpus_ring.make_batch_sampler(nv, 48, window=3,
+                                            num_negatives=5)
+    key = task_rng.stream_key(9)
+    a = sample(ring, key, 4)
+    b = sample(ring, key, 4)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = sample(ring, key, 5)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, c)), "step must salt the draws"
+    centers, contexts, negatives, mask = (np.asarray(x) for x in a)
+    assert mask.any(), "a filled ring must yield some valid pairs"
+    for arr in (centers, contexts, negatives):
+        assert arr.min() >= 0 and arr.max() < nv
+
+
+def test_batch_sampler_empty_ring_masks_everything():
+    ring = corpus_ring.init_ring(8, H + 1)
+    sample = corpus_ring.make_batch_sampler(64, 16, window=2,
+                                            num_negatives=3)
+    *_, mask = sample(ring, task_rng.stream_key(0), 0)
+    assert not bool(np.asarray(mask).any())
+
+
+def test_sampler_validation():
+    with pytest.raises(ValueError):
+        corpus_ring.make_batch_sampler(64, 16, window=0, num_negatives=3)
+    with pytest.raises(ValueError):
+        corpus_ring.make_batch_sampler(64, 16, window=2, num_negatives=0)
+
+
+# ------------------------------------------------------- kernel gather path
+
+def test_gather_rows_kernel_parity():
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (128, 16), jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (32,), 0, 128)
+    ref = emb.gather_rows(table, ids, use_kernel=False)
+    ker = emb.gather_rows(table, ids, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+    def loss(t, use_kernel):
+        return jnp.sum(emb.gather_rows(t, ids, use_kernel=use_kernel) ** 2)
+
+    g_ref = jax.grad(lambda t: loss(t, False))(table)
+    g_ker = jax.grad(lambda t: loss(t, True))(table)
+    np.testing.assert_allclose(np.asarray(g_ref), np.asarray(g_ker),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_sgns_kernel_step_matches_jnp(small_graph):
+    w = _walker()
+    kw = _train_kw(rounds=1, steps_per_round=2)
+    ref = w.train_embeddings(small_graph, **kw)
+    kw["use_kernel"] = True
+    ker = w.train_embeddings(small_graph, **kw)
+    np.testing.assert_allclose(np.asarray(ref["params"]["in_embed"]),
+                               np.asarray(ker["params"]["in_embed"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------ host-copy accounting
+
+def test_overlap_mode_makes_zero_host_copies(small_graph):
+    w = _walker()
+    w.train_embeddings(small_graph, **_train_kw())  # warm the jit caches
+    before = corpus_ring.host_copies()
+    with corpus_ring.no_host_copies():
+        out = w.train_embeddings(small_graph, **_train_kw())
+    assert corpus_ring.host_copies() == before
+    assert out["step"] == 16
+
+
+def test_serial_mode_trips_the_guard(small_graph):
+    w = _walker()
+    with pytest.raises(RuntimeError, match="no_host_copies"):
+        with corpus_ring.no_host_copies():
+            w.train_embeddings(small_graph, **_train_kw(overlap=False))
+
+
+def test_serial_mode_counts_round_trips(small_graph):
+    w = _walker()
+    before = corpus_ring.host_copies()
+    w.train_embeddings(small_graph, **_train_kw(overlap=False))
+    # One path round-trip per round plus one batch staging per step.
+    assert corpus_ring.host_copies() - before == 2 + 2 * 8
+
+
+def test_harvest_ids_is_a_recorded_host_copy(small_graph):
+    w = _walker()
+    stream = w.stream(small_graph, capacity=8, seed=0)
+    qids, _ = stream.inject(np.arange(8))
+    stream.drain()
+    d_paths, d_lengths = stream.harvest_device(qids)
+    before = corpus_ring.host_copies()
+    h_paths, h_lengths = stream.harvest_ids(qids)
+    assert corpus_ring.host_copies() == before + 1
+    np.testing.assert_array_equal(h_paths, np.asarray(d_paths))
+    np.testing.assert_array_equal(h_lengths, np.asarray(d_lengths))
+    stream.release(qids)
+
+
+# ------------------------------------------------------------ bit-identity
+
+def test_overlap_and_serial_are_bit_identical(small_graph):
+    w = _walker()
+    over = w.train_embeddings(small_graph, **_train_kw(overlap=True))
+    ser = w.train_embeddings(small_graph, **_train_kw(overlap=False))
+    for k in ("in_embed", "out_embed"):
+        np.testing.assert_array_equal(np.asarray(over["params"][k]),
+                                      np.asarray(ser["params"][k]))
+    np.testing.assert_array_equal(np.asarray(over["ring"].paths),
+                                  np.asarray(ser["ring"].paths))
+
+
+def test_checkpoint_resume_is_bit_identical(small_graph, tmp_path):
+    w = _walker()
+    kw = _train_kw()
+
+    def record_into(log):
+        def hook(step, batch):
+            log.append((step, tuple(np.asarray(x) for x in batch)))
+        return hook
+
+    ref_log = []
+    ref = w.train_embeddings(small_graph, **kw,
+                             batch_hook=record_into(ref_log))
+
+    ckpt = str(tmp_path / "ckpt")
+    w.train_embeddings(small_graph, **kw, ckpt_dir=ckpt, ckpt_every=4)
+    # Simulate preemption after step 8: drop every later checkpoint.
+    kept = 0
+    for p in glob.glob(ckpt + "/step_*"):
+        if int(p.rsplit("_", 1)[1]) > 8:
+            shutil.rmtree(p)
+        else:
+            kept += 1
+    assert kept >= 1
+    res_log = []
+    res = w.train_embeddings(small_graph, **kw, ckpt_dir=ckpt,
+                             ckpt_every=4, batch_hook=record_into(res_log))
+
+    assert res["step"] == ref["step"] == 16
+    # The resumed run replays exactly steps 8..15 with the reference's
+    # batch stream, and lands on bit-identical tables.
+    tail = {s: b for s, b in ref_log if s >= 8}
+    assert [s for s, _ in res_log] == sorted(tail)
+    for s, batch in res_log:
+        for x, y in zip(batch, tail[s]):
+            np.testing.assert_array_equal(x, y)
+    for k in ("in_embed", "out_embed"):
+        np.testing.assert_array_equal(np.asarray(res["params"][k]),
+                                      np.asarray(ref["params"][k]))
+
+
+def test_seek_epochs_validation(small_graph):
+    w = _walker()
+    stream = w.stream(small_graph, capacity=8, seed=0)
+    stream.seek_epochs(3)
+    with pytest.raises(ValueError):
+        stream.seek_epochs(1)  # epochs are monotone
+    qids, _ = stream.inject(np.arange(4))
+    with pytest.raises(RuntimeError, match="live"):
+        stream.seek_epochs(5)
+    stream.drain()
+    stream.harvest_device(qids)
+    stream.release(qids)
+
+
+# -------------------------------------------------------- sharded backend
+
+@pytest.mark.slow
+def test_sharded_training_matches_single():
+    run_in_subprocess("""
+import numpy as np
+from repro import walker
+from repro.graph import make_dataset
+
+g = make_dataset("WG", scale_override=9)
+kw = dict(seed=3, rounds=2, walks_per_round=16, steps_per_round=6,
+          batch_size=32, dim=8, window=3, num_negatives=4,
+          use_kernel=False)
+single = walker.compile(walker.WalkProgram.urw(10))
+sharded = walker.compile(walker.WalkProgram.urw(10),
+                         backend="sharded")
+a = single.train_embeddings(g, **kw)
+b = sharded.train_embeddings(g, **kw)
+np.testing.assert_array_equal(np.asarray(a["params"]["in_embed"]),
+                              np.asarray(b["params"]["in_embed"]))
+np.testing.assert_array_equal(np.asarray(a["ring"].paths),
+                              np.asarray(b["ring"].paths))
+print("OK")
+""", devices=2, timeout=600)
