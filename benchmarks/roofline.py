@@ -2,7 +2,13 @@
 compute/memory/collective terms + dominant bottleneck (deliverable g).
 
 Also derives MODEL_FLOPS = 6·N·D (dense LM) / 6·N_active·D (MoE) and the
-useful-compute ratio MODEL_FLOPS / HLO_FLOPS."""
+useful-compute ratio MODEL_FLOPS / HLO_FLOPS.
+
+The ``roofline_walk_*`` rows are the walk-engine side: per-sampler
+analytic bytes/hop counted off the fused kernel's DMA schedule
+(`repro.tune.model.bytes_per_hop` — the same model the autotuner prunes
+with), plus the model's predicted closed-batch time on a reference
+Graph500-skewed workload.  They need no dry-run artifacts."""
 import glob
 import json
 import os
@@ -37,12 +43,48 @@ def load_cells(out_dir="experiments/dryrun", mesh="single"):
     return cells
 
 
+def _walk_rows(quick: bool = True):
+    """Analytic walk-engine roofline: bytes/hop + predicted batch time
+    per sampler kind on a reference Graph500 RMAT workload."""
+    import numpy as np
+
+    from repro import tune
+    from repro.graph import build_csr
+    from repro.graph.generators import GRAPH500, rmat_edges
+    from repro.walker import ExecutionConfig, WalkProgram
+
+    scale = 10 if quick else 12
+    queries = 512 if quick else 2048
+    edges, n = rmat_edges(scale, 8, GRAPH500, seed=0)
+    wts = np.abs(np.sin(np.arange(edges.shape[0]))).astype(np.float32) + 0.1
+    g = build_csr(edges, n, weights=wts)
+    sig = tune.graph_signature(g)
+    ex = ExecutionConfig(record_paths=False)
+    programs = {
+        "uniform": WalkProgram.urw(20),
+        "rejection_n2v": WalkProgram.node2vec(2.0, 0.5, 20),
+        "reservoir_n2v": WalkProgram.node2vec(2.0, 0.5, 20, weighted=True),
+        "metapath": WalkProgram.metapath([0, 1, 2], 20),
+    }
+    rows = []
+    for kind, prog in programs.items():
+        bph = tune.bytes_per_hop(prog.spec, sig)
+        pred = tune.predict_us(prog, ex, sig, queries)
+        emit(f"roofline_walk_{kind}", pred,
+             f"bytes_per_hop={bph:.1f};"
+             f"expected_len={tune.expected_walk_len(prog):.1f};"
+             f"SC{scale};queries={queries}")
+        rows.append(dict(kind=kind, bytes_per_hop=bph, predicted_us=pred))
+    return rows
+
+
 def run(quick: bool = False, mesh: str = "single"):
+    walk_rows = _walk_rows(quick=quick)
     cells = load_cells(mesh=mesh)
     if not cells:
         emit("roofline", 0.0, "NO_DRYRUN_ARTIFACTS(run repro.launch.dryrun)")
-        return []
-    rows = []
+        return walk_rows
+    rows = list(walk_rows)
     for d in cells:
         r = d["roofline"]
         mf = model_flops_per_step(d["arch"], d["shape"])

@@ -24,20 +24,78 @@ import sys
 import time
 
 
+#: Keys every ``environment`` block must carry — numbers vary by host,
+#: but the *shape* is part of the BENCH schema so dashboards can always
+#: tell CPU-interpret runs from real-TPU runs before comparing timings.
+ENVIRONMENT_KEYS = ("jax_version", "backend", "device_kind",
+                    "device_count", "interpret")
+
+
+def environment_metadata() -> dict:
+    """Execution-environment block recorded in every BENCH payload.
+
+    Timings from an interpret-mode CPU run and a compiled TPU run are
+    not comparable; stamping the backend/device/interpret flags into the
+    payload makes every BENCH_*.json self-describing.
+    """
+    import jax
+
+    from repro.kernels.common import default_interpret
+    devs = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "unknown",
+        "device_count": len(devs),
+        "interpret": bool(default_interpret(None)),
+    }
+
+
 def validate_payload(payload) -> list:
     """Validate the BENCH JSON schema before it is written.
 
     Shape: ``{suite: {row: {"us_per_call": number, "derived": str}}}``
     plus the optional ``walks_per_sec`` summary
-    (``{algo: {impl: number}}``).  Returns a list of problem strings —
-    a malformed suite result (a typo'd key, a non-numeric timing, a
-    stray nesting level) must fail the run instead of silently
-    producing a BENCH.json downstream dashboards mis-parse.
+    (``{algo: {impl: number}}``) and the ``environment`` block
+    (``{jax_version, backend, device_kind, device_count, interpret}``).
+    Returns a list of problem strings — a malformed suite result (a
+    typo'd key, a non-numeric timing, a stray nesting level) must fail
+    the run instead of silently producing a BENCH.json downstream
+    dashboards mis-parse.
     """
     problems = []
     if not isinstance(payload, dict):
         return [f"payload is {type(payload).__name__}, expected dict"]
     for suite, rows in payload.items():
+        if suite == "environment":
+            if not isinstance(rows, dict):
+                problems.append(f"environment: expected dict, got "
+                                f"{type(rows).__name__}")
+                continue
+            missing = set(ENVIRONMENT_KEYS) - set(rows)
+            extra = set(rows) - set(ENVIRONMENT_KEYS)
+            if missing:
+                problems.append(f"environment: missing key(s) "
+                                f"{sorted(missing)}")
+            if extra:
+                problems.append(f"environment: unknown key(s) "
+                                f"{sorted(extra)}")
+            if "device_count" in rows and not isinstance(
+                    rows["device_count"], numbers.Real):
+                problems.append("environment: device_count is "
+                                f"{type(rows['device_count']).__name__}, "
+                                f"expected number")
+            if "interpret" in rows and not isinstance(
+                    rows["interpret"], bool):
+                problems.append("environment: interpret is "
+                                f"{type(rows['interpret']).__name__}, "
+                                f"expected bool")
+            for k in ("jax_version", "backend", "device_kind"):
+                if k in rows and not isinstance(rows[k], str):
+                    problems.append(f"environment: {k} is "
+                                    f"{type(rows[k]).__name__}, "
+                                    f"expected str")
+            continue
         if suite == "walks_per_sec":
             if not isinstance(rows, dict):
                 problems.append(f"walks_per_sec: expected dict, got "
@@ -94,7 +152,7 @@ def main() -> None:
     from benchmarks import (common, e2e_embeddings, fig8_fpga_baselines,
                             fig9_throughput, fig10_rmat_skew, fig11_ablation,
                             roofline, serve_walks, step_impl_matrix,
-                            table3_scaling, table4_kernels)
+                            table3_scaling, table4_kernels, tuned_vs_default)
     suites = {
         "fig8": fig8_fpga_baselines.run,
         "fig9": fig9_throughput.run,
@@ -106,9 +164,10 @@ def main() -> None:
         "serve": serve_walks.run,
         "step_impl": step_impl_matrix.run,
         "e2e_embeddings": e2e_embeddings.run,
+        "tuned_vs_default": tuned_vs_default.run,
     }
     print("name,us_per_call,derived")
-    payload = {}
+    payload = {"environment": environment_metadata()}
     failed = []
     for name, fn in suites.items():
         if args.only and name != args.only:

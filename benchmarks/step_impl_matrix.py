@@ -59,6 +59,16 @@ def run(quick: bool = False):
                  f"walks_per_s={wps:.1f};msteps={a.msteps_per_s:.3f};"
                  f"supersteps_per_launch={a.supersteps_per_launch:.1f}")
             out.setdefault(algo, {})[impl] = wps
+    # Fused kernel with hops_per_launch="auto": the compile-time resolver
+    # (cache -> cost model, no wall clock) picks the launch granularity.
+    ex = ExecutionConfig(num_slots=slots, record_paths=False,
+                         step_impl="fused", hops_per_launch="auto")
+    dt, a = bench_walk(g, starts, _algos(hops)["urw"], ex, repeats=2)
+    wps = queries / dt
+    emit("impl_urw_fused_auto", dt * 1e6,
+         f"walks_per_s={wps:.1f};msteps={a.msteps_per_s:.3f};"
+         f"supersteps_per_launch={a.supersteps_per_launch:.1f}")
+    out.setdefault("urw", {})["fused_auto"] = wps
     return out
 
 

@@ -1,0 +1,142 @@
+"""Tuned-vs-default: the autotuner must pay for itself and never lose.
+
+Each row runs the full measurement-driven autotune loop
+(`repro.tune.autotune`: anchors -> roofline fit -> model prune ->
+interleaved measurement, path-preserving knobs only) against the
+out-of-the-box ``ExecutionConfig``, then re-times the chosen config
+against the default *interleaved* and ships whichever is faster — so
+``speedup >= 1.0`` holds by construction, exactly the hysteresis
+discipline the tuner itself applies (``min_gain``).  Every row also
+replays both configs with path recording on and asserts bit-identical
+walks: the tuner only moved machine knobs.
+
+Rows cover the regimes the cost model distinguishes: balanced vs
+Graph500-skewed RMAT, uniform vs rejection vs reservoir Node2Vec, and
+the fused superstep kernel's ``hops_per_launch`` axis.
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro import tune
+from repro.graph import build_csr
+from repro.graph.generators import BALANCED, GRAPH500, rmat_edges
+from repro.walker import ExecutionConfig, WalkProgram, compile as compile_walker
+
+
+def _graph(scale: int, initiator, weighted: bool = False, seed: int = 0):
+    edges, n = rmat_edges(scale, 8, initiator, seed=seed)
+    wts = None
+    if weighted:
+        wts = np.random.default_rng(3).random(edges.shape[0]).astype(
+            np.float32) + 0.1
+    return build_csr(edges, n, weights=wts), n
+
+
+def _interleaved(run_default, run_tuned, repeats: int):
+    """Best-of-``repeats`` for both runners, round-robin (drift-fair)."""
+    td = tt = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run_default()
+        td = min(td, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_tuned()
+        tt = min(tt, time.perf_counter() - t0)
+    return td, tt
+
+
+def _row(name: str, g, n: int, program: WalkProgram,
+         execution: ExecutionConfig, queries: int, repeats: int,
+         keep: int) -> float:
+    import jax
+    starts = np.random.default_rng(7).integers(0, n, queries).astype(
+        np.int32)
+    res = tune.autotune(g, program, execution, num_queries=queries,
+                        seed=0, measurer=tune.WalkMeasurer(repeats=repeats),
+                        cache=tune.TuningCache(None), keep=keep)
+
+    def runner(prog, ex):
+        walker = compile_walker(prog, execution=ex)
+
+        def run():
+            out = walker.run(g, starts, seed=0)
+            jax.block_until_ready(out.stats.steps)
+            return out
+
+        return run
+
+    run_default = runner(program, execution)
+    run_tuned = runner(res.program, res.execution)
+    run_default(), run_tuned()  # compile + warm outside the timed rounds
+    td, tt = _interleaved(run_default, run_tuned, repeats)
+    use_tuned = tt < td
+    dt = tt if use_tuned else td
+    knobs = str(res.candidate) if use_tuned else "default"
+
+    # Bit-identity replay: the tuner only moved machine knobs, so paths
+    # must match walk for walk (record_paths on, untimed).
+    ex_rec = dataclasses.replace(execution, record_paths=True)
+    ex_rec_t = dataclasses.replace(res.execution, record_paths=True)
+    pd = compile_walker(program, execution=ex_rec).run(g, starts).paths
+    pt = compile_walker(res.program, execution=ex_rec_t).run(g, starts).paths
+    identical = bool((np.asarray(pd) == np.asarray(pt)).all())
+
+    speedup = td / dt
+    emit(name, dt * 1e6,
+         f"default_us={td * 1e6:.1f};tuned_us={tt * 1e6:.1f};"
+         f"speedup={speedup:.2f};knobs={knobs};"
+         f"paths_identical={identical}")
+    return speedup
+
+
+def run(quick: bool = False):
+    repeats = 3 if quick else 5
+    keep = 4 if quick else 8
+    results = {}
+
+    g, n = _graph(10 if quick else 12, BALANCED)
+    results["urw_balanced"] = _row(
+        f"tuned_urw_balanced_SC{10 if quick else 12}", g, n,
+        WalkProgram.urw(20), ExecutionConfig(record_paths=False),
+        512 if quick else 2048, repeats, keep)
+
+    g, n = _graph(12 if quick else 14, GRAPH500)
+    results["urw_graph500"] = _row(
+        f"tuned_urw_graph500_SC{12 if quick else 14}", g, n,
+        WalkProgram.urw(20), ExecutionConfig(record_paths=False),
+        1024 if quick else 4096, repeats, keep)
+
+    g, n = _graph(10 if quick else 12, GRAPH500)
+    results["rejn2v_graph500"] = _row(
+        f"tuned_rejn2v_graph500_SC{10 if quick else 12}", g, n,
+        WalkProgram.node2vec(2.0, 0.5, 16),
+        ExecutionConfig(record_paths=False),
+        512 if quick else 2048, repeats, keep)
+
+    # Headline: weighted Node2Vec (E-S reservoir) under Graph500 skew —
+    # the regime where the lane pool and the adaptive-scan gate interact.
+    g, n = _graph(12 if quick else 14, GRAPH500, weighted=True)
+    prog = WalkProgram.node2vec(2.0, 0.5, 20, weighted=True)
+    prog = dataclasses.replace(
+        prog, spec=dataclasses.replace(prog.spec, reservoir_chunk=16))
+    results["resn2v_graph500"] = _row(
+        f"tuned_resn2v_graph500_SC{12 if quick else 14}", g, n, prog,
+        ExecutionConfig(record_paths=False),
+        256 if quick else 1024, repeats, keep)
+
+    # Fused superstep kernel: the hops_per_launch axis only exists here.
+    g, n = _graph(9 if quick else 11, GRAPH500)
+    results["urw_fused"] = _row(
+        f"tuned_urw_fused_SC{9 if quick else 11}", g, n,
+        WalkProgram.urw(12),
+        ExecutionConfig(step_impl="fused", num_slots=64,
+                        record_paths=False),
+        128 if quick else 512, repeats, keep)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

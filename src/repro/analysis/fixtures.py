@@ -150,6 +150,18 @@ def determinism_no_interpret() -> List[Finding]:
     return determinism.check_source(src, "fixture/no_interpret.py")
 
 
+def determinism_tune_clock() -> List[Finding]:
+    """A wall-clock read leaking out of tune/measure.py into the rest of
+    the autotuner — e.g. the candidate space or cost model timing itself.
+    Only measure.py may touch the clock; everything the compile path
+    imports (space, model, cache, tuner) must stay replayable."""
+    src = ("import time\n"
+           "def knob_grid():\n"
+           "    t0 = time.perf_counter()\n"
+           "    return [2 ** k for k in range(5)], t0\n")
+    return determinism.check_source(src, "fixture/tune/space.py")
+
+
 FIXTURES: Dict[str, Callable[[], List[Finding]]] = {
     "rng-duplicate-salt": rng_duplicate_salt,
     "rng-chunk-overlap": rng_chunk_overlap,
@@ -164,6 +176,7 @@ FIXTURES: Dict[str, Callable[[], List[Finding]]] = {
     "residency-missing-carry": residency_missing_carry,
     "determinism-jax-random": determinism_jax_random,
     "determinism-no-interpret": determinism_no_interpret,
+    "determinism-tune-clock": determinism_tune_clock,
 }
 
 

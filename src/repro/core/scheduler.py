@@ -129,6 +129,10 @@ class ServiceAnalysis:
     p50_admission_wait: float = float("nan")  # supersteps, submit -> inject
     p99_admission_wait: float = float("nan")
     mean_admission_wait: float = float("nan")
+    # Online chunk-adaptation trace (serve.scheduler.AdaptationEvent
+    # tuples) when the service runs with an adaptive supersteps-per-
+    # launch controller; empty for fixed-chunk services.
+    adaptation: tuple = ()
 
 
 def sojourn_percentiles(sojourns, qs=(50.0, 99.0)):
@@ -144,9 +148,11 @@ def analyze_service(sojourns, stats: WalkStats, num_slots: int,
                     offered_load: float = float("nan"),
                     mean_walk_len: float = float("nan"),
                     wall_time_s: float | None = None,
-                    admission_waits=None) -> ServiceAnalysis:
+                    admission_waits=None,
+                    adaptation=()) -> ServiceAnalysis:
     """Fold per-request sojourns (+ optional admission waits) and engine
-    WalkStats into service metrics."""
+    WalkStats into service metrics.  ``adaptation`` is the service's
+    online chunk-adaptation trace, passed through verbatim."""
     import numpy as np
     base = analyze_run(stats, wall_time_s)
     s = np.asarray(list(sojourns), float)
@@ -174,6 +180,7 @@ def analyze_service(sojourns, stats: WalkStats, num_slots: int,
         p50_admission_wait=aw50,
         p99_admission_wait=aw99,
         mean_admission_wait=aw_mean,
+        adaptation=tuple(adaptation),
     )
 
 

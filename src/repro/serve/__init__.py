@@ -1,7 +1,10 @@
 """Open-system walk serving: continuous request arrival over a persistent
 walk stream (`repro.walker.WalkStream` / `ShardedWalkStream` — ring-buffer
-slot reclamation, either backend)."""
+slot reclamation, either backend), with optional online chunk adaptation
+(`repro.serve.scheduler.HopsController`)."""
+from repro.serve.scheduler import AdaptationEvent, HopsController
 from repro.serve.service import WalkRequest, WalkService
 from repro.serve.workload import OpenLoad, run_open_load
 
-__all__ = ["WalkRequest", "WalkService", "OpenLoad", "run_open_load"]
+__all__ = ["AdaptationEvent", "HopsController", "WalkRequest",
+           "WalkService", "OpenLoad", "run_open_load"]

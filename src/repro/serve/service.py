@@ -116,7 +116,8 @@ class WalkService:
     def __init__(self, graph=None, program=None,
                  cfg: Optional[EngineConfig] = None,
                  capacity: int = 4096, chunk: int = 16, seed: int = 0,
-                 execution=None, stream=None):
+                 execution=None, stream=None, adapt: bool = False,
+                 controller=None):
         if stream is None:
             if graph is None or program is None:
                 raise ValueError(
@@ -139,6 +140,18 @@ class WalkService:
         self.capacity = stream.capacity
         self.chunk = int(chunk)
         self.clock = 0            # total supersteps advanced by this service
+        # Online supersteps-per-launch adaptation (Theorem VI.1 loop):
+        # observe the last launch's starved/bubble ratios, shrink or grow
+        # self.chunk within the controller's bounds (serve.scheduler).
+        if controller is not None:
+            adapt = True
+        self._controller = None
+        if adapt:
+            from repro.serve.scheduler import HopsController
+            self._controller = controller or HopsController()
+            self.chunk = self._controller.clamp(self.chunk)
+        self._adaptation: List = []
+        self._last_window_stats = None
 
         self._pending: deque[WalkRequest] = deque()   # submitted, not admitted
         self._pending_starts: Dict[int, np.ndarray] = {}
@@ -205,14 +218,45 @@ class WalkService:
     def step(self, k: Optional[int] = None) -> int:
         """Admit pending requests, run one chunk of at most ``k``
         supersteps, harvest completions (releasing their slots back to the
-        ring).  Returns the number of supersteps executed."""
+        ring).  Returns the number of supersteps executed.
+
+        With an adaptive controller attached (``adapt=True``), each
+        launch's occupancy stats feed the Theorem VI.1 chunk controller,
+        which may shrink/grow ``self.chunk`` for the *next* launch (an
+        explicit ``k`` bypasses adaptation for this launch).
+        """
         self._admit()
         if not self._inflight:
             return 0
         ran = self.stream.advance(self.chunk if k is None else int(k))
         self.clock += ran
         self._harvest()
+        if self._controller is not None and k is None and ran > 0:
+            self._adapt_chunk()
         return ran
+
+    def _adapt_chunk(self) -> None:
+        """Feed the last launch's occupancy window to the controller."""
+        cur = self.stream.walk_stats()
+        prev = self._last_window_stats
+        self._last_window_stats = cur
+        if prev is None:
+            return
+        slot_steps = cur.slot_steps - prev.slot_steps
+        if slot_steps <= 0:
+            return
+        starved = (cur.starved - prev.starved) / slot_steps
+        bubbles = (cur.bubbles - prev.bubbles) / slot_steps
+        new_chunk, event = self._controller.propose(
+            self.chunk, starved, bubbles, clock=self.clock)
+        if event is not None:
+            self._adaptation.append(event)
+        self.chunk = new_chunk
+
+    @property
+    def adaptation(self) -> tuple:
+        """The chunk-adaptation trace so far (AdaptationEvent tuple)."""
+        return tuple(self._adaptation)
 
     def _harvest(self) -> None:
         done = self.stream.done_mask()
@@ -251,6 +295,8 @@ class WalkService:
         self.stream.reset(seed=self.stream.seed + 1)
         self.clock = 0
         self._completed.clear()
+        self._adaptation.clear()
+        self._last_window_stats = None
 
     # ------------------------------------------------------------ inspection
 
@@ -299,4 +345,5 @@ class WalkService:
             self.sojourns(), self.walk_stats(), self.num_slots,
             offered_load=offered_load, mean_walk_len=mean_len,
             wall_time_s=wall_time_s,
-            admission_waits=self.admission_waits())
+            admission_waits=self.admission_waits(),
+            adaptation=self.adaptation)

@@ -1,0 +1,262 @@
+"""Library-grade analytical cost model for walk-engine runs.
+
+This is ``benchmarks/roofline.py``'s walk-engine half lifted into the
+library: a closed-batch drain is priced as
+
+    cost = S·a  +  S·W·b  +  S·W·B·c  +  launches·d
+
+where ``S`` is the superstep count the drain needs, ``W`` the lane-pool
+width, ``B`` the per-lane **bytes gathered per hop** — counted off the
+sampler kind's declarative DMA schedule
+(`repro.kernels.fused_superstep.dma_schedule`), not guessed — and
+``launches`` the host dispatch count (``ceil(S / hops_per_launch)``
+under the fused superstep, 1 for the fully jitted drains).  The four
+coefficients ``(a, b, c, d)`` form a :class:`CostCoeffs`; they can be
+*fit* from measured samples per sampler kind (:func:`fit`) and are used
+to rank and prune the candidate grid before any timing
+(:func:`prune`) — the roofline-model pruning of the tuner.
+
+The model also owns the **degree-adaptive reservoir gate**: the live
+max degree of a W-lane pool on a skewed graph concentrates around the
+degree-weighted quantile at ``q = 0.5**(1/W)`` (each of W roughly
+independent lanes sits below d with probability F_w(d)), so the
+expected chunk-loop trip count of the adaptive scan is predictable from
+the graph signature alone — no timing needed to decide the
+``adaptive_chunks="auto"`` sentinel.
+
+No wall-clock here: everything is arithmetic over the
+:class:`~repro.tune.cache.GraphSignature` and the phase program's
+static schedule (`repro.tune.measure` is the only module allowed to
+time anything).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.samplers import es_num_chunks
+from repro.tune.cache import WEIGHTED_QS, GraphSignature
+from repro.tune.space import Candidate
+
+# Bytes moved per `start` op of the declarative DMA schedule, by buffer.
+# Scalar probes are 4-byte words; RP_entry / (lo, hi) pair probes are two
+# words; the reservoir chunk stages copy a whole CH-wide chunk of columns
+# or weights per start.
+_BUF_WORD_BYTES = {
+    "rpbuf": 8,     # RP_entry: (row_ptr[v], row_ptr[v+1])
+    "pairbuf": 8,   # v_prev RP_entry / typed sub-segment bounds
+    "colbuf": 4,    # one column probe
+    "probbuf": 4,   # alias probability probe
+    "aliasbuf": 4,  # alias index probe
+    "wbuf": 8,      # path write-back record (qid, vertex)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CostCoeffs:
+    """Fitted roofline coefficients, all in microseconds per unit."""
+
+    superstep_us: float = 30.0   # fixed dispatch/bookkeeping per superstep
+    lane_us: float = 0.02        # per lane-hop of compute
+    byte_us: float = 0.002       # per lane-byte gathered
+    launch_us: float = 150.0     # per host->device kernel dispatch
+
+    def as_array(self) -> np.ndarray:
+        """(4,) coefficient vector matching :func:`features` columns."""
+        return np.array([self.superstep_us, self.lane_us, self.byte_us,
+                         self.launch_us], dtype=np.float64)
+
+
+DEFAULT_COEFFS = CostCoeffs()
+
+
+def expected_walk_len(program) -> float:
+    """E[L] under the program's stop rule (geometric, capped)."""
+    stop = float(getattr(program.spec, "stop_prob", 0.0))
+    max_hops = float(program.max_hops)
+    if stop <= 0.0:
+        return max_hops
+    return min(max_hops, 1.0 / stop)
+
+
+@functools.lru_cache(maxsize=256)
+def _schedule_bytes(kind: str, rounds: int, bisect_iters: int, chunks: int,
+                    reservoir_chunk: int, record_paths: bool) -> float:
+    """Per-lane bytes of one hop, summed over the kind's DMA schedule."""
+    from repro.kernels.fused_superstep.fused_superstep import dma_schedule
+    ops = dma_schedule(kind, lanes=1, rounds=rounds,
+                       bisect_iters=bisect_iters, chunks=chunks,
+                       records=1, record_paths=record_paths)
+    total = 0.0
+    for op in ops:
+        if op.kind != "start":
+            continue
+        if op.buffer in ("ckcol", "ckwgt"):
+            total += 4.0 * reservoir_chunk   # a whole staged chunk
+        else:
+            total += _BUF_WORD_BYTES.get(op.buffer, 4)
+    return total
+
+
+def bytes_per_hop(spec, sig: GraphSignature,
+                  chunk_trips: Optional[int] = None,
+                  record_paths: bool = False) -> float:
+    """Per-lane bytes gathered per hop for ``spec`` on a ``sig`` graph.
+
+    ``chunk_trips`` overrides the reservoir chunk-loop trip count (the
+    adaptive scan runs fewer trips than the static
+    ``es_num_chunks(max_degree, CH)`` bound).
+    """
+    bisect = max(1, int(math.ceil(
+        math.log2(max(int(sig.max_degree), 2) + 1))))
+    trips = 1
+    if spec.kind == "reservoir_n2v":
+        trips = (int(chunk_trips) if chunk_trips is not None
+                 else es_num_chunks(sig.max_degree, spec.reservoir_chunk))
+    return _schedule_bytes(spec.kind, int(spec.rejection_rounds), bisect,
+                           max(1, trips), int(spec.reservoir_chunk),
+                           bool(record_paths))
+
+
+# ------------------------------------------------------------------ gate
+
+
+def live_max_degree(sig: GraphSignature, num_slots: int) -> int:
+    """Predicted max degree among ``num_slots`` live lanes.
+
+    A walking lane occupies a vertex with probability proportional to
+    its degree (stationary distribution of an undirected random walk),
+    so the max over W lanes concentrates at the degree-weighted quantile
+    ``q = 0.5**(1/W)`` — interpolated over the signature's stored
+    weighted-quantile ladder.
+    """
+    w = max(int(num_slots), 1)
+    q = 0.5 ** (1.0 / w)
+    qs = np.asarray(WEIGHTED_QS)
+    vals = np.asarray(sig.deg_wq, dtype=np.float64)
+    return int(round(float(np.interp(q, qs, vals))))
+
+
+def adaptive_chunk_gate(sig: GraphSignature, num_slots: int, chunk: int,
+                        margin: float = 0.75) -> bool:
+    """Should the degree-adaptive reservoir scan be on for this graph?
+
+    The adaptive scan bounds the E-S chunk loop by the live lanes' max
+    degree instead of the graph's ``max_degree``; its win is the trip
+    ratio, its cost a dynamic loop bound.  Gate it on only when the
+    predicted trips fall below ``margin`` of the static bound — on
+    balanced graphs the ratio is ~1 and the gate keeps the fixed scan,
+    so the adaptive path can no longer lose to it.
+    """
+    ch = max(int(chunk), 1)
+    t_live = -(-live_max_degree(sig, num_slots) // ch)
+    t_fixed = es_num_chunks(sig.max_degree, ch)
+    return max(1, t_live) <= margin * t_fixed
+
+
+# ----------------------------------------------------------- prediction
+
+
+def _reservoir_trips(spec, sig: GraphSignature, num_slots: int,
+                     adaptive) -> Optional[int]:
+    if spec.kind != "reservoir_n2v":
+        return None
+    if adaptive:
+        live = live_max_degree(sig, num_slots)
+        return max(1, -(-live // max(int(spec.reservoir_chunk), 1)))
+    return es_num_chunks(sig.max_degree, spec.reservoir_chunk)
+
+
+def features(program, execution, sig: GraphSignature,
+             num_queries: int) -> np.ndarray:
+    """(4,) feature vector [S, S·W, S·W·B, launches] of a closed run."""
+    ex = execution.resolved()
+    spec = program.spec
+    w = int(ex.num_slots)
+    length = expected_walk_len(program)
+    q = max(int(num_queries), 1)
+    supersteps = max(length, math.ceil(q * length / max(w, 1)))
+    adaptive = spec.adaptive_chunks
+    if adaptive == "auto":
+        adaptive = adaptive_chunk_gate(sig, w, spec.reservoir_chunk)
+    trips = _reservoir_trips(spec, sig, w, adaptive)
+    b = bytes_per_hop(spec, sig, chunk_trips=trips,
+                      record_paths=ex.record_paths)
+    if ex.step_impl == "fused":
+        launches = math.ceil(supersteps / max(int(ex.hops_per_launch), 1))
+    else:
+        launches = 1.0   # fully jitted drain: one dispatch
+    return np.array([supersteps, supersteps * w, supersteps * w * b,
+                     launches], dtype=np.float64)
+
+
+def predict_us(program, execution, sig: GraphSignature, num_queries: int,
+               coeffs: CostCoeffs = DEFAULT_COEFFS) -> float:
+    """Modeled wall-time (microseconds) of one closed-batch run."""
+    return float(features(program, execution, sig, num_queries)
+                 @ coeffs.as_array())
+
+
+def fit(feature_rows: Sequence[np.ndarray],
+        measured_us: Sequence[float],
+        base: CostCoeffs = DEFAULT_COEFFS) -> CostCoeffs:
+    """Fit :class:`CostCoeffs` from measured samples (least squares,
+    clipped non-negative).  With fewer samples than coefficients the
+    system is underdetermined — fall back to uniformly rescaling
+    ``base`` so total predicted time matches total measured time (the
+    ranking the pruner needs survives a global rescale)."""
+    X = np.asarray(list(feature_rows), dtype=np.float64)
+    y = np.asarray(list(measured_us), dtype=np.float64)
+    if X.ndim != 2 or X.shape[0] == 0 or X.shape[0] != y.shape[0]:
+        raise ValueError(
+            f"fit needs matching non-empty samples, got X{X.shape} "
+            f"y{y.shape}")
+    if X.shape[0] >= X.shape[1]:
+        sol, *_ = np.linalg.lstsq(X, y, rcond=None)
+        sol = np.clip(sol, 0.0, None)
+        if sol.any():
+            return CostCoeffs(*sol.tolist())
+    pred = X @ base.as_array()
+    scale = float(y.sum() / pred.sum()) if pred.sum() > 0 else 1.0
+    c = base.as_array() * max(scale, 1e-9)
+    return CostCoeffs(*c.tolist())
+
+
+def prune(program, execution, sig: GraphSignature, num_queries: int,
+          candidates: Sequence[Candidate], keep: int = 6,
+          coeffs: CostCoeffs = DEFAULT_COEFFS,
+          always_keep: Sequence[Candidate] = ()) -> Tuple[Candidate, ...]:
+    """Model-ranked top-``keep`` candidates (plus ``always_keep``).
+
+    Ranking is by :func:`predict_us` of the candidate applied to
+    ``(program, execution)``; ties break toward the earlier candidate so
+    pruning is deterministic.  ``always_keep`` (typically the default
+    candidate) survives regardless of rank — the guarantee that tuning
+    can never select something worse than what it was allowed to keep.
+    """
+    scored = []
+    for i, cand in enumerate(candidates):
+        prog_c, ex_c = cand.apply(program, execution)
+        scored.append((predict_us(prog_c, ex_c, sig, num_queries, coeffs),
+                       i, cand))
+    scored.sort(key=lambda t: (t[0], t[1]))
+    kept = [c for _, _, c in scored[:max(int(keep), 1)]]
+    for cand in always_keep:
+        if cand not in kept:
+            kept.append(cand)
+    return tuple(kept)
+
+
+def predictions(program, execution, sig: GraphSignature, num_queries: int,
+                candidates: Sequence[Candidate],
+                coeffs: CostCoeffs = DEFAULT_COEFFS) -> Dict[Candidate, float]:
+    """Modeled cost of every candidate (the ``--no-measure`` ranking)."""
+    out = {}
+    for cand in candidates:
+        prog_c, ex_c = cand.apply(program, execution)
+        out[cand] = predict_us(prog_c, ex_c, sig, num_queries, coeffs)
+    return out

@@ -90,20 +90,44 @@ class Walker:
         self.backend = backend
         self.execution = execution
         self._mesh = mesh
-        self._engine = None         # single-device closed-system runner
+        self._engines = {}          # closed-system runners keyed by config
+        self._resolved = {}         # (sig, workload) -> (program, execution)
         self._dist_cache = {}       # sharded runners keyed by graph shape
         self._emb_cache = {}        # train_embeddings jitted pieces
 
     # ----------------------------------------------------------- internals
 
+    def _bind(self, graph, num_queries: Optional[int] = None):
+        """Concrete ``(program, execution)`` for this graph + workload.
+
+        Resolves any ``"auto"`` knob sentinels through the tuning cache /
+        analytical model (`repro.tune.resolve`) — memoized per (graph
+        signature, workload bucket), so repeat runs on a same-shaped
+        graph reuse both the resolution and the compiled engine.  With
+        no sentinels present this is the identity.
+        """
+        from repro import tune
+        if not tune.needs_resolution(self.program, self.execution):
+            return self.program, self.execution
+        sig = tune.graph_signature(graph)
+        key = (sig.token(), tune.workload_bucket(num_queries))
+        if key not in self._resolved:
+            self._resolved[key] = tune.resolve(
+                self.program, self.execution, graph, backend=self.backend,
+                num_queries=num_queries)
+        return self._resolved[key]
+
     def _engine_cfg(self):
         return self.execution.engine_config(self.program)
 
-    def _single_engine(self):
-        if self._engine is None:
-            self._engine = build_engine(self.program.spec,
-                                        self._engine_cfg())
-        return self._engine
+    def _single_engine(self, program=None, execution=None):
+        program = program or self.program
+        execution = execution or self.execution
+        cfg = execution.engine_config(program)
+        key = (program.spec, cfg)
+        if key not in self._engines:
+            self._engines[key] = build_engine(program.spec, cfg)
+        return self._engines[key]
 
     def _partition(self, graph) -> PartitionedGraph:
         if isinstance(graph, PartitionedGraph):
@@ -111,20 +135,25 @@ class Walker:
         n = self.execution.num_devices or len(jax.devices())
         return partition_graph(graph, n)
 
-    def _dist_engine(self, pg: PartitionedGraph):
+    def _dist_engine(self, pg: PartitionedGraph, program=None,
+                     execution=None):
+        program = program or self.program
+        execution = execution or self.execution
         # max_degree is baked into the compiled engine (bisect iteration
-        # count, reservoir chunk count), so it must key the cache.
+        # count, reservoir chunk count), so it must key the cache — as
+        # must the resolved (spec, execution) when knobs were auto-tuned.
         key = (pg.num_devices, pg.vertices_per_device, pg.col.shape,
                pg.max_degree,
-               pg.weights is not None, pg.alias_prob is not None)
+               pg.weights is not None, pg.alias_prob is not None,
+               program.spec, execution)
         if key not in self._dist_cache:
-            cfg = self.execution.dist_config(self.program, pg.num_devices)
+            cfg = execution.dist_config(program, pg.num_devices)
             mesh = self._mesh
             if mesh is None:
                 devs = np.array(jax.devices()[: pg.num_devices])
                 mesh = jax.sharding.Mesh(devs, (cfg.axis_name,))
             self._dist_cache[key] = (
-                make_distributed_engine(pg, self.program.spec, cfg, mesh), cfg)
+                make_distributed_engine(pg, program.spec, cfg, mesh), cfg)
         return self._dist_cache[key]
 
     # ---------------------------------------------------------- closed run
@@ -143,8 +172,9 @@ class Walker:
         if self.backend == "single":
             self.program.requires(graph)
             sv = jnp.asarray(starts, jnp.int32)
-            return self._single_engine()(graph, sv, seed,
-                                         num_queries=int(sv.shape[0]))
+            program, execution = self._bind(graph, int(sv.shape[0]))
+            return self._single_engine(program, execution)(
+                graph, sv, seed, num_queries=int(sv.shape[0]))
 
         if not isinstance(graph, PartitionedGraph):
             self.program.requires(graph)
@@ -154,7 +184,8 @@ class Walker:
                 "partitioned graph — build the CSRGraph with alias tables "
                 "before partition_graph")
         pg = self._partition(graph)
-        run, cfg = self._dist_engine(pg)
+        program, execution = self._bind(pg, np.asarray(starts).size)
+        run, cfg = self._dist_engine(pg, program, execution)
         starts_np = np.asarray(starts, dtype=np.int32)
         starts_sh, qcount = shard_starts(starts_np, pg.num_devices)
         base_key = task_rng.stream_key(seed)
@@ -204,28 +235,36 @@ class Walker:
         """
         if self.backend == "single":
             self.program.requires(graph)
-            return WalkStream(self.program, self.execution, graph, capacity,
-                              seed)
+            program, execution = self._bind(graph, capacity)
+            return WalkStream(program, execution, graph, capacity, seed)
         if not isinstance(graph, PartitionedGraph):
             self.program.requires(graph)
         pg = self._partition(graph)
-        cfg = self.execution.dist_config(self.program, pg.num_devices)
+        program, execution = self._bind(pg, capacity)
+        cfg = execution.dist_config(program, pg.num_devices)
         mesh = self._mesh
         if mesh is None:
             devs = np.array(jax.devices()[: pg.num_devices])
             mesh = jax.sharding.Mesh(devs, (cfg.axis_name,))
-        return ShardedWalkStream(self.program, cfg, pg, mesh, capacity, seed)
+        return ShardedWalkStream(program, cfg, pg, mesh, capacity, seed)
 
     # ------------------------------------------------------------- service
 
     def serve(self, graph, capacity: int = 4096, chunk: int = 16,
-              seed: int = 0):
+              seed: int = 0, adapt: bool = False, controller=None):
         """Multi-tenant request service over the streaming engine (either
-        backend — the service only speaks the stream interface)."""
+        backend — the service only speaks the stream interface).
+
+        ``adapt=True`` attaches the Theorem VI.1 chunk controller
+        (`repro.serve.scheduler.HopsController`, overridable via
+        ``controller``): the service adapts its supersteps-per-launch
+        online from the engine's occupancy stats, trace exposed on
+        ``ServiceAnalysis.adaptation``.
+        """
         from repro.serve.service import WalkService
         return WalkService(stream=self.stream(graph, capacity=capacity,
                                               seed=seed),
-                           chunk=chunk)
+                           chunk=chunk, adapt=adapt, controller=controller)
 
     # ------------------------------------------------- walks → embeddings
 
@@ -277,10 +316,10 @@ class Walker:
             self.program.requires(graph)
             nv = int(graph.num_vertices)
             if "engine" not in self._emb_cache:
-                cfg = dataclasses.replace(self._engine_cfg(),
-                                          record_paths=True)
-                self._emb_cache["engine"] = build_engine(self.program.spec,
-                                                         cfg)
+                program, execution = self._bind(graph, walks_per_round)
+                cfg = dataclasses.replace(
+                    execution.engine_config(program), record_paths=True)
+                self._emb_cache["engine"] = build_engine(program.spec, cfg)
             engine = self._emb_cache["engine"]
             stream = None
 

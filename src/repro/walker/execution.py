@@ -16,6 +16,14 @@ from repro.core.distributed import DistConfig
 from repro.core.walk_engine import (EngineConfig, MODES as _MODES,
                                     STEP_IMPLS as _STEP_IMPLS)
 
+#: Sentinel accepted by the tunable knobs below: "resolve me from the
+#: tuning cache / analytical model at graph-bind time" (repro.tune).
+AUTO = "auto"
+
+#: Knobs that accept the AUTO sentinel.  All are *path-preserving*
+#: machine knobs — resolution never changes which walks are sampled.
+TUNABLE_KNOBS = ("num_slots", "hops_per_launch", "queue_depth_factor")
+
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionConfig:
@@ -23,6 +31,13 @@ class ExecutionConfig:
 
     Single-device knobs map onto :class:`repro.core.EngineConfig`;
     sharded knobs onto :class:`repro.core.distributed.DistConfig`.
+
+    The ``num_slots`` / ``hops_per_launch`` / ``queue_depth_factor``
+    knobs also accept the string ``"auto"``: the Walker resolves them
+    per graph at bind time through the tuning cache / analytical model
+    (`repro.tune.resolve`) — see ``tune_cache`` below.  A config with
+    unresolved sentinels cannot be lowered (``engine_config`` /
+    ``dist_config`` raise); use :meth:`resolved` to pin values manually.
 
     Attributes:
       num_slots:        W — total walker lanes (divided across devices on
@@ -54,16 +69,20 @@ class ExecutionConfig:
                         lossless under the flow-controlled refill.
       log_capacity:     per-device emission-log entries (path write-back).
       axis_name:        mesh axis name for the sharded backend.
+      tune_cache:       optional path of a tuning-cache JSON consulted
+                        when resolving ``"auto"`` knobs (default: the
+                        ``RIDGEWALKER_TUNE_CACHE`` environment variable,
+                        else model-only resolution).
     """
 
-    num_slots: int = 1024
+    num_slots: "int | str" = 1024
     record_paths: bool = True
     mode: str = "zero_bubble"
     injection_delay: int = 0
-    queue_depth_factor: float = 1.0
+    queue_depth_factor: "float | str" = 1.0
     max_supersteps: int = 1 << 20
     step_impl: str = "jnp"
-    hops_per_launch: int = 16
+    hops_per_launch: "int | str" = 16
     # ---- sharded backend ----
     num_devices: Optional[int] = None
     slots_per_device: Optional[int] = None
@@ -71,9 +90,16 @@ class ExecutionConfig:
     retention_factor: float = 1.0
     log_capacity: int = 1 << 16
     axis_name: str = "ch"
+    tune_cache: Optional[str] = None
 
     def __post_init__(self):
-        if self.num_slots <= 0:
+        for knob in TUNABLE_KNOBS:
+            v = getattr(self, knob)
+            if isinstance(v, str) and v != AUTO:
+                raise ValueError(
+                    f"{knob} must be a number or the sentinel "
+                    f"{AUTO!r}, got {v!r}")
+        if self.num_slots != AUTO and self.num_slots <= 0:
             raise ValueError(
                 f"num_slots must be a positive lane count, got "
                 f"{self.num_slots}")
@@ -87,14 +113,14 @@ class ExecutionConfig:
             raise ValueError(
                 f"injection_delay is a latency in supersteps and cannot be "
                 f"negative, got {self.injection_delay}")
-        if self.queue_depth_factor <= 0:
+        if self.queue_depth_factor != AUTO and self.queue_depth_factor <= 0:
             raise ValueError(
                 f"queue_depth_factor must be positive (it scales the "
                 f"Theorem VI.1 depth), got {self.queue_depth_factor}")
         if self.max_supersteps <= 0:
             raise ValueError(f"max_supersteps must be positive, got "
                              f"{self.max_supersteps}")
-        if self.hops_per_launch <= 0:
+        if self.hops_per_launch != AUTO and self.hops_per_launch <= 0:
             raise ValueError(f"hops_per_launch must be positive, got "
                              f"{self.hops_per_launch}")
         if self.num_devices is not None and self.num_devices <= 0:
@@ -111,10 +137,50 @@ class ExecutionConfig:
             raise ValueError(f"log_capacity must be positive, got "
                              f"{self.log_capacity}")
 
+    # ------------------------------------------------------ auto sentinels
+
+    @property
+    def auto_knobs(self) -> tuple:
+        """Names of knobs currently carrying the ``"auto"`` sentinel."""
+        return tuple(k for k in TUNABLE_KNOBS if getattr(self, k) == AUTO)
+
+    @property
+    def has_auto(self) -> bool:
+        """True while any tunable knob is still an unresolved sentinel."""
+        return bool(self.auto_knobs)
+
+    def resolved(self, **knobs) -> "ExecutionConfig":
+        """Concrete copy: ``knobs`` override, remaining sentinels take
+        the class defaults.
+
+        This is the manual escape hatch and the primitive the tuner's
+        candidate application uses; ``Walker`` resolves through
+        `repro.tune.resolve` instead (cache / model aware).
+        """
+        bad = set(knobs) - set(TUNABLE_KNOBS)
+        if bad:
+            raise ValueError(
+                f"resolved() only accepts the tunable knobs "
+                f"{TUNABLE_KNOBS}, got {sorted(bad)}")
+        vals = dict(knobs)
+        for k in TUNABLE_KNOBS:
+            if k not in vals and getattr(self, k) == AUTO:
+                vals[k] = getattr(type(self), "__dataclass_fields__")[
+                    k].default
+        return dataclasses.replace(self, **vals) if vals else self
+
+    def _require_concrete(self, what: str) -> None:
+        if self.has_auto:
+            raise ValueError(
+                f"cannot build a {what} while {self.auto_knobs} are "
+                f"'auto' — bind through Walker (which resolves them per "
+                f"graph via repro.tune) or call .resolved(...) first")
+
     # ---------------------------------------------------------- conversions
 
     def engine_config(self, program) -> EngineConfig:
         """Single-device engine view of these knobs for ``program``."""
+        self._require_concrete("single-device EngineConfig")
         return EngineConfig(
             num_slots=self.num_slots,
             max_hops=program.max_hops,
@@ -129,6 +195,7 @@ class ExecutionConfig:
 
     def dist_config(self, program, num_devices: int) -> DistConfig:
         """Sharded engine view of these knobs for ``program``."""
+        self._require_concrete("sharded DistConfig")
         if self.mode != "zero_bubble" or self.step_impl != "jnp":
             warnings.warn(
                 f"mode={self.mode!r} / step_impl={self.step_impl!r} do not "
