@@ -17,7 +17,16 @@ checker is a single forward scan holding per-``(buffer, slot)`` state:
     flight on its slot (waiting a never-started / already-waited /
     wrong-slot copy means the semaphore accounting is off by one);
   * **un-drained copy** — every copy started must be waited before the
-    kernel returns (Pallas semaphores must balance per launch).
+    kernel returns (Pallas semaphores must balance per launch);
+  * **phantom copy** — a ``start`` targeting a VMEM-resident buffer (one
+    the schedule reads with ``tier="vmem"``, or tagged so itself).  The
+    cached gather hierarchy's whole point is that hit paths issue *no*
+    DMA — a copy into cache-tier storage means a hit path still went to
+    HBM, silently erasing the latency win while staying bit-identical.
+
+``read`` ops with ``tier="vmem"`` are cache-hit probes/payload reads:
+they touch on-chip memory only, so no dominating wait is required and
+they participate in no slot state.
 
 For the grid-scheduled `segment_sum` (no explicit DMAs) the same scan
 checks the Pallas TPU output-revisit contract over ``visit`` ops:
@@ -53,9 +62,21 @@ def check_schedule(ops: Sequence[DmaOp], name: str = "kernel"
         findings.append(Finding("dma", f"{name}[{i}]", f"{op.kind} "
                                 f"{op.buffer}/slot{op.slot}: {msg}"))
 
+    # Buffers the schedule declares VMEM-resident (cache-tier): any read
+    # at tier="vmem" marks its buffer as on-chip for the whole schedule.
+    vmem_bufs = {op.buffer for op in ops
+                 if getattr(op, "tier", "hbm") == "vmem"}
+
     for i, op in enumerate(ops):
         slot = (op.buffer, op.slot)
+        if op.kind == "read" and getattr(op, "tier", "hbm") == "vmem":
+            continue  # on-chip read: no DMA, no slot state
         if op.kind == "start":
+            if op.tier == "vmem" or op.buffer in vmem_bufs:
+                flag(i, op, "DMA start into a VMEM-resident cache buffer "
+                            "(phantom copy) — cached hit paths must serve "
+                            "from on-chip memory without issuing copies")
+                continue
             if slot in in_flight:
                 flag(i, op, f"re-issued while copy {in_flight[slot]} is "
                             f"still un-waited (overwrite-while-in-flight)"
@@ -162,6 +183,11 @@ def kernel_schedules():
     for kind in ("uniform", "alias", "metapath", "rejection_n2v",
                  "reservoir_n2v"):
         schedules[f"fused_superstep.{kind}"] = fused_schedule(kind)
+        # Cached variant: the fully-hit representative superstep — cache
+        # probes and payload reads at tier="vmem", HBM loops only where
+        # the hierarchy cannot serve (v_prev-keyed state, write-back).
+        schedules[f"fused_superstep.{kind}.cached"] = fused_schedule(
+            kind, cached=True)
     schedules["embedding_bag"] = eb_schedule()
     schedules["segment_sum"] = ss_schedule()
     return schedules

@@ -96,6 +96,22 @@ def dma_undrained() -> List[Finding]:
     return dma_hazards.check_schedule(ops, "fixture.undrained")
 
 
+def dma_cached_phantom_copy() -> List[Finding]:
+    """A cached gather op that still issues an HBM copy on the hit path:
+    the cache probe resolved the vertex on-chip, yet the emitter started
+    a DMA into the cache-tier column buffer anyway.  Bit-identical in
+    result (the same bytes arrive) but the latency win is gone — exactly
+    the silent regression the phantom-copy rule exists to trip."""
+    from repro.kernels.fused_superstep.fused_superstep import \
+        dma_schedule as fused_schedule
+    ops = list(fused_schedule("uniform", cached=True))
+    hit = next(i for i, op in enumerate(ops)
+               if op.kind == "read" and op.tier == "vmem"
+               and op.buffer == "cache.col")
+    ops.insert(hit, DmaOp("start", "cache.col", 0, copy=990))
+    return dma_hazards.check_schedule(ops, "fixture.cached_phantom")
+
+
 def visit_nonconsecutive() -> List[Finding]:
     """segment-sum visiting a block, leaving it, then returning — the
     revisit contract an unsorted segment vector would break."""
@@ -170,6 +186,7 @@ FIXTURES: Dict[str, Callable[[], List[Finding]]] = {
     "dma-missing-wait": dma_missing_wait,
     "dma-overwrite-in-flight": dma_overwrite_in_flight,
     "dma-undrained": dma_undrained,
+    "dma-cached-phantom-copy": dma_cached_phantom_copy,
     "visit-nonconsecutive": visit_nonconsecutive,
     "visit-bad-first": visit_bad_first,
     "residency-vprev-draw": residency_vprev_draw,

@@ -113,6 +113,17 @@ class Phase:
     width: int = 1
     salt: int = SALT_COLUMN
 
+    @property
+    def cacheable(self) -> bool:
+        """May this phase's graph operands be served from the hot-vertex
+        cache?  True exactly for ``v_curr``-resident ``gather``/``commit``
+        phases: their operands are slices of the current vertex's
+        adjacency payload, which is what `graph.hot_cache` packs into
+        VMEM.  ``v_prev``-resident phases (the rejection verify and the
+        reservoir bias/membership probes) address N(v_prev) and always
+        take the HBM DMA path."""
+        return self.op in ("gather", "commit") and self.residency == "v_curr"
+
 
 @dataclasses.dataclass(frozen=True)
 class PhaseProgram:
@@ -181,6 +192,29 @@ class PhaseProgram:
         (single-residency programs over the plain/alias CSR segments)."""
         return all(p.residency == "v_curr" for p in self.phases) and not (
             self.loop or "typed" in self.requires)
+
+    @property
+    def cache_payloads(self) -> Tuple[str, ...]:
+        """Adjacency payload arrays the hot-vertex cache must pack for
+        this program — read off the cacheable (``v_curr``-resident)
+        gather/commit phases, so `graph.hot_cache.build_hot_cache` sizes
+        the VMEM block from the program, not a hand-kept list.
+
+        Every program needs ``col`` (the commit column access); the
+        alias probe adds ``alias_prob``/``alias_idx``, the typed gather
+        adds ``type_offsets``, and the reservoir chunk gather adds
+        ``weights``.  ``v_prev``-resident phases contribute nothing —
+        their operands stay on the HBM DMA path.
+        """
+        payloads = ["col"]
+        for ph in self.phases:
+            if not ph.cacheable or ph.op != "gather":
+                continue
+            payloads += {"alias": ["alias_prob", "alias_idx"],
+                         "typed": ["type_offsets"],
+                         "chunk": ["weights"],
+                         "csr": []}[ph.variant]
+        return tuple(payloads)
 
     # ------------------------------------------- static-analysis exports
 
@@ -529,6 +563,7 @@ def support_rows():
             "residency": residency,
             "requires": prog.requires,
             "phases": prog.phases,
+            "cache_payloads": prog.cache_payloads,
         })
     return rows
 
@@ -571,17 +606,18 @@ def render_schedule_table() -> str:
     """
     lines = [
         "| sampler | phases | schedule | carry | residency "
-        "| graph payloads |",
-        "|---|---|---|---|---|---|",
+        "| graph payloads | hot-cache payloads |",
+        "|---|---|---|---|---|---|---|",
     ]
     for r in support_rows():
         phases = " → ".join(_phase_sig(p) for p in r["phases"])
         loop = " (looped per chunk)" if r["schedule"] == "chunked_loop" \
             else ""
         req = ", ".join(f"`{x}`" for x in r["requires"]) or "—"
+        hot = ", ".join(f"`{x}`" for x in r["cache_payloads"])
         lines.append(f"| {r['label']} | `{phases}`{loop} "
                      f"| `{r['schedule']}` | `{r['carry']}` "
-                     f"| {r['residency']} | {req} |")
+                     f"| {r['residency']} | {req} | {hot} |")
     return "\n".join(lines)
 
 

@@ -217,6 +217,14 @@ class WalkStats(NamedTuple):
                               # device-resident kernel amortizes many
                               # supersteps per launch, so
                               # supersteps / launches is the fusion factor
+    cache_hits: jnp.ndarray   # lane-gathers served from the VMEM hot-vertex
+                              # cache (fused kernel with cache_budget > 0;
+                              # 0 everywhere else)
+    cache_misses: jnp.ndarray  # lane-gathers that fell through to the HBM
+                              # DMA loops despite the cache being on
+    cache_coalesced: jnp.ndarray  # lane-gathers that shared another lane's
+                              # issue because their v_curr coincided within
+                              # the superstep (same-vertex coalescing)
 
     def bubble_ratio(self):
         return self.bubbles / jnp.maximum(self.slot_steps, 1)
@@ -226,6 +234,11 @@ class WalkStats(NamedTuple):
 
     def supersteps_per_launch(self):
         return self.supersteps / jnp.maximum(self.launches, 1)
+
+    def cache_hit_rate(self):
+        """Fraction of cache probes (leader gathers) served from VMEM."""
+        return self.cache_hits / jnp.maximum(
+            self.cache_hits + self.cache_misses, 1)
 
 
 def zero_stats() -> WalkStats:

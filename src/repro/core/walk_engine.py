@@ -110,6 +110,10 @@ class EngineConfig:
     hops_per_launch: int = 16      # fused only: supersteps per kernel launch
                                    # (the k of the O(k·state) -> O(state)
                                    # host-traffic reduction)
+    cache_budget: int = 0          # fused only: byte budget of the VMEM
+                                   # hot-vertex adjacency cache (0 = off);
+                                   # gathers on cached hubs skip the HBM
+                                   # DMA loops, bit-identically
 
     def __post_init__(self):
         if self.num_slots <= 0:
@@ -143,6 +147,10 @@ class EngineConfig:
             raise ValueError(
                 f"hops_per_launch must be a positive superstep count per "
                 f"fused-kernel launch, got {self.hops_per_launch}")
+        if self.cache_budget < 0:
+            raise ValueError(
+                f"cache_budget is a byte budget (0 disables the hot-vertex "
+                f"cache) and cannot be negative, got {self.cache_budget}")
 
 
 class StreamState(NamedTuple):
@@ -167,6 +175,23 @@ class StreamState(NamedTuple):
 def _stage_depth(cfg: EngineConfig) -> int:
     d = sched.min_queue_depth(cfg.num_slots, mu=1.0, delay=cfg.injection_delay)
     return max(1, int(round(cfg.queue_depth_factor * d)))
+
+
+def maybe_build_cache(spec: SamplerSpec, cfg: EngineConfig, graph: CSRGraph):
+    """Hot-vertex cache for this (spec, cfg, graph), or ``None``.
+
+    The cache only exists for the fused kernel with a positive byte
+    budget; its payload set comes from the phase program's declared
+    ``cache_payloads`` (columns always, plus weights / alias tables /
+    typed offsets as the sampler's gather phases require).  Building is
+    host-side numpy work — callers that rebind graphs should memoize on
+    graph identity (`repro.walker.compile` does).
+    """
+    if cfg.step_impl != "fused" or cfg.cache_budget <= 0:
+        return None
+    from repro.graph.hot_cache import build_hot_cache
+    payloads = lower_program(spec).cache_payloads
+    return build_hot_cache(graph, payloads, cfg.cache_budget)
 
 
 def _fresh_buffers(cfg: EngineConfig, num_queries: int):
@@ -410,7 +435,7 @@ def _work_left(state: StreamState):
     return (state.queue.head < state.queue.tail) | jnp.any(state.slots.active)
 
 
-def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
+def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig, cache=None):
     """Build a jitted ``run_supersteps(graph, state, seed, k) -> StreamState``.
 
     Advances the stream by at most ``k`` supersteps, stopping early when no
@@ -422,6 +447,8 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
     ``ceil(k / hops_per_launch)`` launches of the device-resident fused
     kernel instead of ``k`` superstep bounces — same state protocol, same
     bit-exact paths, O(state) host traffic per launch instead of per hop.
+    ``cache`` is the graph-specific :class:`~repro.graph.HotVertexCache`
+    from :func:`maybe_build_cache` (fused + ``cache_budget > 0`` only).
     """
     depth = _stage_depth(cfg)
     # Every phase program lowers to the fused kernel (the chunked
@@ -431,7 +458,7 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
 
     if cfg.step_impl == "fused":
         from repro.kernels.fused_superstep import build_fused_launch
-        launch = build_fused_launch(spec, cfg, depth)
+        launch = build_fused_launch(spec, cfg, depth, cache=cache)
 
         @jax.jit
         def run_supersteps(graph: CSRGraph, state: StreamState, seed,
@@ -475,7 +502,7 @@ def make_superstep_runner(spec: SamplerSpec, cfg: EngineConfig):
     return run_supersteps
 
 
-def build_engine(spec: SamplerSpec, cfg: EngineConfig):
+def build_engine(spec: SamplerSpec, cfg: EngineConfig, cache=None):
     """Build a jitted ``run(graph, start_vertices, seed) -> WalkResult``
     (the closed system: drain a fixed query batch to completion).
 
@@ -485,13 +512,16 @@ def build_engine(spec: SamplerSpec, cfg: EngineConfig):
     ``step_impl="fused"`` drains the batch as a ``while_loop`` over
     device-resident fused-kernel launches (``hops_per_launch`` supersteps
     each) instead of per-hop superstep bounces — bit-identical paths,
-    O(state) host traffic per launch.
+    O(state) host traffic per launch.  ``cache`` is the graph-specific
+    hot-vertex cache from :func:`maybe_build_cache`, closure-captured by
+    the fused launch (ignored by the per-hop impls).
     """
     assert lower_program(spec).fused, spec.kind
     fused_launch = None
     if cfg.step_impl == "fused":
         from repro.kernels.fused_superstep import build_fused_launch
-        fused_launch = build_fused_launch(spec, cfg, _stage_depth(cfg))
+        fused_launch = build_fused_launch(spec, cfg, _stage_depth(cfg),
+                                          cache=cache)
 
     @partial(jax.jit, static_argnames=("num_queries",))
     def run(graph: CSRGraph, start_vertices: jnp.ndarray, seed,
@@ -552,7 +582,7 @@ def _run_walks(graph: CSRGraph, start_vertices, spec: SamplerSpec,
     """One-shot closed-system run (engine-internal reference path)."""
     cfg = cfg or EngineConfig()
     sv = jnp.asarray(start_vertices, jnp.int32)
-    run = build_engine(spec, cfg)
+    run = build_engine(spec, cfg, cache=maybe_build_cache(spec, cfg, graph))
     return run(graph, sv, seed, num_queries=int(sv.shape[0]))
 
 

@@ -4,6 +4,7 @@ from repro.graph.csr import CSRGraph, build_csr, degrees, validate_csr
 from repro.graph.datasets import DATASET_SPECS, make_dataset
 from repro.graph.generators import (BALANCED, GRAPH500, erdos_renyi_edges,
                                     rmat_edges)
+from repro.graph.hot_cache import HotVertexCache, build_hot_cache
 from repro.graph.partition import PartitionedGraph, owner_of, partition_graph
 
 __all__ = [
@@ -11,4 +12,5 @@ __all__ = [
     "rmat_edges", "erdos_renyi_edges", "GRAPH500", "BALANCED",
     "build_alias_tables", "make_dataset", "DATASET_SPECS",
     "partition_graph", "PartitionedGraph", "owner_of",
+    "HotVertexCache", "build_hot_cache",
 ]

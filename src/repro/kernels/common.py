@@ -50,6 +50,14 @@ class DmaOp(NamedTuple):
         explicit DMAs); ``slot`` is the block id, ``first`` flags the
         declared init-vs-accumulate bit, ``live`` whether the visit
         actually accumulates.
+
+    ``tier`` names the memory tier the op touches: ``"hbm"`` (the
+    default — every async-copy staging buffer) or ``"vmem"`` for the
+    hot-vertex cache block, which is launch-resident and therefore never
+    the target of a copy.  A ``read`` with ``tier="vmem"`` needs no
+    dominating wait (the data is always resident); a ``start`` on a vmem
+    buffer is by definition a *phantom copy* — a hit path issuing HBM
+    traffic it was built to avoid — and the DMA pass flags it.
     """
 
     kind: str
@@ -58,6 +66,7 @@ class DmaOp(NamedTuple):
     copy: int = -1
     first: bool = False
     live: bool = True
+    tier: str = "hbm"
 
 
 class ScheduleBuilder:
@@ -80,8 +89,14 @@ class ScheduleBuilder:
     def wait(self, buffer: str, slot: int, copy: int) -> None:
         self.ops.append(DmaOp("wait", buffer, slot, copy))
 
-    def read(self, buffer: str, slot: int) -> None:
-        self.ops.append(DmaOp("read", buffer, slot))
+    def read(self, buffer: str, slot: int, tier: str = "hbm") -> None:
+        self.ops.append(DmaOp("read", buffer, slot, tier=tier))
+
+    def cache_read(self, buffer: str) -> None:
+        """A hit-path read of the VMEM-resident hot-vertex cache: no
+        copy, no wait — the declarative record of "this gather issued no
+        HBM traffic" that the DMA pass verifies cached schedules by."""
+        self.read(buffer, 0, tier="vmem")
 
     def write(self, buffer: str, slot: int) -> None:
         self.ops.append(DmaOp("write", buffer, slot))

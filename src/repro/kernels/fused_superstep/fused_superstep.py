@@ -90,7 +90,9 @@ from repro.core.rng import SALT_CHUNK0, SALT_COLUMN, SALT_STOP
 from repro.core.samplers import _uniform_index
 from repro.core.tasks import WalkStats
 from repro.kernels.common import ScheduleBuilder
-from repro.kernels.walk_step.walk_step import (gather1_loop, gather2_loop,
+from repro.kernels.walk_step.walk_step import (cached_gather1_loop,
+                                               cached_gather2_loop,
+                                               gather1_loop, gather2_loop,
                                                row_access_loop)
 
 # WalkStats slot indices inside the SMEM stats vector.
@@ -100,7 +102,8 @@ NUM_STATS = len(WalkStats._fields)
 
 def dma_schedule(kind: str = "uniform", lanes: int = 3, rounds: int = 2,
                  bisect_iters: int = 2, chunks: int = 3, records: int = 4,
-                 record_paths: bool = True):
+                 record_paths: bool = True, cached: bool = False,
+                 probe_trips: int = 2):
     """Declarative DMA schedule of one fused-superstep launch, for the
     static hazard analyzer (`repro.analysis.dma_hazards`).
 
@@ -124,29 +127,85 @@ def dma_schedule(kind: str = "uniform", lanes: int = 3, rounds: int = 2,
       * the async path write-back (``wbuf``) with its delayed two-deep
         slot reclamation and end-of-launch drain.
 
+    ``cached=True`` emits the *fully-hit* representative superstep of the
+    gather hierarchy (``cache_budget > 0`` and every lane's v_curr hot):
+    every v_curr-keyed gather becomes vmem-tier ``cache.*`` reads — the
+    directory probe (``probe_trips`` binary-search reads plus the
+    (addr, deg) payload on ``cache.idx``) replaces the RP_entry loop, and
+    the column / alias / typed / chunk payloads read ``cache.col`` /
+    ``cache.prob`` / ``cache.alias`` / ``cache.toff`` / ``cache.wgt`` —
+    while the v_prev-keyed loops (the second-order samplers' pair fetch,
+    bisection probes, and membership checks) and the path write-back keep
+    their HBM copies.  The DMA pass proves hit paths issue **no** copies
+    (a ``start`` on a vmem buffer is a phantom copy) and the surviving
+    miss-side loops stay wait-dominated.  Partially-hit supersteps
+    interleave this schedule with the uncached one per lane, so the two
+    declarations jointly cover every execution.
+
     Keep in sync with the kernel — the analyzer checks this declaration,
     and the declaration is only as good as its fidelity to the loops
     above.
     """
     b = ScheduleBuilder()
-    b.gather_loop("rpbuf", lanes)                   # row access (RP_entry)
+
+    def probe():
+        # Directory probe: the binary search over the sorted hot-id list,
+        # then the (addr, deg) directory payload — all launch-resident.
+        for _ in range(probe_trips):
+            b.cache_read("cache.idx")
+        b.cache_read("cache.idx")
+
+    def col_gather():
+        if cached:
+            for _ in range(lanes):
+                b.cache_read("cache.col")
+        else:
+            b.gather_loop("colbuf", lanes)
+
+    if cached:
+        for _ in range(lanes):                      # row access via probe
+            probe()
+    else:
+        b.gather_loop("rpbuf", lanes)               # row access (RP_entry)
     if kind == "alias":
-        b.gather_loop("probbuf", lanes)
-        b.gather_loop("aliasbuf", lanes)
-        b.gather_loop("colbuf", lanes)
+        if cached:
+            for _ in range(lanes):
+                b.cache_read("cache.prob")
+            for _ in range(lanes):
+                b.cache_read("cache.alias")
+        else:
+            b.gather_loop("probbuf", lanes)
+            b.gather_loop("aliasbuf", lanes)
+        col_gather()
     elif kind == "metapath":
-        b.gather_loop("pairbuf", lanes)             # type_offsets[v, t:t+2]
-        b.gather_loop("colbuf", lanes)
+        if cached:
+            for _ in range(lanes):                  # typed bounds
+                b.cache_read("cache.toff")
+        else:
+            b.gather_loop("pairbuf", lanes)         # type_offsets[v, t:t+2]
+        col_gather()
     elif kind == "rejection_n2v":
         b.gather_loop("pairbuf", lanes)             # RP_entry of v_prev
         for _ in range(rounds):
-            b.gather_loop("colbuf", lanes)          # proposal columns
+            col_gather()                            # proposal columns
             for _ in range(bisect_iters):
                 b.gather_loop("colbuf", lanes)      # bisection probes
             b.gather_loop("colbuf", lanes)          # membership check
     elif kind == "reservoir_n2v":
         b.gather_loop("pairbuf", lanes)             # RP_entry of v_prev
         for _lane in range(lanes):
+            if cached:
+                # Hit lane: the chunk loop scores the cached row
+                # elementwise — no ping-pong copies; only the
+                # N(v_prev)-side bisection/membership DMAs remain.
+                for _c in range(chunks):
+                    b.cache_read("cache.col")       # candidate columns
+                    for _ in range(bisect_iters):
+                        b.gather_loop("colbuf", 2)  # probes over CH posns
+                    b.gather_loop("colbuf", 2)      # membership check
+                    b.cache_read("cache.col")       # E-S fold operands
+                    b.cache_read("cache.wgt")
+                continue
             # Per-lane degree-adaptive chunk loop: ping-pong (ckcol,
             # ckwgt) with chunk c+1 in flight while chunk c is scored.
             pend = {0: [(buf, b.start(buf, 0))
@@ -165,9 +224,9 @@ def dma_schedule(kind: str = "uniform", lanes: int = 3, rounds: int = 2,
                 # ...and the E-S fold consumes columns and weights.
                 b.read("ckcol", c % 2)
                 b.read("ckwgt", c % 2)
-        b.gather_loop("colbuf", lanes)              # final column access
+        col_gather()                                # final column access
     else:  # uniform / ppr
-        b.gather_loop("colbuf", lanes)
+        col_gather()
     if record_paths:
         b.writeback_loop("wbuf", records)           # async path write-back
     return b.ops
@@ -180,13 +239,187 @@ def _bisect_iters(max_degree: int) -> int:
     return max(1, int(math.ceil(math.log2(max(int(max_degree), 2) + 1))))
 
 
+class _CacheCtx:
+    """Hot-vertex cache refs + static geometry, threaded through the
+    sampling helpers (``None`` everywhere when ``cache_budget == 0`` —
+    the cached code paths are then never traced, so the cache-off kernel
+    is the exact pre-cache kernel).
+
+    ``cslot`` is the per-lane probe result scratch: the lane's v_curr
+    cache slot, or -1 on a miss — the single hit predicate every
+    downstream gather keys on.  After the row-access phase, a hit lane's
+    ``addr_scr`` holds the *cache-space* base ``hot_off[slot]`` instead
+    of the HBM ``row_ptr[v]``, so ``addr + offset`` arithmetic is
+    uniform across tiers and only the indexed array changes.
+    """
+
+    def __init__(self, num_hot, probe_trips, length,
+                 chot_ref, cdeg_ref, coff_ref, ccol_ref, cwgt_ref,
+                 cprob_ref, cali_ref, ctoff_ref, cslot_scr):
+        self.num_hot = num_hot          # H (static)
+        self.probe_trips = probe_trips  # binary-search trips (static)
+        self.length = length            # packed payload length P (static)
+        self.chot = chot_ref            # (H,) sorted hot vertex ids
+        self.cdeg = cdeg_ref            # (H,) degrees
+        self.coff = coff_ref            # (H+1,) exclusive prefix offsets
+        self.col = ccol_ref             # (P,) packed columns
+        self.wgt = cwgt_ref             # (P,) weights or None
+        self.prob = cprob_ref           # (P,) alias accept probs or None
+        self.alias = cali_ref           # (P,) alias indices or None
+        self.toff = ctoff_ref           # (H, T+1) typed bounds or None
+        self.cslot = cslot_scr          # (W,) per-lane probe result
+
+    def hit_fn(self):
+        return lambda i: self.cslot[i] >= 0
+
+
+def _g1(n, e_fn, src_ref, buf, sem, num_entries, on_result, cache,
+        cache_ref):
+    """Column-style gather that serves hit lanes from ``cache_ref`` (the
+    e_fn index is tier-uniform: cache-space for hits, HBM-space for
+    misses, because row access already swapped the hit lanes' base
+    address)."""
+    cached_gather1_loop(
+        n, e_fn, src_ref, buf, sem, num_entries, on_result,
+        cache_ref=cache_ref,
+        cache_len=cache.length if cache is not None else 1,
+        hit_fn=cache.hit_fn() if cache is not None else None)
+
+
+def _cache_probe(vv, cache):
+    """Binary search (lower bound) for ``vv`` in the sorted hot-id
+    directory — ``probe_trips`` statically-unrolled halvings of scalar
+    SMEM reads; returns the cache slot or -1 on a miss."""
+    lo = jnp.int32(0)
+    hi = jnp.int32(cache.num_hot)
+    for _ in range(cache.probe_trips):
+        active = lo < hi
+        mid = (lo + hi) // 2
+        go = cache.chot[jnp.clip(mid, 0, cache.num_hot - 1)] < vv
+        lo = jnp.where(active & go, mid + 1, lo)
+        hi = jnp.where(active & jnp.logical_not(go), mid, hi)
+    found = (lo < cache.num_hot) & (
+        cache.chot[jnp.clip(lo, 0, cache.num_hot - 1)] == vv)
+    return jnp.where(found, lo, jnp.int32(-1))
+
+
+def _cached_row_access(W, num_vertices, cache, rp_ref, rpbuf, rpsem,
+                       vcur, act, addr_scr, deg_scr, lead_scr,
+                       tagv_scr, tagl_scr, stats):
+    """Row access through the gather hierarchy: same-vertex coalescing →
+    VMEM directory probe → HBM RP_entry DMAs for miss leaders only.
+
+    Pass 1 fills a direct-mapped tag table (vertex → writing lane) in
+    *reverse* lane order, so the surviving writer of each tag slot is
+    the smallest lane index — every follower's leader precedes it and an
+    ascending pass can forward the leader's result.  Staleness is
+    impossible: every lane writes its own tag slot each superstep, so a
+    surviving tag always belongs to a current v_curr.  Pass 2 resolves
+    each lane's leader (a tag match is a full vertex-id match — distinct
+    vertices sharing a tag slot fall back to self-leadership) and probes
+    the directory (followers share their leader's vertex and therefore
+    its probe result).  Pass 3 serves hit leaders from the directory —
+    cache-space base + degree, no DMA — and runs the usual
+    double-buffered RP_entry loop with start *and* wait predicated on
+    "miss leader".  Pass 4 forwards leader results to followers, applies
+    the same per-lane validity guard as the uncached ``on_row``, and
+    accumulates the live-lane hit/miss/coalesced counters.
+
+    Bit-identity: ``cdeg[slot]`` equals ``rp[v+1] - rp[v]`` by
+    construction and followers share the leader's vertex, so every
+    lane's (effective address, degree) resolves to the same bytes as the
+    uncached loop.
+    """
+    def vv_of(i):
+        return jnp.clip(vcur[i], 0, num_vertices - 1)
+
+    def tag_fill(t, _):
+        i = W - 1 - t
+        vv = vv_of(i)
+        s = jax.lax.rem(vv, W)
+        tagv_scr[s] = vv
+        tagl_scr[s] = i
+        return 0
+
+    jax.lax.fori_loop(0, W, tag_fill, 0)
+
+    def lead_probe(i, _):
+        vv = vv_of(i)
+        s = jax.lax.rem(vv, W)
+        lead_scr[i] = jnp.where(tagv_scr[s] == vv, tagl_scr[s], i)
+        cache.cslot[i] = _cache_probe(vv, cache)
+        return 0
+
+    jax.lax.fori_loop(0, W, lead_probe, 0)
+
+    def need(i):
+        ii = jnp.minimum(i, W - 1)  # lookahead may probe index W
+        return (lead_scr[ii] == ii) & (cache.cslot[ii] < 0)
+
+    def copy(i, slot):
+        return pltpu.make_async_copy(rp_ref.at[pl.ds(vv_of(i), 2)],
+                                     rpbuf.at[slot], rpsem.at[slot])
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when((i + 1 < W) & need(i + 1))
+        def _():
+            copy(i + 1, jax.lax.rem(i + 1, 2)).start()
+
+        @pl.when(need(i))
+        def _():
+            copy(i, slot).wait()
+            addr_scr[i] = rpbuf[slot, 0]
+            deg_scr[i] = rpbuf[slot, 1] - rpbuf[slot, 0]
+
+        @pl.when((lead_scr[i] == i) & (cache.cslot[i] >= 0))
+        def _():
+            s = jnp.clip(cache.cslot[i], 0, cache.num_hot - 1)
+            addr_scr[i] = cache.coff[s]
+            deg_scr[i] = cache.cdeg[s]
+
+        return 0
+
+    @pl.when(need(0))
+    def _():
+        copy(0, 0).start()
+
+    jax.lax.fori_loop(0, W, body, 0, unroll=False)
+
+    def fin(i, acc):
+        hits, misses, coal = acc
+        led = lead_scr[i]
+        follower = led != i
+
+        @pl.when(follower)
+        def _():
+            addr_scr[i] = addr_scr[led]
+            deg_scr[i] = deg_scr[led]
+
+        v = vcur[i]
+        deg_scr[i] = jnp.where((v >= 0) & (v < num_vertices),
+                               deg_scr[i], 0)
+        live = act[i] == 1
+        hit = cache.cslot[i] >= 0
+        return (hits + (live & ~follower & hit).astype(jnp.int32),
+                misses + (live & ~follower & ~hit).astype(jnp.int32),
+                coal + (live & follower).astype(jnp.int32))
+
+    hits, misses, coal = jax.lax.fori_loop(
+        0, W, fin, (jnp.int32(0), jnp.int32(0), jnp.int32(0)))
+    stats[STAT["cache_hits"]] = stats[STAT["cache_hits"]] + hits
+    stats[STAT["cache_misses"]] = stats[STAT["cache_misses"]] + misses
+    stats[STAT["cache_coalesced"]] = stats[STAT["cache_coalesced"]] + coal
+
+
 def _rejection_sample(W, num_vertices, num_edges, K, inv_p, inv_q,
                       max_degree, k0, k1, rp_ref, col_ref,
                       colbuf, colsem, pairbuf, pairsem,
                       vcur, vprev, qid_o, hop_o, ep_o,
                       addr_scr, deg_scr, idx_scr, vnext_scr, u1_scr,
                       plo_scr, phi_scr, blo_scr, bhi_scr,
-                      kq0_scr, kq1_scr, cand_scr, got_scr):
+                      kq0_scr, kq1_scr, cand_scr, got_scr, cache=None):
     """In-kernel lowering of the rejection program's gather(csr, K) +
     score(first_accept) phases, breadth-wise across the lane pool: per
     round, derive (u_col, u_acc) from the same Threefry counters as
@@ -197,7 +430,10 @@ def _rejection_sample(W, num_vertices, num_edges, K, inv_p, inv_q,
     accepted proposal — the last round is forced, like the jnp executor.
     Every column fetch (proposal, bisection probe, membership check)
     runs through the double-buffered one-element DMA loop, so lane i+1's
-    fetch is in flight while lane i's arithmetic runs.
+    fetch is in flight while lane i's arithmetic runs.  With ``cache``,
+    the v_curr-keyed *proposal* fetch serves hit lanes from the packed
+    cache columns; the v_prev-keyed bisection/membership fetches always
+    go to HBM (the cache is keyed on the current vertex only).
     """
     iters = _bisect_iters(max_degree)
     w_max = max(inv_p, 1.0, inv_q)
@@ -238,8 +474,9 @@ def _rejection_sample(W, num_vertices, num_edges, K, inv_p, inv_q,
         def on_cand(i, v):
             cand_scr[i] = v
 
-        gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
-                     num_edges, on_cand)
+        _g1(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
+            num_edges, on_cand, cache,
+            cache.col if cache is not None else None)
 
         for _ in range(iters):
             def on_probe(i, cv):
@@ -277,23 +514,29 @@ def _rejection_sample(W, num_vertices, num_edges, K, inv_p, inv_q,
 def _metapath_sample(W, num_vertices, num_edges, mp_sched, to_ref, col_ref,
                      colbuf, colsem, pairbuf, pairsem,
                      vcur, hop_o, u0_scr, addr_scr, deg_scr, idx_scr,
-                     vnext_scr):
+                     vnext_scr, cache=None):
     """In-kernel lowering of the metapath program's gather(typed) +
     score(pick_uniform) phases: the scheduled type's packed sub-segment
     bounds (``type_offsets[v, t:t+2]``) ride the double-buffered
     2-element DMA loop (lane i+1's bounds in flight while lane i picks),
     the staged uniform picks within the sub-segment, and a no-match
     sub-segment zeroes the lane's effective degree (early termination,
-    same as the jnp executor)."""
+    same as the jnp executor).  With ``cache``, hit lanes take their
+    bounds from the packed ``toff`` rows (type offsets are row-relative,
+    so the cached row reads identically to the HBM row) and their column
+    from the packed cache columns."""
     L = len(mp_sched)
 
-    def seg_src(i):
+    def seg_t(i):
         r = jax.lax.rem(hop_o[i], L)
         t = jnp.int32(mp_sched[0])
         for s in range(1, L):
             t = jnp.where(r == s, jnp.int32(mp_sched[s]), t)
+        return t
+
+    def seg_src(i):
         v_safe = jnp.clip(vcur[i], 0, num_vertices - 1)
-        return to_ref.at[v_safe, pl.ds(t, 2)]
+        return to_ref.at[v_safe, pl.ds(seg_t(i), 2)]
 
     def on_seg(i, base, end):
         cnt = end - base
@@ -301,13 +544,23 @@ def _metapath_sample(W, num_vertices, num_edges, mp_sched, to_ref, col_ref,
         idx_scr[i] = addr_scr[i] + pick
         deg_scr[i] = jnp.where(cnt > 0, deg_scr[i], 0)
 
-    gather2_loop(W, seg_src, pairbuf, pairsem, on_seg)
+    if cache is not None and cache.toff is not None:
+        def hit_pair(i):
+            s = jnp.clip(cache.cslot[i], 0, cache.num_hot - 1)
+            t = seg_t(i)
+            return cache.toff[s, t], cache.toff[s, t + 1]
+
+        cached_gather2_loop(W, seg_src, pairbuf, pairsem, on_seg,
+                            hit_fn=cache.hit_fn(), hit_pair_fn=hit_pair)
+    else:
+        gather2_loop(W, seg_src, pairbuf, pairsem, on_seg)
 
     def on_col(i, v):
         vnext_scr[i] = v
 
-    gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
-                 num_edges, on_col)
+    _g1(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
+        num_edges, on_col, cache,
+        cache.col if cache is not None else None)
 
 
 def _reservoir_sample(W, num_vertices, num_edges, CH, Lc, inv_p, inv_q,
@@ -318,7 +571,7 @@ def _reservoir_sample(W, num_vertices, num_edges, CH, Lc, inv_p, inv_q,
                       act, stop_scr, vcur, vprev, qid_o, hop_o, ep_o,
                       addr_scr, deg_scr, idx_scr, vnext_scr,
                       plo_scr, phi_scr, blo_scr, bhi_scr,
-                      cand_scr, bkey_scr, ures_scr, fnd_scr):
+                      cand_scr, bkey_scr, ures_scr, fnd_scr, cache=None):
     """In-kernel ``chunked_loop`` schedule — the Efraimidis–Spirakis
     weighted reservoir scan (weighted Node2Vec) as a degree-adaptive
     chunk loop per lane.
@@ -340,6 +593,13 @@ def _reservoir_sample(W, num_vertices, num_edges, CH, Lc, inv_p, inv_q,
     `samplers.es_chunk_score` (first within-chunk argmax) +
     `samplers.es_merge` (strict cross-chunk merge), making the fold
     bit-identical to `phase_program.reservoir_scan`.
+
+    With ``cache``, a hit lane's whole chunk loop goes DMA-free: the
+    candidate columns and fold weights read the packed cache row
+    elementwise (same bytes as the staged chunk — verbatim CSR slices),
+    both ping-pong copies are predicated off, and only the
+    N(v_prev)-keyed bisection/membership fetches still touch HBM.  Miss
+    lanes run the unchanged ping-pong pipeline.
     """
     iters = _bisect_iters(max_degree)
     pairs = (CH + 1) // 2
@@ -373,6 +633,15 @@ def _reservoir_sample(W, num_vertices, num_edges, CH, Lc, inv_p, inv_q,
             plo = plo_scr[i]
             phi = phi_scr[i]
             n_tr = (deg + CH - 1) // CH
+            hit = (cache.cslot[i] >= 0) if cache is not None else None
+
+            def when_miss(fn):
+                # Hit lanes read the cached row elementwise — every
+                # chunk copy is predicated off for them.
+                if cache is not None:
+                    pl.when(jnp.logical_not(hit))(fn)
+                else:
+                    fn()
 
             def ck_copies(c, slot):
                 # Chunk DMAs are fixed-length Lc; near the end of `col`
@@ -389,27 +658,45 @@ def _reservoir_sample(W, num_vertices, num_edges, CH, Lc, inv_p, inv_q,
                         cksem.at[slot, 1]))
                 return cps
 
-            for cp in ck_copies(0, 0):
-                cp.start()
+            def _start0():
+                for cp in ck_copies(0, 0):
+                    cp.start()
+
+            when_miss(_start0)
 
             def chunk_body(c, _c):
                 slot = jax.lax.rem(c, 2)
 
-                @pl.when(c + 1 < n_tr)
-                def _():
-                    for cp in ck_copies(c + 1, jax.lax.rem(c + 1, 2)):
-                        cp.start()
+                def _prefetch():
+                    @pl.when(c + 1 < n_tr)
+                    def _():
+                        for cp in ck_copies(c + 1, jax.lax.rem(c + 1, 2)):
+                            cp.start()
 
-                for cp in ck_copies(c, slot):
-                    cp.wait()
+                when_miss(_prefetch)
+
+                def _drain():
+                    for cp in ck_copies(c, slot):
+                        cp.wait()
+
+                when_miss(_drain)
 
                 base = jnp.clip(addr + c * CH, 0, num_edges - Lc)
                 off = addr + c * CH - base
 
+                def cache_e(j):
+                    # Cache-space index of chunk position j (addr is the
+                    # packed-row base for hit lanes).
+                    return jnp.clip(addr + c * CH + j, 0,
+                                    cache.length - 1)
+
                 def cand(j):
                     # chunk_gather's staging: invalid positions -> -1.
                     b = jnp.minimum(off + j, Lc - 1)
-                    return jnp.where(c * CH + j < deg, ckcol[slot, b], -1)
+                    val = ckcol[slot, b]
+                    if cache is not None:
+                        val = jnp.where(hit, cache.col[cache_e(j)], val)
+                    return jnp.where(c * CH + j < deg, val, -1)
 
                 # Per-chunk uniforms: same counter split as
                 # rng.key_bits(CH) (draw j and draw pairs+j share a
@@ -472,7 +759,10 @@ def _reservoir_sample(W, num_vertices, num_edges, CH, Lc, inv_p, inv_q,
                     y = cand(j)
                     b = jnp.minimum(off + j, Lc - 1)
                     if has_weights:
-                        w_edge = jnp.where(valid, ckwgt[slot, b], 0.0)
+                        wv = ckwgt[slot, b]
+                        if cache is not None and cache.wgt is not None:
+                            wv = jnp.where(hit, cache.wgt[cache_e(j)], wv)
+                        w_edge = jnp.where(valid, wv, 0.0)
                     else:
                         w_edge = jnp.where(valid, 1.0, 0.0)
                     common = (fnd_scr[j] == 1) & (vp >= 0)
@@ -507,8 +797,9 @@ def _reservoir_sample(W, num_vertices, num_edges, CH, Lc, inv_p, inv_q,
     def on_col(i, v):
         vnext_scr[i] = v
 
-    gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
-                 num_edges, on_col)
+    _g1(W, lambda i: idx_scr[i], col_ref, colbuf, colsem,
+        num_edges, on_col, cache,
+        cache.col if cache is not None else None)
 
 
 def fused_superstep_kernel(
@@ -516,12 +807,15 @@ def fused_superstep_kernel(
         num_vertices, num_edges, W, Q, max_hops, depth, delay,
         stop_prob, kind, mp_sched, rej_rounds, inv_p, inv_q, max_degree,
         res_chunk, res_len, has_weights, static_mode, record_paths,
+        use_cache, num_hot, cache_probe_trips, cache_len,
         # ---- inputs ----
         key_ref, ctl_ref,
         vcur_in, vprev_in, qid_in, hop_in, act_in, ep_in,
         qctr_in, hist_in, stats_in, done_in, len_in,
         qstart_ref, qorder_ref, qepoch_ref,
-        rp_ref, col_ref, wgt_ref, prob_ref, alias_ref, to_ref, paths_in,
+        rp_ref, col_ref, wgt_ref, prob_ref, alias_ref, to_ref,
+        chot_ref, cdeg_ref, coff_ref, ccol_ref, cwgt_ref, cprob_ref,
+        cali_ref, ctoff_ref, paths_in,
         # ---- outputs ----
         vcur, vprev, qid_o, hop_o, act, ep_o,
         qctr, hist, stats, done, len_o, paths,
@@ -531,12 +825,25 @@ def fused_superstep_kernel(
         rpbuf, rpsem, colbuf, colsem, probbuf, probsem, aliasbuf, aliassem,
         wbuf, wsem, wmeta, wcnt, pairbuf, pairsem,
         plo_scr, phi_scr, blo_scr, bhi_scr, kq0_scr, kq1_scr, cand_scr,
-        got_scr, bkey_scr, ures_scr, fnd_scr, ckcol, ckwgt, cksem):
+        got_scr, bkey_scr, ures_scr, fnd_scr, ckcol, ckwgt, cksem,
+        cslot_scr, lead_scr, tagv_scr, tagl_scr):
     del paths_in  # aliased with `paths` (input_output_aliases)
     alias = kind == "alias"
     k0 = key_ref[0]
     k1 = key_ref[1]
     wcnt[0] = 0
+    # The gather-hierarchy context: None when cache_budget == 0, so the
+    # cache-off kernel traces exactly the pre-cache pipeline.
+    cache = None
+    if use_cache:
+        cache = _CacheCtx(
+            num_hot, cache_probe_trips, cache_len,
+            chot_ref, cdeg_ref, coff_ref, ccol_ref,
+            cwgt_ref if has_weights else None,
+            cprob_ref if alias else None,
+            cali_ref if alias else None,
+            ctoff_ref if kind == "metapath" else None,
+            cslot_scr)
 
     def path_write(q, h, v):
         """Async double-buffered single-record path write-back: start the
@@ -633,14 +940,22 @@ def fused_superstep_kernel(
 
             jax.lax.fori_loop(0, W, lane_rng, 0)
 
-            # -- Row Access: packed (addr, deg) DMA per lane -------------
-            def on_row(i, addr, deg):
-                v = vcur[i]
-                addr_scr[i] = addr
-                deg_scr[i] = jnp.where((v >= 0) & (v < num_vertices), deg, 0)
+            # -- Row Access: packed (addr, deg) DMA per lane, or the
+            # gather hierarchy (coalesce -> VMEM probe -> miss DMA) -----
+            if use_cache:
+                _cached_row_access(W, num_vertices, cache, rp_ref,
+                                   rpbuf, rpsem, vcur, act,
+                                   addr_scr, deg_scr, lead_scr,
+                                   tagv_scr, tagl_scr, stats)
+            else:
+                def on_row(i, addr, deg):
+                    v = vcur[i]
+                    addr_scr[i] = addr
+                    deg_scr[i] = jnp.where((v >= 0) & (v < num_vertices),
+                                           deg, 0)
 
-            row_access_loop(W, lambda i: vcur[i], rp_ref, rpbuf, rpsem,
-                            num_vertices, on_row)
+                row_access_loop(W, lambda i: vcur[i], rp_ref, rpbuf, rpsem,
+                                num_vertices, on_row)
 
             # -- Sampling + Column Access (per phase program) ------------
             if kind == "rejection_n2v":
@@ -651,7 +966,7 @@ def fused_superstep_kernel(
                     vcur, vprev, qid_o, hop_o, ep_o,
                     addr_scr, deg_scr, idx_scr, vnext_scr, u1_scr,
                     plo_scr, phi_scr, blo_scr, bhi_scr,
-                    kq0_scr, kq1_scr, cand_scr, got_scr)
+                    kq0_scr, kq1_scr, cand_scr, got_scr, cache=cache)
             elif kind == "reservoir_n2v":
                 _reservoir_sample(
                     W, num_vertices, num_edges, res_chunk, res_len,
@@ -662,13 +977,13 @@ def fused_superstep_kernel(
                     act, stop_scr, vcur, vprev, qid_o, hop_o, ep_o,
                     addr_scr, deg_scr, idx_scr, vnext_scr,
                     plo_scr, phi_scr, blo_scr, bhi_scr,
-                    cand_scr, bkey_scr, ures_scr, fnd_scr)
+                    cand_scr, bkey_scr, ures_scr, fnd_scr, cache=cache)
             elif kind == "metapath":
                 _metapath_sample(
                     W, num_vertices, num_edges, mp_sched, to_ref, col_ref,
                     colbuf, colsem, pairbuf, pairsem,
                     vcur, hop_o, u0_scr, addr_scr, deg_scr, idx_scr,
-                    vnext_scr)
+                    vnext_scr, cache=cache)
             else:
                 def pick(i):
                     return jnp.clip(
@@ -680,8 +995,9 @@ def fused_superstep_kernel(
                         # accept -> keep draw; reject -> alias probe below
                         idx_scr[i] = jnp.where(u1_scr[i] < p, 0, -1)
 
-                    gather1_loop(W, pick, prob_ref, probbuf, probsem,
-                                 num_edges, on_prob)
+                    _g1(W, pick, prob_ref, probbuf, probsem,
+                        num_edges, on_prob, cache,
+                        cache.prob if cache is not None else None)
 
                     def on_alias(i, a):
                         deg = deg_scr[i]
@@ -691,8 +1007,9 @@ def fused_superstep_kernel(
                         idx_scr[i] = jnp.clip(addr_scr[i] + j, 0,
                                               num_edges - 1)
 
-                    gather1_loop(W, pick, alias_ref, aliasbuf, aliassem,
-                                 num_edges, on_alias)
+                    _g1(W, pick, alias_ref, aliasbuf, aliassem,
+                        num_edges, on_alias, cache,
+                        cache.alias if cache is not None else None)
                 else:
                     def set_idx(i, _):
                         idx_scr[i] = pick(i)
@@ -703,8 +1020,9 @@ def fused_superstep_kernel(
                 def on_col(i, v):
                     vnext_scr[i] = v
 
-                gather1_loop(W, lambda i: idx_scr[i], col_ref, colbuf,
-                             colsem, num_edges, on_col)
+                _g1(W, lambda i: idx_scr[i], col_ref, colbuf,
+                    colsem, num_edges, on_col, cache,
+                    cache.col if cache is not None else None)
 
             # -- terminate + advance + async path/done write-back --------
             def lane_update(i, acc):

@@ -33,8 +33,17 @@ from repro.kernels.fused_superstep import fused_superstep as _k
 FUSED_KINDS = fused_kinds()
 
 
-def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
-    """Build the jitted single-launch runner for ``spec`` × ``cfg``."""
+def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None,
+                       cache=None):
+    """Build the jitted single-launch runner for ``spec`` × ``cfg``.
+
+    ``cache`` is the graph-specific
+    :class:`~repro.graph.HotVertexCache` from
+    `core.walk_engine.maybe_build_cache` (or ``None``): its packed
+    payload block rides into the kernel as launch-resident operands and
+    v_curr-keyed gathers on cached vertices skip their HBM DMAs —
+    bit-identically, since the block packs verbatim CSR slices.
+    """
     from repro.kernels.common import default_interpret
     assert lower(spec).fused, spec.kind
     kind = spec.kind
@@ -55,6 +64,17 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
     CH = int(spec.reservoir_chunk) if reservoir else 1
     inv_p = 1.0 / float(spec.p)
     inv_q = 1.0 / float(spec.q)
+    if cache is not None:
+        # A kind-required payload the graph could not provide (e.g. no
+        # alias tables) disables the cache rather than half-serving it.
+        needed = {"alias": ("alias_prob", "alias_idx"),
+                  "metapath": ("type_offsets",)}.get(kind, ())
+        if any(getattr(cache, p) is None for p in needed):
+            cache = None
+    use_cache = cache is not None
+    num_hot = cache.num_hot if use_cache else 1
+    cache_trips = cache.probe_trips if use_cache else 1
+    cache_len = cache.num_entries if use_cache else 1
 
     @jax.jit
     def launch(graph, state, base_key, k):
@@ -71,7 +91,7 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
             _k.fused_superstep_kernel, nv, ne, W, Q, H, depth, C,
             stop_prob, kind, mp_sched, rej_rounds, inv_p, inv_q,
             int(graph.max_degree), CH, Lc, has_weights, static_mode,
-            record_paths)
+            record_paths, use_cache, num_hot, cache_trips, cache_len)
         smem = pl.BlockSpec(memory_space=pltpu.SMEM)
         hbm = pl.BlockSpec(memory_space=pl.ANY)
         s = state.slots
@@ -90,6 +110,35 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
         # Typed sub-segment bounds (metapath's gather phase); inert
         # placeholder otherwise.
         to = graph.type_offsets if metapath else jnp.zeros((1, 2), jnp.int32)
+        if use_cache:
+            # The packed hot-vertex block: launch-resident operands (the
+            # VMEM tier of the gather hierarchy).  jit folds the host
+            # numpy arrays into on-device constants once per engine.
+            chot = jnp.asarray(cache.hot_ids, jnp.int32)
+            cdeg = jnp.asarray(cache.hot_deg, jnp.int32)
+            coff = jnp.asarray(cache.hot_off, jnp.int32)
+            ccol = jnp.asarray(cache.col, jnp.int32)
+            cwgt = (jnp.asarray(cache.weights, jnp.float32)
+                    if cache.weights is not None
+                    else jnp.zeros((1,), jnp.float32))
+            cprob = (jnp.asarray(cache.alias_prob, jnp.float32)
+                     if cache.alias_prob is not None
+                     else jnp.zeros((1,), jnp.float32))
+            cali = (jnp.asarray(cache.alias_idx, jnp.int32)
+                    if cache.alias_idx is not None
+                    else jnp.zeros((1,), jnp.int32))
+            ctoff = (jnp.asarray(cache.type_offsets, jnp.int32)
+                     if cache.type_offsets is not None
+                     else jnp.zeros((1, 2), jnp.int32))
+        else:  # inert placeholders — the kernel never touches them
+            chot = jnp.full((1,), -1, jnp.int32)
+            cdeg = jnp.zeros((1,), jnp.int32)
+            coff = jnp.zeros((2,), jnp.int32)
+            ccol = jnp.zeros((1,), jnp.int32)
+            cwgt = jnp.zeros((1,), jnp.float32)
+            cprob = jnp.zeros((1,), jnp.float32)
+            cali = jnp.zeros((1,), jnp.int32)
+            ctoff = jnp.zeros((1, 2), jnp.int32)
         inputs = [
             jnp.asarray(base_key, jnp.uint32),
             jnp.asarray(k, jnp.int32).reshape(1),
@@ -98,7 +147,9 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
             qctr, state.head_hist.astype(jnp.int32), stats_vec,
             state.done.astype(jnp.int32), state.lengths,
             q.start_vertex, q.order, q.epoch,
-            graph.row_ptr, graph.col, wgt, prob, ali, to, state.paths,
+            graph.row_ptr, graph.col, wgt, prob, ali, to,
+            chot, cdeg, coff, ccol, cwgt, cprob, cali, ctoff,
+            state.paths,
         ]
         # Second-order samplers (rejection / reservoir) bisect N(v_prev)
         # breadth-wise: rejection over the W lanes, the reservoir over
@@ -106,7 +157,7 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
         BW = W if rejection else (CH if reservoir else 1)
         outs = pl.pallas_call(
             kernel,
-            in_specs=[smem] * 16 + [hbm] * 7,
+            in_specs=[smem] * 16 + [hbm] * 6 + [smem] * 8 + [hbm],
             out_specs=[smem] * 11 + [hbm],
             out_shape=[jax.ShapeDtypeStruct((W,), jnp.int32)] * 6 + [
                 jax.ShapeDtypeStruct((3,), jnp.int32),
@@ -160,6 +211,13 @@ def build_fused_launch(spec, cfg, depth: int, interpret: bool | None = None):
                 pltpu.SMEM((2, Lc), jnp.int32),    # chunk column DMA buf
                 pltpu.SMEM((2, Lc), jnp.float32),  # chunk weight DMA buf
                 pltpu.SemaphoreType.DMA((2, 2)),
+                # Gather-hierarchy scratch (inert (1,) when cache off):
+                # per-lane probe result (cache slot or -1), coalescing
+                # leader, and the direct-mapped tag table (vertex, lane).
+                pltpu.SMEM((W if use_cache else 1,), jnp.int32),  # cslot
+                pltpu.SMEM((W if use_cache else 1,), jnp.int32),  # leader
+                pltpu.SMEM((W if use_cache else 1,), jnp.int32),  # tag v
+                pltpu.SMEM((W if use_cache else 1,), jnp.int32),  # tag lane
             ],
             input_output_aliases={len(inputs) - 1: 11},
             interpret=interpret,

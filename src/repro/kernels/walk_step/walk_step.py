@@ -129,6 +129,96 @@ def gather1_loop(n, e_fn, src_ref, buf, sem, num_entries, on_result):
     jax.lax.fori_loop(0, n, body, 0, unroll=False)
 
 
+def cached_gather1_loop(n, e_fn, src_ref, buf, sem, num_entries, on_result,
+                        *, cache_ref=None, cache_len=1, cache_e_fn=None,
+                        hit_fn=None):
+    """Skew-aware variant of :func:`gather1_loop`: items whose lane holds
+    a hot vertex (``hit_fn(i)``) are served straight from the VMEM cache
+    block ``cache_ref`` (no copy, no wait — the same bytes at
+    ``cache_e_fn(i)``), while misses run the standard double-buffered HBM
+    loop.  Both the prefetch for item i+1 and the wait for item i are
+    predicated on that item actually missing, so a fully-hit pass issues
+    zero DMAs; results are bit-identical either way because the cache
+    packs verbatim CSR slices.  With ``hit_fn=None`` (cache off) this IS
+    `gather1_loop` — the uncached kernel trace is unchanged."""
+    if hit_fn is None or cache_ref is None:
+        return gather1_loop(n, e_fn, src_ref, buf, sem, num_entries,
+                            on_result)
+    cache_e_fn = cache_e_fn or e_fn
+
+    def hit(i):
+        # Lookahead may probe index n; clamp — the predicate it feeds is
+        # already false there.
+        return hit_fn(jnp.minimum(i, n - 1))
+
+    def copy(i, slot):
+        e = jnp.clip(e_fn(i), 0, num_entries - 1)
+        return pltpu.make_async_copy(src_ref.at[pl.ds(e, 1)],
+                                     buf.at[slot], sem.at[slot])
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+        h = hit_fn(i)
+
+        @pl.when((i + 1 < n) & jnp.logical_not(hit(i + 1)))
+        def _():
+            copy(i + 1, jax.lax.rem(i + 1, 2)).start()
+
+        @pl.when(jnp.logical_not(h))
+        def _():
+            copy(i, slot).wait()
+
+        ce = jnp.clip(cache_e_fn(i), 0, cache_len - 1)
+        # Hit lanes never started a copy: buf holds a stale value the
+        # where() discards.
+        on_result(i, jnp.where(h, cache_ref[ce], buf[slot, 0]))
+        return 0
+
+    @pl.when(jnp.logical_not(hit_fn(0)))
+    def _():
+        copy(0, 0).start()
+
+    jax.lax.fori_loop(0, n, body, 0, unroll=False)
+
+
+def cached_gather2_loop(n, src_fn, buf, sem, on_result, *, hit_fn=None,
+                        hit_pair_fn=None):
+    """Skew-aware variant of :func:`gather2_loop`: hit items take their
+    word pair from ``hit_pair_fn(i)`` (a VMEM cache read) instead of the
+    DMA staging buffer, with the same miss-predicated prefetch/wait
+    structure as :func:`cached_gather1_loop`.  ``hit_fn=None`` falls back
+    to the plain loop."""
+    if hit_fn is None or hit_pair_fn is None:
+        return gather2_loop(n, src_fn, buf, sem, on_result)
+
+    def copy(i, slot):
+        return pltpu.make_async_copy(src_fn(i), buf.at[slot], sem.at[slot])
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+        h = hit_fn(i)
+
+        @pl.when((i + 1 < n) & jnp.logical_not(
+            hit_fn(jnp.minimum(i + 1, n - 1))))
+        def _():
+            copy(i + 1, jax.lax.rem(i + 1, 2)).start()
+
+        @pl.when(jnp.logical_not(h))
+        def _():
+            copy(i, slot).wait()
+
+        ca, cb = hit_pair_fn(i)
+        on_result(i, jnp.where(h, ca, buf[slot, 0]),
+                  jnp.where(h, cb, buf[slot, 1]))
+        return 0
+
+    @pl.when(jnp.logical_not(hit_fn(0)))
+    def _():
+        copy(0, 0).start()
+
+    jax.lax.fori_loop(0, n, body, 0, unroll=False)
+
+
 def _uniform_index(deg, u):
     idx = jnp.floor(u * deg.astype(jnp.float32)).astype(jnp.int32)
     return jnp.clip(idx, 0, jnp.maximum(deg - 1, 0))

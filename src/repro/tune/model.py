@@ -39,7 +39,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.samplers import es_num_chunks
-from repro.tune.cache import WEIGHTED_QS, GraphSignature
+from repro.tune.cache import PLAIN_QS, WEIGHTED_QS, GraphSignature
 from repro.tune.space import Candidate
 
 # Bytes moved per `start` op of the declarative DMA schedule, by buffer.
@@ -85,12 +85,19 @@ def expected_walk_len(program) -> float:
 
 @functools.lru_cache(maxsize=256)
 def _schedule_bytes(kind: str, rounds: int, bisect_iters: int, chunks: int,
-                    reservoir_chunk: int, record_paths: bool) -> float:
-    """Per-lane bytes of one hop, summed over the kind's DMA schedule."""
+                    reservoir_chunk: int, record_paths: bool,
+                    cached: bool = False) -> float:
+    """Per-lane bytes of one hop, summed over the kind's DMA schedule.
+
+    ``cached=True`` prices the fully-hit representative superstep of the
+    gather hierarchy: only the HBM copies the cache cannot absorb remain
+    (v_prev-keyed probes, path write-back) — VMEM-tier reads move no HBM
+    bytes and are skipped with the rest of the non-``start`` ops.
+    """
     from repro.kernels.fused_superstep.fused_superstep import dma_schedule
     ops = dma_schedule(kind, lanes=1, rounds=rounds,
                        bisect_iters=bisect_iters, chunks=chunks,
-                       records=1, record_paths=record_paths)
+                       records=1, record_paths=record_paths, cached=cached)
     total = 0.0
     for op in ops:
         if op.kind != "start":
@@ -104,12 +111,15 @@ def _schedule_bytes(kind: str, rounds: int, bisect_iters: int, chunks: int,
 
 def bytes_per_hop(spec, sig: GraphSignature,
                   chunk_trips: Optional[int] = None,
-                  record_paths: bool = False) -> float:
+                  record_paths: bool = False,
+                  cached: bool = False) -> float:
     """Per-lane bytes gathered per hop for ``spec`` on a ``sig`` graph.
 
     ``chunk_trips`` overrides the reservoir chunk-loop trip count (the
     adaptive scan runs fewer trips than the static
-    ``es_num_chunks(max_degree, CH)`` bound).
+    ``es_num_chunks(max_degree, CH)`` bound).  ``cached=True`` prices a
+    cache-hit hop (residual HBM traffic only); blend the two with
+    :func:`predicted_hit_rate` for the effective per-hop bytes.
     """
     bisect = max(1, int(math.ceil(
         math.log2(max(int(sig.max_degree), 2) + 1))))
@@ -119,7 +129,55 @@ def bytes_per_hop(spec, sig: GraphSignature,
                  else es_num_chunks(sig.max_degree, spec.reservoir_chunk))
     return _schedule_bytes(spec.kind, int(spec.rejection_rounds), bisect,
                            max(1, trips), int(spec.reservoir_chunk),
-                           bool(record_paths))
+                           bool(record_paths), bool(cached))
+
+
+@functools.lru_cache(maxsize=64)
+def _spec_payloads(spec) -> Tuple[str, ...]:
+    from repro.core.phase_program import lower
+    return lower(spec).cache_payloads
+
+
+def predicted_hit_rate(sig: GraphSignature, budget_bytes: int,
+                       payloads: Sequence[str]) -> float:
+    """Modeled hit rate of a hot-vertex cache sized to ``budget_bytes``.
+
+    The builder admits vertices in descending-degree order, and a
+    walking lane occupies a vertex with probability proportional to its
+    degree (stationary distribution), so the hit rate of a cache that
+    covers every vertex of degree > d is the *edge-mass* fraction above
+    d — read off the signature's degree-weighted quantile ladder, while
+    the plain ladder prices the directory overhead (vertex count above
+    d).  We scan the candidate thresholds both ladders store and keep
+    the largest mass fraction whose modeled footprint fits the budget.
+    Arithmetic over the signature only — no adjacency access, no clock.
+    """
+    budget = int(budget_bytes)
+    if budget <= 0:
+        return 0.0
+    from repro.graph.hot_cache import (edge_payload_bytes,
+                                       vertex_overhead_bytes)
+    payloads = tuple(payloads)
+    per_edge = max(edge_payload_bytes(payloads), 4)
+    # The signature does not store the edge-type count; 2 is the floor
+    # for a typed graph and only perturbs the per-vertex directory term.
+    per_vert = vertex_overhead_bytes(
+        payloads, 2 if "type_offsets" in payloads else 0)
+    # Anchor both ladders at degree 0 (zero mass / zero vertices below).
+    dq = np.concatenate(([0.0], np.asarray(sig.deg_q, np.float64)))
+    pq = np.concatenate(([0.0], np.asarray(PLAIN_QS, np.float64)))
+    dwq = np.concatenate(([0.0], np.asarray(sig.deg_wq, np.float64)))
+    wq = np.concatenate(([0.0], np.asarray(WEIGHTED_QS, np.float64)))
+    thresholds = np.unique(np.concatenate((dq, dwq)))
+    best = 0.0
+    for d in thresholds:
+        vert_frac = 1.0 - float(np.interp(d, dq, pq))
+        mass_frac = 1.0 - float(np.interp(d, dwq, wq))
+        need = (vert_frac * sig.num_vertices * per_vert
+                + mass_frac * sig.num_edges * per_edge)
+        if need <= budget:
+            best = max(best, mass_frac)
+    return float(min(max(best, 0.0), 1.0))
 
 
 # ------------------------------------------------------------------ gate
@@ -186,6 +244,15 @@ def features(program, execution, sig: GraphSignature,
     trips = _reservoir_trips(spec, sig, w, adaptive)
     b = bytes_per_hop(spec, sig, chunk_trips=trips,
                       record_paths=ex.record_paths)
+    cb = getattr(ex, "cache_budget", 0)
+    if ex.step_impl == "fused" and isinstance(cb, int) and cb > 0:
+        # Gather hierarchy: a hit hop moves only the residual HBM bytes
+        # the cache cannot absorb, so the effective per-hop traffic is
+        # the hit-rate blend of the two schedules.
+        h = predicted_hit_rate(sig, cb, _spec_payloads(spec))
+        b_hit = bytes_per_hop(spec, sig, chunk_trips=trips,
+                              record_paths=ex.record_paths, cached=True)
+        b = (1.0 - h) * b + h * b_hit
     if ex.step_impl == "fused":
         launches = math.ceil(supersteps / max(int(ex.hops_per_launch), 1))
     else:

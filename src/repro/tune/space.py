@@ -27,7 +27,8 @@ import itertools
 from typing import Dict, Optional, Sequence, Tuple
 
 # Execution-level knobs that accept the "auto" sentinel.
-EXEC_KNOBS = ("num_slots", "hops_per_launch", "queue_depth_factor")
+EXEC_KNOBS = ("num_slots", "hops_per_launch", "queue_depth_factor",
+              "cache_budget")
 # Sampler-spec-level knobs.
 SPEC_KNOBS = ("reservoir_chunk", "adaptive_chunks")
 
@@ -56,6 +57,11 @@ def knobs_for(program, execution, backend: str = "single") -> Tuple[Knob, ...]:
     if step_impl == "fused":
         # Only the fused superstep kernel consumes hops_per_launch.
         knobs.append(Knob("hops_per_launch", (2, 4, 8, 16, 32, 64),
+                          "execution"))
+        # Hot-vertex cache byte budget (0 = off).  Path-preserving by
+        # construction: hits read the same bytes from VMEM instead of
+        # HBM, so the sampled walks cannot change.
+        knobs.append(Knob("cache_budget", (0, 1 << 14, 1 << 16, 1 << 18),
                           "execution"))
     if program.spec.kind == "reservoir_n2v":
         knobs.append(Knob("adaptive_chunks", (True, False), "spec"))

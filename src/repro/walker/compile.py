@@ -41,7 +41,7 @@ from repro.core.distributed import (DistLogs, assemble_paths,
 from repro.core.tasks import WalkResult, WalkStats
 from repro.core.walk_engine import (StreamState, build_engine,
                                     init_stream_state, inject_queries,
-                                    make_superstep_runner)
+                                    make_superstep_runner, maybe_build_cache)
 from repro.graph.partition import PartitionedGraph, partition_graph
 from repro.walker.execution import ExecutionConfig
 from repro.walker.program import WalkProgram
@@ -120,14 +120,23 @@ class Walker:
     def _engine_cfg(self):
         return self.execution.engine_config(self.program)
 
-    def _single_engine(self, program=None, execution=None):
+    def _single_engine(self, program=None, execution=None, graph=None):
         program = program or self.program
         execution = execution or self.execution
         cfg = execution.engine_config(program)
-        key = (program.spec, cfg)
+        # The hot-vertex cache is a function of the graph, so graph
+        # identity must key the memo whenever a cache would be built; the
+        # memo pins the graph object, keeping its id() stable for the
+        # cache entry's lifetime.
+        wants_cache = (graph is not None and cfg.step_impl == "fused"
+                       and cfg.cache_budget > 0)
+        key = (program.spec, cfg, id(graph) if wants_cache else None)
         if key not in self._engines:
-            self._engines[key] = build_engine(program.spec, cfg)
-        return self._engines[key]
+            cache = (maybe_build_cache(program.spec, cfg, graph)
+                     if wants_cache else None)
+            self._engines[key] = (build_engine(program.spec, cfg,
+                                               cache=cache), graph)
+        return self._engines[key][0]
 
     def _partition(self, graph) -> PartitionedGraph:
         if isinstance(graph, PartitionedGraph):
@@ -173,7 +182,7 @@ class Walker:
             self.program.requires(graph)
             sv = jnp.asarray(starts, jnp.int32)
             program, execution = self._bind(graph, int(sv.shape[0]))
-            return self._single_engine(program, execution)(
+            return self._single_engine(program, execution, graph)(
                 graph, sv, seed, num_queries=int(sv.shape[0]))
 
         if not isinstance(graph, PartitionedGraph):
@@ -319,7 +328,9 @@ class Walker:
                 program, execution = self._bind(graph, walks_per_round)
                 cfg = dataclasses.replace(
                     execution.engine_config(program), record_paths=True)
-                self._emb_cache["engine"] = build_engine(program.spec, cfg)
+                self._emb_cache["engine"] = build_engine(
+                    program.spec, cfg,
+                    cache=maybe_build_cache(program.spec, cfg, graph))
             engine = self._emb_cache["engine"]
             stream = None
 
@@ -620,7 +631,9 @@ class WalkStream(_StreamBase):
         # (same guard as WalkService).
         self._cfg = dataclasses.replace(
             execution.engine_config(program), record_paths=True)
-        self._runner = make_superstep_runner(program.spec, self._cfg)
+        self._runner = make_superstep_runner(
+            program.spec, self._cfg,
+            cache=maybe_build_cache(program.spec, self._cfg, graph))
         self.state: StreamState = init_stream_state(self._cfg, self.capacity)
         self._init_ring()
 

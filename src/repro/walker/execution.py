@@ -22,7 +22,8 @@ AUTO = "auto"
 
 #: Knobs that accept the AUTO sentinel.  All are *path-preserving*
 #: machine knobs — resolution never changes which walks are sampled.
-TUNABLE_KNOBS = ("num_slots", "hops_per_launch", "queue_depth_factor")
+TUNABLE_KNOBS = ("num_slots", "hops_per_launch", "queue_depth_factor",
+                 "cache_budget")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +60,13 @@ class ExecutionConfig:
                         launch (the k of the O(k·state) → O(state) host-
                         traffic reduction; ``stats.launches`` exposes the
                         realized fusion factor).
+      cache_budget:     ``fused`` only — byte budget of the VMEM
+                        hot-vertex adjacency cache (0 disables it).  The
+                        top-H highest-degree vertices' payloads are
+                        packed on-chip and gathers on them skip the HBM
+                        DMA loops; paths are bit-identical either way
+                        (same bytes, different tier), so this is a
+                        tunable machine knob like the others.
       num_devices:      sharded backend only — mesh size (default: all
                         visible devices).
       slots_per_device: sharded backend only — W_loc override (default
@@ -83,6 +91,7 @@ class ExecutionConfig:
     max_supersteps: int = 1 << 20
     step_impl: str = "jnp"
     hops_per_launch: "int | str" = 16
+    cache_budget: "int | str" = 0
     # ---- sharded backend ----
     num_devices: Optional[int] = None
     slots_per_device: Optional[int] = None
@@ -123,6 +132,10 @@ class ExecutionConfig:
         if self.hops_per_launch != AUTO and self.hops_per_launch <= 0:
             raise ValueError(f"hops_per_launch must be positive, got "
                              f"{self.hops_per_launch}")
+        if self.cache_budget != AUTO and self.cache_budget < 0:
+            raise ValueError(
+                f"cache_budget is a byte budget (0 disables the hot-vertex "
+                f"cache) and cannot be negative, got {self.cache_budget}")
         if self.num_devices is not None and self.num_devices <= 0:
             raise ValueError(f"num_devices must be positive, got "
                              f"{self.num_devices}")
@@ -191,6 +204,7 @@ class ExecutionConfig:
             max_supersteps=self.max_supersteps,
             step_impl=self.step_impl,
             hops_per_launch=self.hops_per_launch,
+            cache_budget=self.cache_budget,
         )
 
     def dist_config(self, program, num_devices: int) -> DistConfig:
@@ -227,5 +241,6 @@ class ExecutionConfig:
             max_supersteps=cfg.max_supersteps,
             step_impl=cfg.step_impl,
             hops_per_launch=cfg.hops_per_launch,
+            cache_budget=cfg.cache_budget,
             **kw,
         )

@@ -340,3 +340,126 @@ def test_fused_ring_reclamation_stream(small_graph, rng):
     for k in a:
         assert np.array_equal(a[k][0], b[k][0]), k
         assert a[k][1] == b[k][1], k
+
+
+# ------------------------------------------- gather hierarchy (hot cache)
+
+# Stats that legitimately differ cache-on vs cache-off: the launch
+# cadence (as everywhere) and the cache's own counters.  Everything the
+# engine counted before the hierarchy existed must stay bit-identical.
+_CACHE_ONLY = ("launches", "cache_hits", "cache_misses", "cache_coalesced")
+_CACHE_BUDGET = 1 << 13
+
+
+def _assert_same_walks_mod_cache(r_off, r_on):
+    p1, l1 = r_off.as_numpy()
+    p2, l2 = r_on.as_numpy()
+    assert np.array_equal(p1, p2)
+    assert np.array_equal(l1, l2)
+    for f in r_off.stats._fields:
+        if f in _CACHE_ONLY:
+            continue
+        assert int(getattr(r_off.stats, f)) == int(getattr(r_on.stats, f)), f
+
+
+@pytest.mark.parametrize("algo", sorted(SPECS))
+@pytest.mark.parametrize("mode", ["zero_bubble", "static"])
+def test_cached_fused_closed_bit_identical(algo, mode, fused_graph, rng):
+    """Closed batch: the VMEM hot-vertex cache is invisible in every
+    sampled walk and every pre-existing stat — hits read the same bytes
+    from a different tier — while the new counters show it actually
+    served traffic (nonzero hits on the skewed fixture, all-zero when
+    the cache is off)."""
+    spec = SPECS[algo]
+    cfg = dataclasses.replace(CFG, mode=mode)
+    starts = rng.integers(0, fused_graph.num_vertices, 80).astype(np.int32)
+    r_off = _run_walks(fused_graph, starts, spec, _fused(cfg), seed=9)
+    r_on = _run_walks(fused_graph, starts, spec,
+                      _fused(cfg, cache_budget=_CACHE_BUDGET), seed=9)
+    _assert_same_walks_mod_cache(r_off, r_on)
+    assert int(r_on.stats.cache_hits) > 0
+    assert 0.0 < float(r_on.stats.cache_hit_rate()) <= 1.0
+    for f in ("cache_hits", "cache_misses", "cache_coalesced"):
+        assert int(getattr(r_off.stats, f)) == 0, f
+
+
+@pytest.mark.parametrize("algo", sorted(SPECS))
+def test_cached_fused_stream_bit_identical(algo, fused_graph, rng):
+    """Open system: mid-stream injection over the cached runner drains to
+    the same paths/lengths/done as the uncached one."""
+    from repro.core.walk_engine import maybe_build_cache
+
+    spec = SPECS[algo]
+    starts = rng.integers(0, fused_graph.num_vertices, 90).astype(np.int32)
+    cfg = _fused(dataclasses.replace(CFG, num_slots=16), hops_per_launch=3)
+
+    def run(budget):
+        c = dataclasses.replace(cfg, cache_budget=budget)
+        runner = make_superstep_runner(
+            spec, c, cache=maybe_build_cache(spec, c, fused_graph))
+        st = init_stream_state(c, capacity=90)
+        st = inject_queries(st, jnp.arange(50, dtype=jnp.int32),
+                            jnp.asarray(starts[:50]),
+                            jnp.zeros((50,), jnp.int32), 50)
+        st = runner(fused_graph, st, 8, 5)   # mid-flight...
+        st = inject_queries(st, jnp.arange(50, 90, dtype=jnp.int32),
+                            jnp.asarray(starts[50:]),
+                            jnp.zeros((40,), jnp.int32), 40)
+        return _stream_drain(runner, fused_graph, st, 8, 7)
+
+    s_off = run(0)
+    s_on = run(_CACHE_BUDGET)
+    assert np.array_equal(np.asarray(s_off.paths), np.asarray(s_on.paths))
+    assert np.array_equal(np.asarray(s_off.lengths),
+                          np.asarray(s_on.lengths))
+    assert np.array_equal(np.asarray(s_off.done), np.asarray(s_on.done))
+    for f in s_off.stats._fields:
+        if f not in _CACHE_ONLY:
+            assert int(getattr(s_off.stats, f)) == int(
+                getattr(s_on.stats, f)), f
+    assert int(s_on.stats.cache_hits) > 0
+
+
+def test_cached_fused_static_stream_spot_check(fused_graph, rng):
+    """The stream × static-mode corner of the matrix (one kind)."""
+    spec = SPECS["uniform"]
+    from repro.core.walk_engine import maybe_build_cache
+
+    cfg = _fused(dataclasses.replace(CFG, num_slots=16, mode="static"))
+    starts = rng.integers(0, fused_graph.num_vertices, 48).astype(np.int32)
+
+    def run(budget):
+        c = dataclasses.replace(cfg, cache_budget=budget)
+        runner = make_superstep_runner(
+            spec, c, cache=maybe_build_cache(spec, c, fused_graph))
+        st = init_stream_state(c, capacity=48)
+        st = inject_queries(st, jnp.arange(48, dtype=jnp.int32),
+                            jnp.asarray(starts), jnp.zeros((48,), jnp.int32),
+                            48)
+        return _stream_drain(runner, fused_graph, st, 8, 5)
+
+    s_off, s_on = run(0), run(_CACHE_BUDGET)
+    assert np.array_equal(np.asarray(s_off.paths), np.asarray(s_on.paths))
+    assert int(s_on.stats.cache_hits) > 0
+
+
+def test_cache_budget_knob_threads_through_walker(fused_graph, rng):
+    """The public Walker path builds and memoizes the cache: same walks
+    as cache-off, nonzero hit rate in the returned stats."""
+    from repro import walker
+
+    program = walker.WalkProgram(spec=SPECS["uniform"], max_hops=10)
+    starts = rng.integers(0, fused_graph.num_vertices, 64).astype(np.int32)
+    ref = walker.compile(program, execution=walker.ExecutionConfig(
+        num_slots=32, step_impl="fused", hops_per_launch=4)).run(
+            fused_graph, starts, seed=5)
+    w = walker.compile(program, execution=walker.ExecutionConfig(
+        num_slots=32, step_impl="fused", hops_per_launch=4,
+        cache_budget=_CACHE_BUDGET))
+    got = w.run(fused_graph, starts, seed=5)
+    _assert_same_walks_mod_cache(ref, got)
+    assert float(got.stats.cache_hit_rate()) > 0.0
+    # Same graph object: the engine (and its cache) is memoized.
+    assert len(w._engines) == 1
+    w.run(fused_graph, starts, seed=5)
+    assert len(w._engines) == 1

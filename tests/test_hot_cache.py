@@ -1,0 +1,114 @@
+"""Hot-vertex cache builder: coverage, determinism, and the verbatim-
+payload contract the cached fused superstep's bit-identity rests on."""
+import numpy as np
+import pytest
+
+from conftest import hypothesis_or_stubs
+
+from repro.graph import build_alias_tables, build_csr
+from repro.graph.generators import GRAPH500, rmat_edges
+from repro.graph.hot_cache import (build_hot_cache, edge_payload_bytes,
+                                   vertex_overhead_bytes)
+
+given, settings, st = hypothesis_or_stubs()
+
+
+def _graph(seed, scale=7, ef=4, weighted=False):
+    edges, n = rmat_edges(scale, ef, GRAPH500, seed=seed)
+    r = np.random.default_rng(seed)
+    w = (r.random(edges.shape[0]).astype(np.float32) + 1e-3
+         if weighted else None)
+    g = build_csr(edges, n, weights=w)
+    return build_alias_tables(g) if weighted else g
+
+
+def _expected_top(graph, payloads, budget):
+    """Reference admission: descending degree, smaller id wins ties,
+    greedy prefix under the byte budget."""
+    deg = np.diff(np.asarray(graph.row_ptr)).astype(np.int64)
+    order = sorted(range(deg.size), key=lambda v: (-deg[v], v))
+    per_edge = edge_payload_bytes(payloads)
+    per_vert = vertex_overhead_bytes(payloads, graph.num_edge_types or 0)
+    chosen, spent = [], 0
+    for v in order:
+        c = per_vert + per_edge * int(deg[v])
+        if spent + c > budget:
+            break
+        chosen.append(v)
+        spent += c
+    return sorted(chosen)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), budget=st.integers(64, 1 << 14))
+def test_cache_covers_top_h_by_degree(seed, budget):
+    """∀ graph, budget: the cache holds exactly the greedy degree-
+    descending prefix (deterministic smaller-id tie-break) that fits."""
+    g = _graph(seed)
+    cache = build_hot_cache(g, ("col",), budget)
+    expect = _expected_top(g, ("col",), budget)
+    if cache is None:
+        assert expect == []
+        return
+    assert cache.hot_ids.tolist() == expect
+    deg = np.diff(np.asarray(g.row_ptr))
+    np.testing.assert_array_equal(cache.hot_deg, deg[cache.hot_ids])
+    # Determinism: same inputs, same block.
+    again = build_hot_cache(g, ("col",), budget)
+    np.testing.assert_array_equal(cache.hot_ids, again.hot_ids)
+    np.testing.assert_array_equal(cache.col, again.col)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), budget=st.integers(256, 1 << 13))
+def test_cache_hits_are_byte_identical(seed, budget):
+    """∀ hot vertex: every packed payload row equals the graph's own CSR
+    slice — the whole bit-identity argument of the cached kernel."""
+    g = _graph(seed, weighted=True)
+    payloads = ("col", "weights", "alias_prob", "alias_idx")
+    cache = build_hot_cache(g, payloads, budget)
+    if cache is None:
+        pytest.skip("budget admits no vertex")
+    rp = np.asarray(g.row_ptr)
+    for s, v in enumerate(cache.hot_ids):
+        lo, hi = int(cache.hot_off[s]), int(cache.hot_off[s + 1])
+        glo, ghi = int(rp[v]), int(rp[v + 1])
+        np.testing.assert_array_equal(cache.col[lo:hi],
+                                      np.asarray(g.col)[glo:ghi])
+        np.testing.assert_array_equal(cache.weights[lo:hi],
+                                      np.asarray(g.weights)[glo:ghi])
+        np.testing.assert_array_equal(cache.alias_prob[lo:hi],
+                                      np.asarray(g.alias_prob)[glo:ghi])
+        np.testing.assert_array_equal(cache.alias_idx[lo:hi],
+                                      np.asarray(g.alias_idx)[glo:ghi])
+        assert cache.slot_of(int(v)) == s
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), budget=st.integers(64, 1 << 12))
+def test_cache_misses_fall_through(seed, budget):
+    """∀ vertex outside the hot set: the lookup misses (slot -1), so the
+    kernel's miss path — the unmodified HBM gather — serves it."""
+    g = _graph(seed)
+    cache = build_hot_cache(g, ("col",), budget)
+    if cache is None:
+        pytest.skip("budget admits no vertex")
+    hot = set(int(v) for v in cache.hot_ids)
+    outside = [v for v in range(int(g.num_vertices)) if v not in hot]
+    for v in outside[:64]:
+        assert cache.slot_of(v) == -1
+    # Probe beyond the id range misses too (clamped binary search).
+    assert cache.slot_of(int(g.num_vertices) + 7) == -1
+
+
+def test_zero_or_negative_budget_disables():
+    g = _graph(3)
+    assert build_hot_cache(g, ("col",), 0) is None
+    assert build_hot_cache(g, ("col",), -100) is None
+
+
+def test_probe_trips_covers_directory():
+    g = _graph(5)
+    cache = build_hot_cache(g, ("col",), 1 << 13)
+    assert cache is not None
+    assert 2 ** cache.probe_trips >= cache.num_hot + 1
